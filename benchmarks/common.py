@@ -1,0 +1,44 @@
+"""Shared benchmark plumbing.
+
+Must be imported FIRST by every benchmark module: sets the 512-device flag
+before jax initializes (benchmarks model the production mesh, like the
+dry-run).
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import time  # noqa: E402
+from typing import Callable, Optional  # noqa: E402
+
+import jax  # noqa: E402
+
+QUICK = bool(int(os.environ.get("BENCH_QUICK", "0")))
+
+_rows = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    _rows.append(row)
+    print(row, flush=True)
+
+
+def timeit(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time per call in µs (CPU micro-benchmarks)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def model_step_roofline(arch: str, shape_name: str, pcfg, *, multi_pod=False):
+    """Lower+compile a step and return its Roofline record (dry-run path)."""
+    from repro.launch.dryrun import run_pair
+    return run_pair(arch, shape_name, multi_pod=multi_pod, pcfg=pcfg,
+                    verbose=False)

@@ -1,0 +1,49 @@
+"""Paper Figure 3: strong scaling — MFU bound vs chip count.
+
+Mixtral-8x22B and Qwen2-57B-A14B, MCore (unfolded) vs Folding, worlds
+64→512 chips. Global batch fixed at 1024 sequences (paper setup) via
+gradient accumulation; per-device batch shrinks as chips grow, so the
+communication terms climb — the modeled MFU decline mirrors the paper's
+measured decline. Worlds <256 use a sub-mesh; 512 is the 2-pod mesh.
+"""
+import dataclasses
+
+from benchmarks.common import QUICK, emit
+
+from repro.configs.shapes import InputShape
+from repro.configs.base import ParallelConfig, ParallelMappingSpec as PM
+
+
+def main() -> None:
+    from repro.launch.dryrun import run_pair
+
+    worlds = [64, 256] if QUICK else [64, 128, 256, 512]
+    models = ["mixtral-8x22b"] if QUICK else ["mixtral-8x22b", "qwen2-57b-a14b"]
+    for model in models:
+        for folded in (False, True):
+            for world in worlds:
+                pods = 2 if world == 512 else 1
+                per_pod = world // pods
+                attn = (per_pod // 2, 1, 2)
+                moe = (per_pod // 8, 8, 1) if folded else (per_pod // 8, 4, 2)
+                gbs = 1024
+                nmicro = max(1, gbs // (attn[0] * pods))
+                pcfg = ParallelConfig(attn=PM(*attn), moe=PM(*moe), pods=pods,
+                                      microbatch=nmicro, fsdp=True)
+                shape = InputShape("train_4k_gbs1024", 4096, gbs, "train")
+                try:
+                    rec = run_pair(model, "train_4k", multi_pod=(pods == 2),
+                                   pcfg=pcfg, verbose=False, shape=shape)
+                except Exception as e:  # noqa: BLE001
+                    emit(f"fig3/{model}/{'folding' if folded else 'mcore'}/"
+                         f"{world}", 0.0, f"error={type(e).__name__}:{e}"[:80])
+                    continue
+                t = max(rec["compute_s"], rec["memory_s"], rec["collective_s"])
+                emit(f"fig3/{model}/{'folding' if folded else 'mcore'}/{world}",
+                     t * 1e6,
+                     f"mfu_bound={rec['mfu_bound'] or 0:.3f};"
+                     f"dominant={rec['dominant']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Paper Figure 4: context-length scaling (16K → 128K) at constant tokens.
+
+Mixtral-8x22B, MCore vs Folding. CP grows with sequence length; the global
+batch shrinks to keep tokens/step constant (paper setup). Folding keeps
+EP=8 regardless of CP (folded across CP×TP); unfolded EP stays inside DP.
+"""
+from benchmarks.common import QUICK, emit
+
+from repro.configs.base import ParallelConfig, ParallelMappingSpec as PM
+from repro.configs.shapes import InputShape
+
+
+def main() -> None:
+    from repro.launch.dryrun import run_pair
+
+    cases = [(16384, 4), (32768, 8)] if QUICK else \
+        [(16384, 4), (32768, 8), (65536, 16), (131072, 16)]
+    tokens_per_step = 4 * 2 ** 20
+    for seq, cp in cases:
+        gbs = max(tokens_per_step // seq, 8)
+        dp = 256 // (cp * 2)
+        attn = (dp, cp, 2)
+        for folded in (False, True):
+            moe = (32, 8, 1) if folded else (256 // 8, 4, 2)
+            nmicro = max(1, gbs // dp)
+            pcfg = ParallelConfig(attn=PM(*attn), moe=PM(*moe),
+                                  microbatch=nmicro, fsdp=True)
+            shape = InputShape(f"ctx{seq}", seq, gbs, "train")
+            try:
+                rec = run_pair("mixtral-8x22b", "train_4k", pcfg=pcfg,
+                               verbose=False, shape=shape)
+            except Exception as e:  # noqa: BLE001
+                emit(f"fig4/mixtral-8x22b/{'folding' if folded else 'mcore'}/"
+                     f"{seq}", 0.0, f"error={type(e).__name__}"[:60])
+                continue
+            t = max(rec["compute_s"], rec["memory_s"], rec["collective_s"])
+            emit(f"fig4/mixtral-8x22b/{'folding' if folded else 'mcore'}/{seq}",
+                 t * 1e6,
+                 f"mfu_bound={rec['mfu_bound'] or 0:.3f};"
+                 f"dominant={rec['dominant']};cp={cp};gbs={gbs}")
+
+
+if __name__ == "__main__":
+    main()

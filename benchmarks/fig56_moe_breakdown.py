@@ -1,0 +1,106 @@
+"""Paper Figures 5/6: MoE *layer* latency breakdown across EP×ETP mappings.
+
+For a fixed attention mapping, vary the MoE mapping (EP×ETP product held
+constant, plus the extra mappings only folding allows — marked '*') and
+break the layer into permute / A2A / AG-V / RS-V / expert-GEMM terms.
+
+Two models: Mixtral-8x22B (coarse) and Mixtral-8x22B-G8T8 (fine-grained).
+Terms come from the analytic dispatcher model (exact buffer shapes and
+folded groups) — the same arithmetic the compiled HLO realizes, but with
+per-axis bandwidth (intra-pod ICI vs inter-pod DCI) attached to the actual
+atom groups, which is the quantity Fig 5/6 studies.
+"""
+import math
+
+from benchmarks.common import QUICK, emit
+
+from repro.configs import get_config
+from repro.configs.base import ParallelConfig, ParallelMappingSpec as PM
+from repro.core.folding import build_folded_mesh
+from repro.roofline.analysis import DCI_BW, ICI_BW, PEAK_FLOPS
+
+
+def moe_layer_terms(model: str, attn, moe, *, seq=4096, batch=256, pods=1,
+                    moe_factors=None):
+    """Analytic per-layer times (s) for the dispatcher pipeline."""
+    cfg = get_config(model)
+    e = cfg.moe
+    pcfg = ParallelConfig(attn=PM(*attn), moe=PM(*moe), pods=pods)
+    fm = build_folded_mesh(pcfg, moe_factors=moe_factors)
+    world = fm.mesh.devices.size
+    D = cfg.d_model
+    tokens = seq * batch
+    t_local = tokens / world
+    cap = max(1, int(t_local * e.top_k / e.n_experts))     # CF=1
+    ep, etp = fm.ep, fm.etp
+    e_local = e.n_experts // ep
+
+    def bw(axes):
+        if pods > 1 and "pod" in axes:
+            return DCI_BW
+        return ICI_BW
+
+    # buffer leaving each device: (E, cap, D) bf16
+    buf = e.n_experts * cap * D * 2
+    a2a = 2 * buf * (ep - 1) / ep / bw(fm.axis("moe", "ep")) if ep > 1 else 0.0
+    # after a2a each device holds (ep, e_local, cap); AG over etp gathers it
+    recv = ep * e_local * cap * D * 2
+    ag = (recv * (etp - 1)) / bw(fm.axis("moe", "etp")) if etp > 1 else 0.0
+    rs = ag  # ReduceScatter-V mirrors the AllGather-V
+    # expert GEMM: tokens-per-device × 3 matmuls (w1,w3,w2), FFN sharded by etp
+    n_tok = ep * cap * e_local * (etp if etp > 1 else 1)
+    gemm_flops = 3 * 2 * n_tok * D * (e.d_expert / max(etp, 1))
+    gemm = gemm_flops / PEAK_FLOPS
+    # permutation/unpermute: scatter+gather of t_local×D bf16, HBM-bound
+    perm = 4 * t_local * D * 2 / 819e9
+    return {"permute": perm, "a2a": a2a, "ag_v": ag, "rs_v": rs, "gemm": gemm}
+
+
+def main() -> None:
+    attn = (64, 1, 4)   # paper setup 1: attention TP=4, CP=1
+    # EP×ETP = 16 sweep; '*' = mappings only MoE Parallel Folding enables.
+    mappings = [
+        ("EP16xETP1*", (16, 16, 1)),   # only fine-grained models (E≥16)
+        ("EP8xETP2*",  (16, 8, 2)),
+        ("EP8xETP1*",  (32, 8, 1)),
+        ("EP4xETP4",   (16, 4, 4)),
+        ("EP2xETP8",   (16, 2, 8)),
+        ("EP1xETP16",  (16, 1, 16)),
+    ]
+    models = ["mixtral-8x22b", "mixtral-8x22b-g8t8"]
+    if QUICK:
+        models = models[:1]
+    from repro.configs import get_config
+    for model in models:
+        n_exp = get_config(model).moe.n_experts
+        for name, moe in mappings:
+            if moe[1] > n_exp:
+                continue  # EP cannot exceed the expert count
+            # moe sizes must multiply to attn size (256)
+            moe = (256 // (moe[1] * moe[2]), moe[1], moe[2])
+            t = moe_layer_terms(model, attn, moe)
+            total = sum(t.values())
+            emit(f"fig5/{model}/{name}", total * 1e6,
+                 ";".join(f"{k}={v*1e6:.0f}us" for k, v in t.items()))
+
+    # Fig 6: CP×EP folding across the pod boundary (multi-pod): folded keeps
+    # EP intra-pod; unfolded EP group spans pods → DCI.
+    for model in models:
+        for cp in (2, 4, 8):
+            attn_cp = (256 // (cp * 2), cp, 2)
+            # folded: EP=8 inside the pod
+            folded = moe_layer_terms(model, attn_cp, (32, 8, 1), pods=2)
+            # unfolded: EP nested *outside* CP in rank order (pre-folding
+            # Megatron) — with the pod axis outermost the EP group spans
+            # pods once CP×EP exceeds the intra-pod extent; emulate by
+            # charging the EP a2a at DCI bandwidth.
+            unf = dict(folded)
+            unf["a2a"] = folded["a2a"] * (ICI_BW / DCI_BW)
+            emit(f"fig6/{model}/cp{cp}/folded", sum(folded.values()) * 1e6,
+                 f"a2a={folded['a2a']*1e6:.0f}us;intra-pod")
+            emit(f"fig6/{model}/cp{cp}/unfolded", sum(unf.values()) * 1e6,
+                 f"a2a={unf['a2a']*1e6:.0f}us;crosses-pod")
+
+
+if __name__ == "__main__":
+    main()

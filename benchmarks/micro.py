@@ -1,0 +1,64 @@
+"""CPU micro-benchmarks of the hot paths (real wall time, us_per_call)."""
+import numpy as np
+
+from benchmarks.common import QUICK, emit, timeit
+
+
+def main() -> None:
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import MoEConfig, ParallelConfig, ParallelMappingSpec as PM
+    from repro.core.dispatcher import moe_ffn
+    from repro.core.folding import build_folded_mesh
+    from repro.kernels.flash.flash import flash_attention
+    from repro.kernels.gmm.gmm import gmm
+    from repro.models.attn_core import blockwise_attention
+
+    key = jax.random.PRNGKey(0)
+    devices = np.asarray(jax.devices())[:8]
+
+    # dispatcher (8-way folded EP)
+    D, F, E, K, T = 64, 128, 8, 2, 512
+    pcfg = ParallelConfig(attn=PM(2, 2, 2), moe=PM(1, 8, 1))
+    fm = build_folded_mesh(pcfg, devices=devices)
+    mcfg = MoEConfig(n_experts=E, top_k=K, d_expert=F)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (T, D))
+    wg = jax.random.normal(ks[1], (D, E)) * 0.1
+    w1 = jax.random.normal(ks[2], (E, D, F)) * 0.1
+    w2 = jax.random.normal(ks[3], (E, F, D)) * 0.1
+    w3 = jax.random.normal(ks[4], (E, D, F)) * 0.1
+    f = jax.jit(lambda *a: moe_ffn(*a, mcfg, fm)[0])
+    emit("micro/dispatcher_ep8_T512_D64", timeit(f, x, wg, w1, w2, w3),
+         "folded EP8; tokens=512")
+
+    # blockwise attention fwd+bwd
+    q = jax.random.normal(ks[0], (2, 8, 512, 64))
+    k = jax.random.normal(ks[1], (2, 2, 512, 64))
+    v = jax.random.normal(ks[2], (2, 2, 512, 64))
+    qp = jnp.broadcast_to(jnp.arange(512, dtype=jnp.int32), (2, 512))
+    att = jax.jit(lambda q, k, v: blockwise_attention(q, k, v, qp, qp,
+                                                      block_kv=128))
+    emit("micro/blockwise_attn_fwd_S512", timeit(att, q, k, v), "GQA 8/2 hd64")
+    g = jax.jit(jax.grad(lambda q, k, v: jnp.sum(
+        blockwise_attention(q, k, v, qp, qp, block_kv=128) ** 2),
+        argnums=(0, 1, 2)))
+    emit("micro/blockwise_attn_bwd_S512", timeit(g, q, k, v),
+         "flash-style custom VJP")
+
+    # Pallas kernels (interpret mode on CPU)
+    xg = jax.random.normal(ks[0], (512, 128))
+    wgm = jax.random.normal(ks[1], (4, 128, 128)) * 0.1
+    be = jnp.zeros((4,), jnp.int32)
+    gm = jax.jit(lambda x, w: gmm(x, w, be, bm=128, interpret=True))
+    emit("micro/pallas_gmm_interpret_512x128", timeit(gm, xg, wgm),
+         "MXU-tiled grouped matmul (interpret)")
+    fa = jax.jit(lambda q, k, v: flash_attention(q, k, v, interpret=True))
+    q2 = jax.random.normal(ks[0], (1, 4, 256, 64))
+    k2 = jax.random.normal(ks[1], (1, 4, 256, 64))
+    emit("micro/pallas_flash_interpret_S256", timeit(fa, q2, k2, k2),
+         "flash fwd kernel (interpret)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Set ``BENCH_QUICK=1`` for a
+reduced sweep. Dry-run-based rows report *modeled* step time (roofline
+max-term) since this container is CPU-only; micro/loss_parity rows are
+real executions.
+"""
+import traceback
+
+from benchmarks import common  # noqa: F401  (sets XLA_FLAGS first)
+
+
+def main() -> None:
+    from benchmarks import (fig3_strong_scaling, fig4_context_scaling,
+                            fig56_moe_breakdown, loss_parity, micro,
+                            table1_mfu, table2_fp8)
+
+    print("name,us_per_call,derived")
+    for mod in (fig56_moe_breakdown, micro, loss_parity, table2_fp8,
+                table1_mfu, fig3_strong_scaling, fig4_context_scaling):
+        try:
+            mod.main()
+        except Exception:  # noqa: BLE001 — keep the harness going
+            traceback.print_exc()
+            print(f"{mod.__name__},0.0,harness_error")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Minimal distributed-friendly checkpointing (npz + pytree manifest).
+
+Saves the *addressable* shards gathered to host as one ``.npz`` per step
+plus a JSON manifest of the tree structure and dtypes. No orbax dependency;
+restore re-shards via the provided shardings.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(directory: str, step: int, tree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    np.savez(path, **arrays)
+    manifest = {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                for k, v in arrays.items()}
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(f[5:13]) for f in os.listdir(directory)
+             if f.startswith("ckpt_") and f.endswith(".npz")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like_tree, shardings=None):
+    """Restore into the structure of ``like_tree`` (re-sharding if given)."""
+    data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
+    flat_like = _flatten(like_tree)
+    flat_shard = _flatten(shardings) if shardings is not None else {}
+    out = {}
+    for k, ref in flat_like.items():
+        arr = data[k]
+        if k in flat_shard:
+            out[k] = jax.device_put(arr, flat_shard[k])
+        else:
+            out[k] = jax.numpy.asarray(arr)
+    # Rebuild tree
+    leaves_order = [
+        "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(like_tree)[0]
+    ]
+    treedef = jax.tree_util.tree_structure(like_tree)
+    return jax.tree_util.tree_unflatten(treedef, [out[k] for k in leaves_order])

@@ -1,0 +1,210 @@
+"""Configuration dataclasses for the repro framework.
+
+Two orthogonal config families:
+
+* :class:`ModelConfig` — the architecture (what to compute).
+* :class:`ParallelConfig` — the 5-D parallelism mapping (where to compute),
+  with *decoupled* attention and MoE mappings per the paper's
+  MoE Parallel Folding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-Experts sub-config."""
+
+    n_experts: int
+    top_k: int
+    d_expert: int                    # per-expert FFN hidden size
+    capacity_factor: float = 1.0     # CF for token-dropping training
+    dropless: bool = False           # token-dropless training
+    aux_loss_coef: float = 1e-2      # load-balancing auxiliary loss
+    z_loss_coef: float = 1e-3        # router z-loss
+    # "sub_sequence" (paper default) or "full_sequence" dropping decisions.
+    drop_policy: str = "sub_sequence"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description.
+
+    ``family`` ∈ {dense, moe, ssm, hybrid, audio, vlm}. Non-transformer
+    blocks (mLSTM/sLSTM, Mamba2) are selected via ``block_pattern``.
+    """
+
+    name: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None         # override (gemma: 256)
+    qkv_bias: bool = False                 # qwen1.5-style attention bias
+    activation: str = "swiglu"             # swiglu | geglu | gelu
+    tie_embeddings: bool = False
+    rope_theta: float = 500_000.0
+    rope_kind: str = "rope"                # rope | mrope | none
+    norm: str = "rmsnorm"                  # rmsnorm | layernorm
+    moe: Optional[MoEConfig] = None
+    # Every ``moe_every``-th layer is MoE (1 = all layers, mixtral-style).
+    moe_every: int = 1
+    # SSM / hybrid
+    ssm_state: int = 0                     # Mamba2 / mLSTM state size
+    ssm_heads: int = 0                     # Mamba2 heads (derived if 0)
+    ssm_expand: int = 2                    # Mamba2 expansion factor
+    # Zamba2-style: one shared attention block applied every k layers.
+    shared_attention_every: int = 0
+    # Block pattern: per-layer block kind, cycled. Default derived per family.
+    block_pattern: Tuple[str, ...] = ()
+    # Encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    max_source_positions: int = 1500       # whisper post-conv frames
+    # VLM (qwen2-vl): number of stub image patch embeddings prepended.
+    n_vision_tokens: int = 0
+    # Sliding-window attention (enables long_500k for attention archs).
+    sliding_window: int = 0                # 0 = full attention
+    dtype: str = "bfloat16"
+    citation: str = ""
+
+    # ---- derived ------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.resolved_head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.resolved_head_dim
+
+    def blocks(self) -> Tuple[str, ...]:
+        """Per-layer block kinds, length ``n_layers``."""
+        if self.block_pattern:
+            pat = self.block_pattern
+        elif self.family == "moe":
+            pat = ("moe",)
+        elif self.family == "ssm":
+            pat = ("mlstm", "slstm")       # xlstm alternation
+        elif self.family == "hybrid":
+            pat = ("mamba2",)              # shared attention interleaved
+        else:
+            pat = ("dense",)
+        out = tuple(pat[i % len(pat)] for i in range(self.n_layers))
+        if self.family == "moe" and self.moe_every > 1:
+            out = tuple(
+                "moe" if (i % self.moe_every == self.moe_every - 1) else "dense"
+                for i in range(self.n_layers)
+            )
+        return out
+
+    # ---- parameter / FLOP accounting ---------------------------------
+    def param_count(self) -> int:
+        """Total parameter count (embeddings included once)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        attn = d * (self.q_dim + 2 * self.kv_dim) + self.q_dim * d
+        if self.qkv_bias:
+            attn += self.q_dim + 2 * self.kv_dim
+        n_act = 3 if self.activation in ("swiglu", "geglu") else 2
+        dense_ffn = n_act * d * self.d_ff
+        total = 0
+        for kind in self.blocks():
+            if kind == "moe":
+                assert self.moe is not None
+                e = self.moe
+                total += attn + e.n_experts * (n_act * d * e.d_expert) + d * e.n_experts
+            elif kind == "dense":
+                total += attn + dense_ffn
+            elif kind == "mamba2":
+                d_in = self.ssm_expand * d
+                nh = self.ssm_heads or max(1, d_in // 64)
+                total += d * (2 * d_in + 2 * self.ssm_state + nh) + d_in * d
+            elif kind == "mlstm":
+                d_in = 2 * d
+                total += d * (3 * d_in + 3) + d_in * d + 2 * d * (d * 4 // 3)
+            elif kind == "slstm":
+                total += 4 * d * d + 2 * d * (d * 4 // 3)
+            total += 2 * d  # norms
+        if self.shared_attention_every:
+            total += attn + dense_ffn  # the single shared block
+        if self.is_encoder_decoder:
+            enc_ffn = 2 * d * self.d_ff
+            total += self.n_encoder_layers * (attn + enc_ffn + 2 * d)
+            total += self.n_layers * attn  # cross-attention
+        total += self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only top-k experts)."""
+        if self.moe is None:
+            return self.param_count()
+        e = self.moe
+        n_act = 3 if self.activation in ("swiglu", "geglu") else 2
+        per_expert = n_act * self.d_model * e.d_expert
+        inactive = sum(
+            (e.n_experts - e.top_k) * per_expert
+            for kind in self.blocks() if kind == "moe"
+        )
+        return self.param_count() - inactive
+
+    def model_flops_per_token(self, seq_len: int) -> float:
+        """6·N_active + attention quadratic term, per token."""
+        flops = 6.0 * self.active_param_count()
+        w = self.sliding_window or seq_len
+        eff = min(seq_len, w)
+        flops += 12.0 * self.n_layers * self.resolved_head_dim * self.n_heads * eff / 2
+        return flops
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelMappingSpec:
+    """One 4-D mapping (dp × cp|ep × tp, with pp shared).
+
+    For the attention side ``inner`` is CP; for the MoE side it is EP.
+    """
+
+    dp: int = 1
+    inner: int = 1       # CP (attention) or EP (MoE)
+    tp: int = 1          # TP (attention) or ETP (MoE)
+
+    @property
+    def size(self) -> int:
+        return self.dp * self.inner * self.tp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    """Full 5-D folded parallelism config (the paper's contribution).
+
+    ``attn`` and ``moe`` map the *same* ``pp``-stage device set; only the
+    constraint ``attn.size == moe.size`` is required (paper §3.2).
+    """
+
+    attn: ParallelMappingSpec = ParallelMappingSpec()
+    moe: ParallelMappingSpec = ParallelMappingSpec()
+    pp: int = 1
+    pods: int = 1                      # outer pod axis (multi-pod dry-run)
+    pod_role: str = "dp"               # "dp": pods extend data parallelism; "pp": pipeline over pods
+    microbatch: int = 0                # 0 = no gradient accumulation
+    fsdp: bool = True                  # shard params/opt-state over DP (ZeRO-3-ish)
+    remat: str = "full"                # full | none
+    use_pallas: bool = False           # route matmuls through Pallas kernels
+
+    def __post_init__(self):
+        if self.attn.size != self.moe.size:
+            raise ValueError(
+                f"folded mappings must cover the same devices: "
+                f"attention {self.attn.size} != moe {self.moe.size}"
+            )
+
+    @property
+    def world_size(self) -> int:
+        return self.pods * self.pp * self.attn.size

@@ -1,0 +1,18 @@
+"""Qwen2-57B-A14B — the paper's fine-grained MoE benchmark model."""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-57b-a14b",
+    family="moe",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    d_ff=2560,
+    vocab_size=151936,
+    qkv_bias=True,
+    activation="swiglu",
+    rope_theta=1_000_000.0,
+    moe=MoEConfig(n_experts=64, top_k=8, d_expert=2560),
+    citation="arXiv:2407.10671 (paper Table 1)",
+)

@@ -1,0 +1,310 @@
+"""MoE Parallel Folding — the paper's core contribution, in JAX.
+
+Megatron realizes folding by building two independent families of NCCL
+process groups over the same ranks (paper Listing 1).  The JAX-native
+equivalent is a **single mesh whose axes are the common refinement** of the
+attention factorization ``[dp, cp, tp]`` and the MoE factorization
+``[edp, ep, etp]`` of the same device block.  Each *logical* parallel axis
+(e.g. attention-TP, expert-EP) is then a tuple of consecutive *atomic* mesh
+axes, and every ``PartitionSpec`` / collective simply names that tuple.
+
+Because both factorizations order devices identically (outermost = data,
+innermost = tensor; matching Megatron's ``tp-cp-ep-dp-pp`` rank order with
+``pp``/``pod`` outermost so pipeline groups are always consistent — see
+DESIGN.md), any fold expressible by Megatron's rank reshapes is expressible
+here, and collectives over a logical axis lower to exactly the grouped
+collectives the paper describes.
+
+Example::
+
+    pcfg = ParallelConfig(attn=ParallelMappingSpec(dp=16, cp=2, tp=8),
+                          moe=ParallelMappingSpec(dp=16, inner=8, tp=2))
+    fm = build_folded_mesh(pcfg)
+    fm.spec("attn", "dp", None, "tp")   # activations: (batch, seq, hidden)
+    fm.axis("moe", "ep")                # tuple of atom names for lax.all_to_all
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ParallelConfig, ParallelMappingSpec
+
+PODS_AXIS = "pod"
+PP_AXIS = "pp"
+
+AxisRef = Union[None, str, Tuple[str, ...]]
+
+
+def common_refinement(fa: Sequence[int], fb: Sequence[int]) -> Tuple[List[int], List[List[int]], List[List[int]]]:
+    """Refine two ordered factorizations of the same N into common atoms.
+
+    Returns ``(atom_sizes, a_map, b_map)`` where ``a_map[i]`` lists the atom
+    indices composing ``fa[i]`` (contiguous), likewise ``b_map``.
+
+    >>> common_refinement([4, 4], [2, 8])
+    ([2, 2, 4], [[0, 1], [2]], [[0], [1, 2]])
+    """
+    if math.prod(fa) != math.prod(fb):
+        raise ValueError(f"factorizations disagree: prod{tuple(fa)} != prod{tuple(fb)}")
+
+    def boundaries(f: Sequence[int]) -> List[int]:
+        out, acc = [], 1
+        for x in f:
+            acc *= x
+            out.append(acc)
+        return out
+
+    ba, bb = boundaries(fa), boundaries(fb)
+    merged = sorted(set(ba) | set(bb))
+    atom_sizes: List[int] = []
+    prev = 1
+    for b in merged:
+        if b == prev:
+            continue  # size-1 factor: no atom
+        if b % prev:
+            raise ValueError(
+                f"unfoldable parallelism: boundary {b} not divisible by {prev} "
+                f"(attn={tuple(fa)}, moe={tuple(fb)})"
+            )
+        atom_sizes.append(b // prev)
+        prev = b
+
+    def assign(f: Sequence[int]) -> List[List[int]]:
+        out, i, acc = [], 0, 1
+        for x in f:
+            target = acc * x
+            cur: List[int] = []
+            while acc < target:
+                cur.append(i)
+                acc *= atom_sizes[i]
+                i += 1
+            assert acc == target, (f, atom_sizes)
+            out.append(cur)
+        return out
+
+    return atom_sizes, assign(fa), assign(fb)
+
+
+@dataclasses.dataclass
+class FoldedMesh:
+    """A mesh + the two logical→atomic axis mappings of MoE Parallel Folding."""
+
+    mesh: Mesh
+    pcfg: ParallelConfig
+    # logical axis name -> tuple of atomic mesh-axis names (possibly empty)
+    attn_axes: Dict[str, Tuple[str, ...]]
+    moe_axes: Dict[str, Tuple[str, ...]]
+
+    # ---- lookup -------------------------------------------------------
+    def axis(self, side: str, logical: str) -> Tuple[str, ...]:
+        table = self.attn_axes if side == "attn" else self.moe_axes
+        return table[logical]
+
+    def size(self, side: str, logical: str) -> int:
+        return math.prod(self.mesh.shape[a] for a in self.axis(side, logical)) if self.axis(side, logical) else 1
+
+    def _resolve(self, side: str, ref: AxisRef) -> Optional[Tuple[str, ...]]:
+        """Resolve one PartitionSpec entry: logical name(s) → atom names."""
+        if ref is None:
+            return None
+        if isinstance(ref, str):
+            ref = (ref,)
+        atoms: List[str] = []
+        table = self.attn_axes if side == "attn" else self.moe_axes
+        for r in ref:
+            if r in table:
+                atoms.extend(table[r])
+            elif r in self.mesh.shape:  # raw atom / pod / pp
+                atoms.append(r)
+            else:
+                raise KeyError(f"unknown axis {r!r} for side {side!r}")
+        return tuple(atoms) or None
+
+    def spec(self, side: str, *dims: AxisRef) -> P:
+        """Build a PartitionSpec from logical axis names.
+
+        ``fm.spec("attn", ("dp",), "cp", "tp")`` →
+        ``P((atoms of dp), (atoms of cp), (atoms of tp))``.
+        """
+        return P(*[self._resolve(side, d) for d in dims])
+
+    def sharding(self, side: str, *dims: AxisRef) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(side, *dims))
+
+    # ---- convenience sizes --------------------------------------------
+    @property
+    def dp(self) -> int:
+        return self.size("attn", "dp")
+
+    @property
+    def cp(self) -> int:
+        return self.size("attn", "cp")
+
+    @property
+    def tp(self) -> int:
+        return self.size("attn", "tp")
+
+    @property
+    def ep(self) -> int:
+        return self.size("moe", "ep")
+
+    @property
+    def etp(self) -> int:
+        return self.size("moe", "etp")
+
+    @property
+    def edp(self) -> int:
+        return self.size("moe", "edp")
+
+    def describe(self) -> str:
+        a, m = self.pcfg.attn, self.pcfg.moe
+        atoms = {k: v for k, v in self.mesh.shape.items()}
+        return (
+            f"FoldedMesh(atoms={atoms}, "
+            f"attn=DP{a.dp}xCP{a.inner}xTP{a.tp}, moe=EDP{m.dp}xEP{m.inner}xETP{m.tp}, "
+            f"pp={self.pcfg.pp}, pods={self.pcfg.pods})"
+        )
+
+
+def _logical_map(names: Sequence[str], amap: List[List[int]], atom_names: List[str],
+                 sizes: Sequence[int]) -> Dict[str, Tuple[str, ...]]:
+    out: Dict[str, Tuple[str, ...]] = {}
+    for name, atoms, size in zip(names, amap, sizes):
+        out[name] = tuple(atom_names[i] for i in atoms) if size > 1 else ()
+    return out
+
+
+def build_folded_mesh(
+    pcfg: ParallelConfig,
+    devices: Optional[np.ndarray] = None,
+    moe_factors: Optional[Sequence[Tuple[str, int]]] = None,
+) -> FoldedMesh:
+    """Construct the folded mesh for a ParallelConfig.
+
+    ``devices``: optional ndarray of jax devices (any shape) whose *flat
+    order* is the physical layout — e.g. ``make_production_mesh().devices``
+    so the refined mesh preserves the production topology. Defaults to
+    ``jax.devices()``.
+
+    ``moe_factors``: optional explicit MoE-side factorization as ordered
+    (label, size) pairs with labels in {"edp", "ep", "etp"}; labels may
+    repeat, producing *non-contiguous* logical axes. This expresses
+    pre-folding Megatron baselines like EP-inside-DP-outside-CP:
+    ``[("edp", dp//ep), ("ep", ep), ("edp", cp), ("etp", tp)]``.
+    """
+    a, m = pcfg.attn, pcfg.moe
+    if moe_factors is None:
+        moe_factors = [("edp", m.dp), ("ep", m.inner), ("etp", m.tp)]
+    else:
+        import math as _math
+        if _math.prod(s for _, s in moe_factors) != a.size:
+            raise ValueError(f"moe_factors {moe_factors} != attn size {a.size}")
+    atom_sizes, amap, mmap = common_refinement(
+        [a.dp, a.inner, a.tp], [s for _, s in moe_factors]
+    )
+    atom_names = [f"f{i}" for i in range(len(atom_sizes))]
+
+    if devices is None:
+        devices = np.asarray(jax.devices())
+    flat = np.asarray(devices).reshape(-1)
+    want = pcfg.world_size
+    if flat.size < want:
+        raise ValueError(f"need {want} devices, have {flat.size}")
+    flat = flat[:want]
+
+    shape = [pcfg.pods, pcfg.pp] + atom_sizes
+    names = [PODS_AXIS, PP_AXIS] + atom_names
+    # Drop trivial outer axes only if size 1 AND unnamed use: keep them —
+    # PartitionSpec entries resolve to () for size-1 logical axes anyway,
+    # but pod/pp of size 1 are harmless and keep specs uniform.
+    mesh = Mesh(flat.reshape(shape), tuple(names))
+
+    attn_axes = _logical_map(["dp", "cp", "tp"], amap, atom_names, [a.dp, a.inner, a.tp])
+    moe_axes = {"edp": (), "ep": (), "etp": ()}
+    for (label, size), atoms in zip(moe_factors, mmap):
+        if size > 1:
+            moe_axes[label] = moe_axes[label] + tuple(atom_names[i] for i in atoms)
+
+    # Pods: extend data parallelism (default), context, or pipeline.
+    pod = (PODS_AXIS,) if pcfg.pods > 1 else ()
+    pp = (PP_AXIS,) if pcfg.pp > 1 else ()
+    attn_axes["pp"] = moe_axes["pp"] = pp
+    if pcfg.pod_role == "dp":
+        attn_axes["dp"] = pod + attn_axes["dp"]
+        moe_axes["edp"] = pod + moe_axes["edp"]
+    elif pcfg.pod_role == "cp":
+        # Long-context serving: KV cache sharded across pods.
+        attn_axes["cp"] = pod + attn_axes["cp"]
+        moe_axes["edp"] = pod + moe_axes["edp"]
+    else:  # pod_role == "pp": pipeline stages span pods (outermost)
+        attn_axes["pp"] = moe_axes["pp"] = pod + pp
+
+    # The full data-parallel axis used for FSDP weight sharding / gradient
+    # reduction on each side.
+    attn_axes["dp_full"] = attn_axes["dp"]
+    moe_axes["edp_full"] = moe_axes["edp"]
+    return FoldedMesh(mesh=mesh, pcfg=pcfg, attn_axes=attn_axes, moe_axes=moe_axes)
+
+
+def unfolded(pcfg: ParallelConfig) -> bool:
+    """True when attention and MoE mappings coincide (no folding)."""
+    a, m = pcfg.attn, pcfg.moe
+    return (a.dp, a.inner, a.tp) == (m.dp, m.inner, m.tp)
+
+
+def megatron_groups(world_size: int, tp: int, cp: int, ep: int, etp: int, pp: int,
+                    pods: int = 1) -> Tuple[Dict[str, List[List[int]]], Dict[str, List[List[int]]]]:
+    """Reference group generation following paper Listing 1 (with pp/pod
+    outermost for pipeline-group consistency — see DESIGN.md §2).
+
+    Returns (attention_groups, moe_groups): each maps axis name → list of
+    rank groups. Used by tests to validate the folded mesh against the
+    paper's Megatron semantics.
+    """
+    attn_dp = world_size // tp // cp // pp // pods
+    moe_dp = world_size // etp // ep // pp // pods
+    ranks = np.arange(world_size)
+
+    def groups(arr: np.ndarray, axis: int) -> List[List[int]]:
+        moved = np.moveaxis(arr, axis, -1)
+        return moved.reshape(-1, arr.shape[axis]).tolist()
+
+    attn_ranks = ranks.reshape(pods, pp, attn_dp, cp, tp)
+    attention_groups = {
+        "TP": groups(attn_ranks, 4),
+        "CP": groups(attn_ranks, 3),
+        "DP": groups(attn_ranks, 2),
+        "PP": groups(attn_ranks, 1),
+        "POD": groups(attn_ranks, 0),
+    }
+    moe_ranks = ranks.reshape(pods, pp, moe_dp, ep, etp)
+    moe_groups_ = {
+        "ETP": groups(moe_ranks, 4),
+        "EP": groups(moe_ranks, 3),
+        "EDP": groups(moe_ranks, 2),
+        "PP": groups(moe_ranks, 1),
+        "POD": groups(moe_ranks, 0),
+    }
+    return attention_groups, moe_groups_
+
+
+def folded_mesh_groups(fm: FoldedMesh, side: str, logical: str) -> List[List[int]]:
+    """Rank groups induced by a logical axis of the folded mesh.
+
+    Enumerate devices by mesh position; group ids = linear index over all
+    *other* axes. Compares directly against :func:`megatron_groups`.
+    """
+    axes = fm.axis(side, logical)
+    if not axes:
+        return [[i] for i in range(fm.mesh.devices.size)]
+    names = list(fm.mesh.axis_names)
+    ids = np.vectorize(lambda d: d.id)(fm.mesh.devices)
+    pos = [names.index(a) for a in axes]
+    moved = np.moveaxis(ids, pos, list(range(len(ids.shape) - len(pos), len(ids.shape))))
+    return moved.reshape(-1, math.prod(ids.shape[p] for p in pos)).tolist()

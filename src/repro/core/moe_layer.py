@@ -1,0 +1,63 @@
+"""MoE FFN block: router + dispatcher + experts over a (B, S, D) activation.
+
+Entering the MoE layer from the attention layer is a *reshape only*
+(paper appendix 6.2): activations arrive sharded (DP, CP×TP, -); flattening
+(B, S) → T gives a token dim sharded over the full atom set, which is the
+same set the MoE mapping (EDP×EP×ETP) factorizes — no collective needed.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.dispatcher import moe_ffn
+from repro.core.folding import FoldedMesh
+from repro.models.common import dense_init
+from repro.models.sharding import constrain
+
+Array = jax.Array
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    assert cfg.moe is not None
+    e = cfg.moe
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], cfg.d_model, e.n_experts, scale=0.02, dtype=jnp.float32),
+        "experts": {
+            "w1": dense_init(ks[1], cfg.d_model, e.n_experts * e.d_expert,
+                             dtype=dtype).reshape(cfg.d_model, e.n_experts, e.d_expert)
+                  .transpose(1, 0, 2),
+            "w3": dense_init(ks[2], cfg.d_model, e.n_experts * e.d_expert,
+                             dtype=dtype).reshape(cfg.d_model, e.n_experts, e.d_expert)
+                  .transpose(1, 0, 2),
+            "w2": dense_init(ks[3], e.d_expert, e.n_experts * cfg.d_model,
+                             scale=e.d_expert ** -0.5,
+                             dtype=dtype).reshape(e.d_expert, e.n_experts, cfg.d_model)
+                  .transpose(1, 0, 2),
+        },
+    }
+
+
+def moe_block(p: Dict, x: Array, cfg: ModelConfig, fm: FoldedMesh,
+              ) -> Tuple[Array, Dict[str, Array]]:
+    """x: (B, S, D) sharded (dp, cp×tp, -) → same, plus aux losses."""
+    assert cfg.moe is not None
+    B, S, D = x.shape
+    xt = x.reshape(B * S, D)
+    # Token atoms on the MoE side == attention side (folding invariant).
+    xt = constrain(xt, fm, "moe", ("edp", "ep", "etp"), None)
+
+    # Expert weights stay EDP(FSDP)-sharded here — the dispatcher gathers
+    # them *inside* its shard_map (bf16 AG fwd / bf16 RS bwd, §Perf H4).
+    w1 = constrain(p["experts"]["w1"], fm, "moe", "ep", "edp", "etp")
+    w3 = constrain(p["experts"]["w3"], fm, "moe", "ep", "edp", "etp")
+    w2 = constrain(p["experts"]["w2"], fm, "moe", "ep", "etp", "edp")
+
+    y, aux = moe_ffn(xt, p["router"], w1, w2, w3, cfg.moe, fm,
+                     activation=cfg.activation)
+    y = y.reshape(B, S, D)
+    return constrain(y, fm, "attn", "dp", ("cp", "tp"), None), aux

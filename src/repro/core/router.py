@@ -1,0 +1,89 @@
+"""Top-K MoE router with token-dropping (capacity factor) and dropless modes.
+
+Operates on a *local* chunk of tokens — the paper's default **sub-sequence
+dropping** (§3.3): capacity/drop decisions use only the tokens resident on
+the current rank, so no logit gathering is needed. Full-sequence dropping is
+implemented in the dispatcher by gathering logits first.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class RouterOutput:
+    expert_idx: Array      # (t, K) int32 — selected expert per assignment
+    combine_w: Array       # (t, K) f32 — gating weights
+    pos_in_expert: Array   # (t, K) int32 — arrival rank within each expert
+    keep: Array            # (t, K) bool — survives capacity (True everywhere if dropless)
+    aux_loss: Array        # scalar f32 — load-balancing loss (local)
+    z_loss: Array          # scalar f32 — router z-loss (local)
+    probs: Array           # (t, E) f32 — full softmax (for diagnostics/tests)
+
+
+def capacity_per_expert(n_tokens: int, cfg: MoEConfig) -> int:
+    """Paper eq. (4): CF * L / E, counting routed assignments (L = t*K)."""
+    if cfg.dropless:
+        # A single source rank can send at most t tokens to one expert.
+        return max(1, n_tokens)
+    return max(1, int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts))
+
+
+def route(x: Array, w_gate: Array, cfg: MoEConfig, *, capacity: int,
+          token_mask: Optional[Array] = None) -> RouterOutput:
+    """Route a chunk of tokens. ``x``: (t, D); ``w_gate``: (D, E).
+
+    ``token_mask``: (t,) — False entries (padding) are never dispatched.
+    """
+    t = x.shape[0]
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), w_gate.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                       # (t, E)
+    top_p, top_i = jax.lax.top_k(probs, cfg.top_k)                # (t, K)
+
+    # Load-balancing auxiliary loss (Switch Transformer form):
+    #   E * sum_e f_e * P_e, f_e = fraction of assignments to e, P_e = mean prob.
+    assign_onehot = jax.nn.one_hot(top_i, cfg.n_experts, dtype=jnp.float32)  # (t,K,E)
+    if token_mask is not None:
+        m = token_mask.astype(jnp.float32)
+        assign_onehot = assign_onehot * m[:, None, None]
+        probs_for_aux = probs * m[:, None]
+        denom = jnp.maximum(jnp.sum(m), 1.0)
+    else:
+        probs_for_aux = probs
+        denom = float(t)
+    f_e = jnp.sum(assign_onehot, axis=(0, 1)) / (denom * cfg.top_k)
+    p_e = jnp.sum(probs_for_aux, axis=0) / denom
+    aux_loss = cfg.n_experts * jnp.sum(f_e * p_e)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+
+    # Position of each assignment within its expert queue (token-order
+    # priority, matching Megatron's drop policy).
+    flat_e = top_i.reshape(-1)                                    # (t*K,)
+    onehot = jax.nn.one_hot(flat_e, cfg.n_experts, dtype=jnp.int32)
+    if token_mask is not None:
+        onehot = onehot * token_mask.repeat(cfg.top_k).astype(jnp.int32)[:, None]
+    pos_flat = jnp.cumsum(onehot, axis=0) - onehot                # arrivals before me
+    pos = jnp.take_along_axis(pos_flat, flat_e[:, None], axis=1)[:, 0]
+    pos = pos.reshape(t, cfg.top_k)
+
+    keep = pos < capacity
+    if token_mask is not None:
+        keep = keep & token_mask[:, None]
+
+    return RouterOutput(
+        expert_idx=top_i.astype(jnp.int32),
+        combine_w=top_p.astype(jnp.float32),
+        pos_in_expert=pos.astype(jnp.int32),
+        keep=keep,
+        aux_loss=aux_loss,
+        z_loss=z_loss,
+        probs=probs,
+    )

@@ -1,0 +1,14 @@
+"""Perf-iteration toggles (env vars, read at import).
+
+Each §Perf optimization keeps its pre-change path selectable so
+before/after roofline terms can be measured under the same cost model:
+
+  REPRO_NO_FLASH_VJP=1    H0: autodiff the attention scan (stacked scores)
+  REPRO_STATE_AS_XS=1     H1: decode state as scan xs/ys (cache copies)
+  REPRO_NO_HOIST_CAST=1   H2: re-cast fp32→bf16 every microbatch, fp32 grad RS
+"""
+import os
+
+NO_FLASH_VJP = bool(int(os.environ.get("REPRO_NO_FLASH_VJP", "0")))
+STATE_AS_XS = bool(int(os.environ.get("REPRO_STATE_AS_XS", "0")))
+NO_HOIST_CAST = bool(int(os.environ.get("REPRO_NO_HOIST_CAST", "0")))

@@ -1,0 +1,133 @@
+"""Blockwise (flash) attention forward — Pallas TPU kernel.
+
+TPU adaptation of FlashAttention (DESIGN.md §2): instead of CUDA
+shared-memory tiles and warp-level softmax reductions, q/k/v tiles stream
+HBM→VMEM via BlockSpecs and the online-softmax running stats (m, l) live in
+VMEM scratch; the MXU does the (bq×hd)·(hd×bkv) and (bq×bkv)·(bkv×hd) tile
+products. GQA is handled in the KV index_map (head → head // rep), so the
+repeated KV is never materialized.
+
+Supports causal masking with *block skipping* (out-of-horizon KV blocks are
+not even loaded — grid dimension is trimmed per q-block via the mask info
+scalar-prefetch) and sliding windows.
+
+Grid: (B, H, Sq/bq, Skv/bkv), KV innermost.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_off_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, sm_scale, causal, window,
+                  bq, bkv, kv_len):
+    kv_i = pl.program_id(3)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                   # (bq, hd)
+    k = k_ref[0, 0]                                   # (bkv, hd)
+    v = v_ref[0, 0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+
+    q_pos = q_off_ref[0] + pl.program_id(2) * bq + \
+        jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    k_pos = kv_i * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    vis = jnp.ones((bq, bkv), jnp.bool_)
+    if causal:
+        vis &= q_pos >= k_pos
+    if window:
+        vis &= (q_pos - k_pos) < window
+    s = jnp.where(vis, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.max(s, axis=-1)[:, None]              # (bq, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(vis, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)[:, None]
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kv_i == pl.num_programs(3) - 1)
+    def _store():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,    # (B, H, Sq, hd)
+    k: jax.Array,    # (B, Hkv, Skv, hd)
+    v: jax.Array,
+    *,
+    q_offset: int = 0,          # absolute position of q[..., 0, :] (CP chunk)
+    causal: bool = True,
+    window: int = 0,
+    sm_scale: float | None = None,
+    bq: int = 128,
+    bkv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, hd = q.shape
+    _, Hkv, Skv, _ = k.shape
+    rep = H // Hkv
+    bq = min(bq, Sq)
+    bkv = min(bkv, Skv)
+    assert Sq % bq == 0 and Skv % bkv == 0, (Sq, Skv, bq, bkv)
+    scale = sm_scale if sm_scale is not None else hd ** -0.5
+
+    grid = (B, H, Sq // bq, Skv // bkv)
+
+    def q_map(b, h, i, j, qo):
+        return (b, h, i, 0)
+
+    def kv_map(b, h, i, j, qo):
+        return (b, h // rep, j, 0)
+
+    def o_map(b, h, i, j, qo):
+        return (b, h, i, 0)
+
+    kern = functools.partial(
+        _flash_kernel, sm_scale=scale, causal=causal, window=window,
+        bq=bq, bkv=bkv, kv_len=Skv)
+
+    q_off = jnp.asarray([q_offset], jnp.int32)
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, bq, hd), q_map),
+                pl.BlockSpec((1, 1, bkv, hd), kv_map),
+                pl.BlockSpec((1, 1, bkv, hd), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, bq, hd), o_map),
+            scratch_shapes=[
+                pltpu.VMEM((bq, 1), jnp.float32),
+                pltpu.VMEM((bq, 1), jnp.float32),
+                pltpu.VMEM((bq, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q_off, q, k, v)

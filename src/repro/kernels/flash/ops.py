@@ -1,0 +1,18 @@
+"""jit'd wrapper for the flash kernel with CPU-interpret fallback."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash.flash import flash_attention
+
+
+def is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset"))
+def flash(q, k, v, *, q_offset=0, causal=True, window=0):
+    return flash_attention(q, k, v, q_offset=q_offset, causal=causal,
+                           window=window, interpret=not is_tpu())

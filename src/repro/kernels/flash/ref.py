@@ -1,0 +1,15 @@
+"""Oracle for the flash kernel: the pure-jnp blockwise core."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attn_core import blockwise_attention, naive_attention
+
+
+def flash_ref(q, k, v, *, q_offset=0, causal=True, window=0, sm_scale=None):
+    B, H, Sq, hd = q.shape
+    Skv = k.shape[2]
+    q_pos = jnp.broadcast_to(q_offset + jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    kv_pos = jnp.broadcast_to(jnp.arange(Skv, dtype=jnp.int32), (B, Skv))
+    return naive_attention(q, k, v, q_pos, kv_pos, causal=causal,
+                           window=window, sm_scale=sm_scale)

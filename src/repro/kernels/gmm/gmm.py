@@ -1,0 +1,92 @@
+"""Grouped matmul (GMM) Pallas TPU kernel — the MoE expert-compute hot spot.
+
+MegaBlocks-style: rows of ``x`` are tokens sorted/grouped by expert; each
+row-block multiplies the weight matrix of *its* expert. Expert selection is
+a scalar-prefetch array (``block_expert``: expert id per row-block), so the
+weight BlockSpec indexes the right expert's tile — no gather, no padding of
+the N-expert dimension, and every tile is an MXU-aligned dense matmul.
+
+Adaptation vs the CUDA original (DESIGN.md §2): MegaBlocks builds a
+block-sparse topology and launches CTAs per nonzero block; on TPU the
+systolic MXU wants a *dense per-tile schedule*, so we instead require each
+group's row-span to be a multiple of ``bm`` (the dispatcher's
+capacity-padded layout guarantees it) and stream tiles HBM→VMEM with a
+(K-major) accumulation loop.
+
+Grid: (M/bm, N/bn, K/bk) — K innermost for accumulation in a VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(block_expert, x_ref, w_ref, o_ref, acc_ref):
+    """x_ref: (bm, bk); w_ref: (1, bk, bn); o_ref: (bm, bn); acc: VMEM f32."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[0],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gmm(
+    x: jax.Array,            # (M, K) tokens grouped by expert
+    w: jax.Array,            # (E, K, N) expert weights
+    block_expert: jax.Array, # (M // bm,) int32 — expert id per row-block
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    M, K = x.shape
+    E, Kw, N = w.shape
+    assert K == Kw, (K, Kw)
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0, (M, K, N, bm, bk, bn)
+    assert block_expert.shape == (M // bm,)
+
+    grid = (M // bm, N // bn, K // bk)
+
+    def x_map(i, j, k, be):
+        return (i, k)
+
+    def w_map(i, j, k, be):
+        return (be[i], k, j)
+
+    def o_map(i, j, k, be):
+        return (i, j)
+
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), x_map),
+                pl.BlockSpec((1, bk, bn), w_map),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), o_map),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(block_expert, x, w)

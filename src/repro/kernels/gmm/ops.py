@@ -1,0 +1,45 @@
+"""jit'd wrappers: GMM-backed MoE expert FFN (drop-in for the dispatcher)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gmm.gmm import gmm
+from repro.models.common import activation as act_fn
+
+
+def _pick_bm(n_tok: int) -> int:
+    for bm in (128, 64, 32, 16, 8):
+        if n_tok % bm == 0:
+            return bm
+    return 1
+
+
+def expert_ffn_gmm(xe: jax.Array, w1: jax.Array, w2: jax.Array, w3: jax.Array,
+                   activation: str, *, interpret: bool = True) -> jax.Array:
+    """Dispatcher ``expert_fn`` backend using the Pallas GMM kernel.
+
+    xe: (E_local, N, D) capacity-grouped tokens — flattened to (E_local*N, D)
+    with uniform groups of N rows, which satisfies the kernel's
+    block-alignment requirement whenever N % bm == 0.
+    """
+    E, N, D = xe.shape
+    F = w1.shape[-1]
+    bm = _pick_bm(N)
+    if bm < 8 or D % 128 or F % 128:
+        # Shapes not MXU-tileable (smoke-size) — use the einsum path.
+        gate = jnp.einsum("end,edf->enf", xe, w1)
+        up = jnp.einsum("end,edf->enf", xe, w3)
+        return jnp.einsum("enf,efd->end", act_fn(activation, gate, up), w2)
+
+    x2 = xe.reshape(E * N, D)
+    be = jnp.repeat(jnp.arange(E, dtype=jnp.int32), N // bm,
+                    total_repeat_length=E * N // bm)
+    call = functools.partial(gmm, bm=bm, interpret=interpret)
+    gate = call(x2, w1, be)
+    up = call(x2, w3, be)
+    h = act_fn(activation, gate.reshape(E, N, F), up.reshape(E, N, F))
+    y = call(h.reshape(E * N, F), w2, be)
+    return y.reshape(E, N, D)

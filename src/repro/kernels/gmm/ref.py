@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the GMM kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gmm_ref(x: jax.Array, w: jax.Array, block_expert: jax.Array, *,
+            bm: int = 128, **_) -> jax.Array:
+    """y[i] = x[i] @ w[expert_of_block(i // bm)]."""
+    M, K = x.shape
+    E, _, N = w.shape
+    row_expert = jnp.repeat(block_expert, bm, total_repeat_length=M)  # (M,)
+    w_rows = w[row_expert]                                            # (M, K, N)
+    return jnp.einsum("mk,mkn->mn", x.astype(jnp.float32),
+                      w_rows.astype(jnp.float32)).astype(x.dtype)
+
+
+def group_sizes_to_block_expert(group_sizes: jax.Array, bm: int) -> jax.Array:
+    """Expert id per row-block for group-contiguous rows (sizes % bm == 0)."""
+    offsets = jnp.cumsum(group_sizes)
+    starts = jnp.arange(0, int(offsets[-1]), bm)
+    return jnp.searchsorted(offsets, starts, side="right").astype(jnp.int32)

@@ -1,0 +1,233 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) combo.
+
+For each pair this lowers the *real* step function — ``train_step`` (with
+optimizer + grad accumulation) for train_4k, the forward ``prefill_step``
+for prefill_32k, and the one-token ``serve_step`` for the decode shapes —
+onto the production mesh (16×16 single-pod; 2×16×16 multi-pod), compiles
+it, and records ``memory_analysis`` / roofline terms. No arrays are ever
+allocated: all inputs are ShapeDtypeStructs.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch dbrx-132b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun.jsonl]
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED, get_config
+from repro.configs.shapes import SHAPES, get_shape
+from repro.data.pipeline import make_batch_specs
+from repro.launch.mappings import model_for, pcfg_for
+from repro.launch.mesh import folded_production_mesh
+from repro.models.sharding import param_shardings
+from repro.models.transformer import init_decode_state, init_lm, model_cycle
+from repro.optim import adamw
+from repro.roofline.analysis import analyze, model_flops
+from repro.roofline.hlo_cost import hlo_cost
+from repro.serve.engine import (cache_len_for, make_prefill_step,
+                                make_serve_step, state_shardings)
+from repro.train.loop import batch_shardings, make_train_step
+
+
+def lower_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+               pcfg=None, shape=None, moe_factors=None):
+    """Build + lower the step for one (arch, shape). Returns (lowered, meta).
+
+    ``shape`` overrides the registry InputShape (scaling benchmarks);
+    sub-production worlds build a folded mesh over a device subset.
+    """
+    import numpy as _np
+    from repro.core.folding import build_folded_mesh as _bfm
+    cfg = model_for(arch, shape_name)
+    shape = shape or get_shape(shape_name)
+    pcfg = pcfg or pcfg_for(arch, shape_name, multi_pod=multi_pod)
+    if pcfg.world_size == (512 if multi_pod else 256) and moe_factors is None:
+        fm = folded_production_mesh(pcfg, multi_pod=multi_pod)
+    else:
+        fm = _bfm(pcfg, devices=_np.asarray(jax.devices())[:pcfg.world_size],
+                  moe_factors=moe_factors)
+
+    key = jax.random.PRNGKey(0)
+    params_sds = jax.eval_shape(lambda k: init_lm(k, cfg), key)
+    pshard = param_shardings(params_sds, fm, mode="store")
+    params_in = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        params_sds, pshard)
+
+    blocks, cycle = model_cycle(cfg)
+    n_rep = len(blocks) // len(cycle)
+    nmicro = max(pcfg.microbatch, 1)
+
+    if shape.kind == "train":
+        opt_sds = jax.eval_shape(adamw.init, params_sds)
+        oshard = adamw.AdamWState(step=NamedSharding(fm.mesh, P()),
+                                  mu=pshard, nu=pshard)
+        opt_in = jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            opt_sds, oshard)
+        batch_sds = make_batch_specs(cfg, shape.seq_len, shape.global_batch)
+        bshard = batch_shardings(cfg, fm)
+        batch_in = {k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=bshard.get(k))
+                    for k, v in batch_sds.items()}
+        step = make_train_step(cfg, fm, donate=True)
+        lowered = step.lower(params_in, opt_in, batch_in)
+        # microbatch outer scan (nmicro-1 trips; first is unrolled), layers inner
+        depth_factors = [max(nmicro - 1, 1), float(n_rep)] if nmicro > 1 \
+            else [float(n_rep)]
+    elif shape.kind == "prefill":
+        batch_sds = make_batch_specs(cfg, shape.seq_len, shape.global_batch)
+        batch_sds.pop("labels")
+        bshard = batch_shardings(cfg, fm)
+        batch_in = {k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=bshard.get(k))
+                    for k, v in batch_sds.items()}
+        step = jax.jit(make_prefill_step(cfg, fm),
+                       in_shardings=(pshard, {k: bshard.get(k) for k in batch_in}))
+        lowered = step.lower(params_in, batch_in)
+        depth_factors = [float(n_rep)]
+    else:  # decode
+        s_max = cache_len_for(cfg, shape.seq_len)
+        state_sds = jax.eval_shape(
+            lambda: init_decode_state(cfg, fm, shape.global_batch, s_max))
+        sshard = state_shardings(cfg, fm, state_sds)
+        state_in = jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            state_sds, sshard)
+        tok_shard = NamedSharding(fm.mesh, P(fm.axis("attn", "dp") or None, None))
+        tok_in = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32,
+                                      sharding=tok_shard)
+        step = jax.jit(make_serve_step(cfg, fm),
+                       in_shardings=(pshard, sshard, tok_shard),
+                       donate_argnums=(1,))
+        lowered = step.lower(params_in, state_in, tok_in)
+        depth_factors = [float(n_rep)]
+
+    meta = dict(arch=arch, shape=shape_name, multi_pod=multi_pod,
+                kind=shape.kind, chips=fm.mesh.devices.size,
+                pcfg=dict(attn=(pcfg.attn.dp, pcfg.attn.inner, pcfg.attn.tp),
+                          moe=(pcfg.moe.dp, pcfg.moe.inner, pcfg.moe.tp),
+                          pods=pcfg.pods, pod_role=pcfg.pod_role,
+                          microbatch=pcfg.microbatch),
+                depth_factors=depth_factors,
+                mesh=fm.describe())
+    return lowered, meta, cfg, shape
+
+
+def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+             pcfg=None, verbose: bool = True, shape=None,
+             moe_factors=None) -> Dict:
+    t0 = time.time()
+    lowered, meta, cfg, shape = lower_pair(arch, shape_name,
+                                           multi_pod=multi_pod, pcfg=pcfg,
+                                           shape=shape,
+                                           moe_factors=moe_factors)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    flops, hbm, bd = hlo_cost(hlo, meta["depth_factors"])
+    mf = model_flops(cfg, shape)
+    r = analyze(compiled, chips=meta["chips"], model_flops_total=mf,
+                hlo_text=hlo, depth_factors=meta["depth_factors"],
+                flops_override=flops, bytes_override=hbm)
+
+    rec = dict(meta)
+    rec.update(
+        ok=True,
+        t_lower_s=round(t_lower, 1), t_compile_s=round(t_compile, 1),
+        bytes_per_device=int(getattr(mem, "temp_size_in_bytes", 0) +
+                             getattr(mem, "argument_size_in_bytes", 0) +
+                             max(getattr(mem, "output_size_in_bytes", 0) -
+                                 getattr(mem, "alias_size_in_bytes", 0), 0)),
+        temp_bytes=int(getattr(mem, "temp_size_in_bytes", 0)),
+        arg_bytes=int(getattr(mem, "argument_size_in_bytes", 0)),
+        out_bytes=int(getattr(mem, "output_size_in_bytes", 0)),
+        flops_per_device=r.flops_per_device,
+        hbm_bytes_per_device=r.bytes_per_device,
+        collective_bytes_per_device=r.collective_bytes,
+        collective_per_kind=r.per_kind,
+        compute_s=r.compute_s, memory_s=r.memory_s,
+        collective_s=r.collective_s, dominant=r.dominant,
+        model_flops_total=mf,
+        useful_flops_ratio=(mf / (r.flops_per_device * meta["chips"])
+                            if r.flops_per_device else None),
+        mfu_bound=r.mfu_bound,
+    )
+    if verbose:
+        print(f"[{arch} × {shape_name} × "
+              f"{'2x16x16' if multi_pod else '16x16'}] "
+              f"compile={t_compile:.0f}s  mem/dev={rec['bytes_per_device']/2**30:.2f}GiB  "
+              f"compute={r.compute_s*1e3:.2f}ms memory={r.memory_s*1e3:.2f}ms "
+              f"collective={r.collective_s*1e3:.2f}ms → {r.dominant}-bound  "
+              f"MFU≤{(r.mfu_bound or 0)*100:.1f}%")
+        print("  memory_analysis:", mem)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else sorted(ASSIGNED)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("ok"):
+                        done.add((r["arch"], r["shape"], r["multi_pod"]))
+                except json.JSONDecodeError:
+                    pass
+
+    failures = []
+    for mp in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                if (arch, shape_name, mp) in done:
+                    print(f"skip {arch} × {shape_name} × mp={mp} (done)")
+                    continue
+                try:
+                    pc = None
+                    if args.microbatch is not None:
+                        pc = pcfg_for(arch, shape_name, multi_pod=mp,
+                                      microbatch=args.microbatch)
+                    rec = run_pair(arch, shape_name, multi_pod=mp, pcfg=pc)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    traceback.print_exc()
+                    rec = dict(arch=arch, shape=shape_name, multi_pod=mp,
+                               ok=False, error=f"{type(e).__name__}: {e}")
+                    failures.append((arch, shape_name, mp))
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("all dry-runs OK")
+
+
+if __name__ == "__main__":
+    main()

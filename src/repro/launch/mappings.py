@@ -1,0 +1,140 @@
+"""Per-(architecture × shape) parallelism mappings for the production mesh.
+
+This is the paper's tuning surface: attention gets (DP, CP, TP); the MoE
+layer gets an independent folded (EDP, EP, ETP). Choices follow the paper's
+findings — minimal model parallelism, EP over ETP (§4.4 finding 4), EP
+folded into the attention TP/CP atoms so the all-to-all stays in the
+high-bandwidth domain.
+
+All mappings target 256 chips/pod (16×16). ``multi_pod`` doubles the world
+via the pod axis: extra DP for train/prefill/decode-batch, extra CP
+(KV-cache sharding) for long_500k.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from repro.configs import get_config
+from repro.configs.base import (ModelConfig, ParallelConfig,
+                                ParallelMappingSpec as PM)
+from repro.configs.shapes import InputShape, get_shape
+
+SWA_WINDOW = 8192  # sliding window used to run long_500k on full-attention archs
+
+
+# (arch, shape) -> (attn (dp,cp,tp), moe (edp,ep,etp), microbatch)
+# Defaults chosen so every sharded dim divides (kv-heads % tp == 0 etc.)
+# and per-device memory fits 16 GB (validated by the dry-run).
+_TABLE: Dict[Tuple[str, str], Tuple[Tuple[int, int, int], Tuple[int, int, int], int]] = {
+    # ---- train_4k: B=256, S=4096 --------------------------------------
+    ("llama3.2-1b", "train_4k"):   ((64, 1, 4), (64, 1, 4), 2),
+    ("xlstm-125m", "train_4k"):    ((128, 1, 2), (128, 1, 2), 1),
+    ("codeqwen1.5-7b", "train_4k"): ((32, 1, 8), (32, 1, 8), 4),
+    ("zamba2-2.7b", "train_4k"):   ((64, 1, 4), (64, 1, 4), 2),
+    ("dbrx-132b", "train_4k"):     ((16, 2, 8), (16, 16, 1), 16),
+    ("qwen3-moe-30b-a3b", "train_4k"): ((64, 1, 4), (4, 64, 1), 4),
+    ("whisper-small", "train_4k"): ((64, 1, 4), (64, 1, 4), 1),
+    ("qwen1.5-4b", "train_4k"):    ((64, 1, 4), (64, 1, 4), 2),
+    ("gemma-7b", "train_4k"):      ((32, 1, 8), (32, 1, 8), 4),
+    ("qwen2-vl-7b", "train_4k"):   ((64, 1, 4), (64, 1, 4), 4),
+    # paper models (benchmarks)
+    ("mixtral-8x22b", "train_4k"): ((16, 2, 8), (16, 8, 2), 16),
+    ("mixtral-8x22b-g8t8", "train_4k"): ((16, 2, 8), (4, 64, 1), 16),
+    ("qwen2-57b-a14b", "train_4k"): ((64, 1, 4), (4, 64, 1), 8),
+    ("llama3-8x70b", "train_4k"):  ((16, 2, 8), (32, 8, 1), 16),
+    # ---- prefill_32k: B=32, S=32768 ------------------------------------
+    ("llama3.2-1b", "prefill_32k"):   ((32, 2, 4), (32, 2, 4), 0),
+    ("xlstm-125m", "prefill_32k"):    ((32, 4, 2), (32, 4, 2), 0),
+    ("codeqwen1.5-7b", "prefill_32k"): ((16, 2, 8), (16, 2, 8), 0),
+    ("zamba2-2.7b", "prefill_32k"):   ((32, 2, 4), (32, 2, 4), 0),
+    ("dbrx-132b", "prefill_32k"):     ((16, 2, 8), (16, 16, 1), 0),
+    ("qwen3-moe-30b-a3b", "prefill_32k"): ((32, 2, 4), (4, 64, 1), 0),
+    ("whisper-small", "prefill_32k"): ((32, 2, 4), (32, 2, 4), 0),
+    ("qwen1.5-4b", "prefill_32k"):    ((32, 2, 4), (32, 2, 4), 0),
+    ("gemma-7b", "prefill_32k"):      ((16, 2, 8), (16, 2, 8), 0),
+    ("qwen2-vl-7b", "prefill_32k"):   ((32, 2, 4), (32, 2, 4), 0),
+    # ---- decode_32k: B=128, S_cache=32768 -------------------------------
+    ("llama3.2-1b", "decode_32k"):   ((16, 2, 8), (16, 2, 8), 0),
+    ("xlstm-125m", "decode_32k"):    ((64, 2, 2), (64, 2, 2), 0),
+    ("codeqwen1.5-7b", "decode_32k"): ((16, 2, 8), (16, 2, 8), 0),
+    ("zamba2-2.7b", "decode_32k"):   ((16, 4, 4), (16, 4, 4), 0),
+    ("dbrx-132b", "decode_32k"):     ((16, 2, 8), (16, 16, 1), 0),
+    ("qwen3-moe-30b-a3b", "decode_32k"): ((16, 4, 4), (4, 64, 1), 0),
+    ("whisper-small", "decode_32k"): ((16, 4, 4), (16, 4, 4), 0),
+    ("qwen1.5-4b", "decode_32k"):    ((16, 4, 4), (16, 4, 4), 0),
+    ("gemma-7b", "decode_32k"):      ((16, 2, 8), (16, 2, 8), 0),
+    ("qwen2-vl-7b", "decode_32k"):   ((16, 4, 4), (16, 4, 4), 0),
+    # ---- long_500k: B=1, S_cache=524288 ---------------------------------
+    ("llama3.2-1b", "long_500k"):   ((1, 32, 8), (1, 32, 8), 0),
+    ("xlstm-125m", "long_500k"):    ((1, 128, 2), (1, 128, 2), 0),
+    ("codeqwen1.5-7b", "long_500k"): ((1, 32, 8), (1, 32, 8), 0),
+    ("zamba2-2.7b", "long_500k"):   ((1, 64, 4), (1, 64, 4), 0),
+    ("dbrx-132b", "long_500k"):     ((1, 32, 8), (16, 16, 1), 0),
+    ("qwen3-moe-30b-a3b", "long_500k"): ((1, 64, 4), (2, 128, 1), 0),
+    ("whisper-small", "long_500k"): ((1, 64, 4), (1, 64, 4), 0),
+    ("qwen1.5-4b", "long_500k"):    ((1, 64, 4), (1, 64, 4), 0),
+    ("gemma-7b", "long_500k"):      ((1, 32, 8), (1, 32, 8), 0),
+    ("qwen2-vl-7b", "long_500k"):   ((1, 64, 4), (1, 64, 4), 0),
+}
+
+
+def model_for(arch: str, shape_name: str) -> ModelConfig:
+    """Arch config, with the long_500k sub-quadratic variant applied."""
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        # Sliding-window variant makes decode O(window) (DESIGN.md §4).
+        cfg = dataclasses.replace(cfg, sliding_window=SWA_WINDOW)
+    return cfg
+
+
+def pcfg_for(arch: str, shape_name: str, *, multi_pod: bool = False,
+             ep_override: Optional[Tuple[int, int, int]] = None,
+             attn_override: Optional[Tuple[int, int, int]] = None,
+             microbatch: Optional[int] = None) -> ParallelConfig:
+    key = (arch, shape_name)
+    if key not in _TABLE:
+        raise KeyError(f"no mapping for {key}")
+    (adp, acp, atp), (edp, ep, etp), nmicro = _TABLE[key]
+    if attn_override:
+        adp, acp, atp = attn_override
+    if ep_override:
+        edp, ep, etp = ep_override
+    if microbatch is not None:
+        nmicro = microbatch
+    shape = get_shape(shape_name)
+    pod_role = "dp"
+    if multi_pod and shape.kind == "decode" and shape.global_batch < 2:
+        pod_role = "cp"  # B=1: shard the KV cache across pods instead
+    if multi_pod and pod_role == "dp" and shape.global_batch % (2 * adp):
+        # Batch can't absorb the pod factor — move it into CP instead.
+        if adp % 2 == 0 and shape.global_batch % adp == 0:
+            adp //= 2
+            acp *= 2
+        else:
+            pod_role = "cp"
+    return ParallelConfig(
+        attn=PM(dp=adp, inner=acp, tp=atp),
+        moe=PM(dp=edp, inner=ep, tp=etp),
+        pods=2 if multi_pod else 1,
+        pod_role=pod_role,
+        microbatch=nmicro,
+        fsdp=True,
+    )
+
+
+def unfolded_pcfg_for(arch: str, shape_name: str, **kw) -> ParallelConfig:
+    """Baseline: MoE forced to the attention mapping (no folding) —
+    EP limited to a sub-group of DP, as in pre-folding Megatron."""
+    p = pcfg_for(arch, shape_name, **kw)
+    cfg = get_config(arch)
+    if cfg.moe is None:
+        return p
+    # EP must divide both DP and n_experts; ETP = attention TP.
+    ep = 1
+    for cand in (16, 8, 4, 2):
+        if p.attn.dp % cand == 0 and cfg.moe.n_experts % cand == 0:
+            ep = cand
+            break
+    return dataclasses.replace(
+        p, moe=PM(dp=p.attn.dp // ep * p.attn.inner, inner=ep, tp=p.attn.tp))

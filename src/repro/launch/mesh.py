@@ -1,0 +1,39 @@
+"""Production mesh factory (spec-fixed) + folded-mesh derivation."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ParallelConfig
+from repro.core.folding import FoldedMesh, build_folded_mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The production mesh: 16×16 per pod, 2 pods when ``multi_pod``."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def folded_production_mesh(pcfg: ParallelConfig, *, multi_pod: bool = False) -> FoldedMesh:
+    """Refine the production mesh into the folded mesh for ``pcfg``.
+
+    Device order of the production mesh is preserved — the refined mesh is
+    the same physical layout with atomic axis naming (DESIGN.md §5).
+    """
+    base = make_production_mesh(multi_pod=multi_pod)
+    want = pcfg.world_size
+    have = base.devices.size
+    if want != have:
+        raise ValueError(
+            f"ParallelConfig world_size {want} != production mesh size {have} "
+            f"({pcfg})"
+        )
+    return build_folded_mesh(pcfg, devices=np.asarray(base.devices))
+
+
+def local_folded_mesh(pcfg: ParallelConfig, devices: Optional[list] = None) -> FoldedMesh:
+    """Folded mesh over local devices (tests / smoke runs)."""
+    return build_folded_mesh(pcfg, devices=np.asarray(devices if devices is not None else jax.devices()))

@@ -1,0 +1,48 @@
+"""Serving launcher.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced
+
+Without ``--reduced``, dry-run-compiles the decode step for the production
+mesh (decode_32k shape) and prints the analysis.
+"""
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="decode_32k",
+                    choices=["decode_32k", "long_500k"])
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    if not args.reduced:
+        from repro.launch.dryrun import run_pair
+        run_pair(args.arch, args.shape, multi_pod=args.multi_pod)
+        return
+
+    import os
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    import jax
+    import numpy as np
+    from repro.configs import get_config, reduced
+    from repro.configs.base import ParallelConfig, ParallelMappingSpec as PM
+    from repro.core.folding import build_folded_mesh
+    from repro.serve.engine import build_session
+
+    cfg = reduced(get_config(args.arch))
+    fm = build_folded_mesh(ParallelConfig(attn=PM(2, 2, 2), moe=PM(2, 2, 2)))
+    sess = build_session(jax.random.PRNGKey(0), cfg, fm, batch=args.batch,
+                         s_max=64)
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (args.batch, 8)).astype(np.int32)
+    out = sess.generate(prompts, n_tokens=args.tokens)
+    print("generated:", out.tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-moe-30b-a3b \
+        --steps 50 --reduced --seq 128 --batch 8
+
+``--reduced`` runs the smoke-sized variant on host devices (the only real
+execution possible in this CPU container); without it the full config is
+*lowered and compiled* for the production mesh and the launcher prints the
+dry-run analysis instead of executing (no TPU attached).
+"""
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    if not args.reduced:
+        # Production path: dry-run compile + report (no TPU in container).
+        from repro.launch.dryrun import run_pair
+        run_pair(args.arch, "train_4k", multi_pod=args.multi_pod)
+        return
+
+    import os
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    import jax
+    from repro.checkpoint import store
+    from repro.configs import get_config, reduced
+    from repro.configs.base import ParallelConfig, ParallelMappingSpec as PM
+    from repro.core.folding import build_folded_mesh
+    from repro.data.pipeline import DataConfig, SyntheticTokens, materialize_batch
+    from repro.optim import adamw
+    from repro.train.loop import (batch_shardings, init_train_state,
+                                  make_train_step)
+
+    cfg = reduced(get_config(args.arch))
+    moe = PM(1, 8, 1) if cfg.moe is not None else PM(2, 2, 2)
+    fm = build_folded_mesh(ParallelConfig(attn=PM(2, 2, 2), moe=moe))
+    params, opt = init_train_state(jax.random.PRNGKey(0), cfg, fm)
+    step = make_train_step(cfg, fm, adamw.AdamWConfig(
+        lr=args.lr, warmup_steps=10, decay_steps=args.steps))
+    data = SyntheticTokens(DataConfig(seq_len=args.seq,
+                                      global_batch=args.batch,
+                                      vocab_size=cfg.vocab_size))
+    bs = batch_shardings(cfg, fm)
+    t0 = time.time()
+    for i, nb in zip(range(args.steps), data):
+        nb = materialize_batch(cfg, nb)
+        batch = {k: jax.device_put(v, bs[k]) for k, v in nb.items() if k in bs}
+        params, opt, m = step(params, opt, batch)
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss={float(m['loss']):.4f} "
+                  f"gnorm={float(m['grad_norm']):.2f} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+        if args.ckpt_dir and (i + 1) % 50 == 0:
+            store.save(args.ckpt_dir, i + 1, {"params": params})
+
+
+if __name__ == "__main__":
+    main()

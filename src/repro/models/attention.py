@@ -1,0 +1,210 @@
+"""GQA attention layer with TP/CP sharding (GSPMD) + CP-sharded decode.
+
+Training/prefill forward uses GSPMD: activations enter sequence-sharded over
+(CP×TP) atoms (Megatron sequence-parallel layout); constraints drive the
+AG(seq→tp) / RS pattern. KV is gathered over CP (allgather-KV context
+parallelism) and attention runs blockwise (flash-style scan).
+
+Decode runs one token against a CP-sharded KV cache via ``shard_map`` with
+log-sum-exp partial combination across the CP atoms (flash-decode).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.folding import FoldedMesh
+from repro.models.attn_core import blockwise_attention
+from repro.models.common import apply_mrope, apply_rope, dense_init
+from repro.models.sharding import constrain, wconstrain
+
+Array = jax.Array
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, Array]:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.q_dim, dtype=dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.kv_dim, dtype=dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.kv_dim, dtype=dtype),
+        "wo": dense_init(ks[3], cfg.q_dim, cfg.d_model, dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dtype)
+    return p
+
+
+def _apply_positional(x: Array, pos: Array, cfg: ModelConfig) -> Array:
+    if cfg.rope_kind == "rope":
+        return apply_rope(x, pos, cfg.rope_theta)
+    if cfg.rope_kind == "mrope":
+        if pos.ndim == x.ndim - 2:  # plain (B, S) ids → same stream 3×
+            pos = jnp.broadcast_to(pos[..., None], pos.shape + (3,))
+        hd = cfg.resolved_head_dim
+        base = hd // 2
+        sections = (base - 2 * (base * 3 // 8), base * 3 // 8, base * 3 // 8)
+        return apply_mrope(x, pos, cfg.rope_theta, sections=sections)
+    return x
+
+
+def _project_qkv(p, x, x_kv, pos, kv_pos, cfg, fm) -> Tuple[Array, Array, Array]:
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    wq = wconstrain(p["wq"].astype(x.dtype), fm, "fsdp", "tp")
+    wk = wconstrain(p["wk"].astype(x.dtype), fm, "fsdp", "tp")
+    wv = wconstrain(p["wv"].astype(x.dtype), fm, "fsdp", "tp")
+    q = jnp.einsum("bsd,dh->bsh", x, wq)
+    k = jnp.einsum("bsd,dh->bsh", x_kv, wk)
+    v = jnp.einsum("bsd,dh->bsh", x_kv, wv)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, x_kv.shape[1], cfg.n_kv_heads, hd)
+    v = v.reshape(B, x_kv.shape[1], cfg.n_kv_heads, hd)
+    if cfg.rope_kind != "none":
+        q = _apply_positional(q, pos, cfg)
+        k = _apply_positional(k, kv_pos, cfg)
+    return q, k, v
+
+
+def attention(
+    p: Dict[str, Array],
+    x: Array,
+    pos: Array,
+    cfg: ModelConfig,
+    fm: FoldedMesh,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    cross_x: Optional[Array] = None,
+    cross_pos: Optional[Array] = None,
+    block_kv: int = 1024,
+) -> Array:
+    """x: (B, S, D) sharded (dp, cp×tp, -). Returns same layout."""
+    # Sequence-parallel AG over TP atoms: seq stays CP-sharded for compute.
+    x = constrain(x, fm, "attn", "dp", "cp", None)
+    x_kv = x if cross_x is None else constrain(cross_x, fm, "attn", "dp", None, None)
+    kv_pos = pos if cross_x is None else cross_pos
+    q, k, v = _project_qkv(p, x, x_kv, pos, kv_pos, cfg, fm)
+
+    q = constrain(q, fm, "attn", "dp", "cp", "tp", None).transpose(0, 2, 1, 3)
+    # allgather-KV context parallelism: gather K/V (and their positions) over CP.
+    k = constrain(k.transpose(0, 2, 1, 3), fm, "attn", "dp", "tp", None, None)
+    v = constrain(v.transpose(0, 2, 1, 3), fm, "attn", "dp", "tp", None, None)
+    # Mask positions: the temporal stream for M-RoPE, the ids otherwise.
+    mask_pos = pos[..., 0] if pos.ndim == 3 else pos
+    mask_kv = kv_pos[..., 0] if kv_pos.ndim == 3 else kv_pos
+    kv_pos_full = (constrain(mask_kv, fm, "attn", "dp", None)
+                   if cross_x is None else mask_kv)
+
+    out = blockwise_attention(q, k, v, mask_pos, kv_pos_full, causal=causal,
+                              window=window or cfg.sliding_window,
+                              block_kv=block_kv)
+    # Pin the head-sharded layout here so the backward cotangent enters the
+    # flash VJP sharded over TP (otherwise GSPMD gathers full-head scores).
+    out = constrain(out, fm, "attn", "dp", "tp", "cp", None)
+    out = out.transpose(0, 2, 1, 3)  # (B, S, H, hd)
+    B, S = out.shape[:2]
+    out = out.reshape(B, S, cfg.q_dim)
+    wo = wconstrain(p["wo"].astype(out.dtype), fm, "tp", "fsdp")
+    y = jnp.einsum("bsh,hd->bsd", out, wo)
+    return constrain(y, fm, "attn", "dp", ("cp", "tp"), None)
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token, CP-sharded KV cache)
+# ---------------------------------------------------------------------------
+
+def attention_decode(
+    p: Dict[str, Array],
+    x: Array,
+    cache_k: Array,
+    cache_v: Array,
+    step: Array,
+    cfg: ModelConfig,
+    fm: FoldedMesh,
+    *,
+    window: int = 0,
+) -> Tuple[Array, Array, Array]:
+    """One decode step.
+
+    ``x``: (B, 1, D); ``cache_k/v``: (B, Hkv, S_max, hd) sharded
+    (dp, tp, cp, -); ``step``: scalar int32 — current position (uniform
+    across the batch). Returns (y, new_cache_k, new_cache_v).
+    """
+    hd = cfg.resolved_head_dim
+    B = x.shape[0]
+    S_max = cache_k.shape[2]
+    window = window or cfg.sliding_window
+
+    pos = jnp.full((B, 1), step, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, x, pos, pos, cfg, fm)
+    q = q.transpose(0, 2, 1, 3)                       # (B, H, 1, hd)
+    k_new = k_new.transpose(0, 2, 1, 3)               # (B, Hkv, 1, hd)
+    v_new = v_new.transpose(0, 2, 1, 3)
+
+    # Ring-buffer insert for sliding windows; plain insert otherwise.
+    slot = step % S_max if window else jnp.minimum(step, S_max - 1)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype),
+                                           (0, 0, slot, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype),
+                                           (0, 0, slot, 0))
+
+    dp_a = fm.axis("attn", "dp") or None
+    cp_a = fm.axis("attn", "cp")
+    tp_a = fm.axis("attn", "tp")
+    tp_q = tp_a if (tp_a and cfg.n_heads % fm.tp == 0) else None
+    tp_kv = tp_a if (tp_a and cfg.n_kv_heads % fm.tp == 0) else None
+    if tp_q and not tp_kv:
+        # Manual GQA slicing across replicated KV is not supported; keep q
+        # replicated too (config validation steers away from this).
+        tp_q = None
+
+    # Cache slot positions: slot index -> absolute position.
+    slots = jnp.arange(S_max, dtype=jnp.int32)
+    if window:
+        # Most recent absolute position congruent to the slot (mod S_max).
+        cand = step - ((step - slots) % S_max)
+        kvp = jnp.where(cand >= 0, cand, step + 1)  # unwritten slot → causal-masked
+    else:
+        kvp = slots                                  # slots beyond step are causal-masked
+    kv_pos = jnp.broadcast_to(kvp, (B, S_max))
+
+    def local(q_l, k_l, v_l, pos_l, kvp_l):
+        acc, m, l = blockwise_attention(
+            q_l, k_l, v_l, pos_l, kvp_l, causal=True, window=window,
+            block_kv=min(1024, k_l.shape[2]), return_partial=True)
+        if cp_a:
+            m_g = jax.lax.pmax(m, cp_a)
+            scale = jnp.exp(m - m_g)
+            l = jax.lax.psum(l * scale, cp_a)
+            acc = jax.lax.psum(acc * scale[..., None], cp_a)
+        return (acc / jnp.maximum(l[..., None], 1e-30)).astype(q_l.dtype)
+
+    out = jax.shard_map(
+        local,
+        mesh=fm.mesh,
+        in_specs=(
+            P(dp_a, tp_q, None, None),
+            P(dp_a, tp_kv, cp_a or None, None),
+            P(dp_a, tp_kv, cp_a or None, None),
+            P(dp_a, None),
+            P(dp_a, cp_a or None),
+        ),
+        out_specs=P(dp_a, tp_q, None, None),
+        check_vma=False,
+    )(q, cache_k, cache_v, pos, kv_pos)
+
+    out = out.transpose(0, 2, 1, 3).reshape(B, 1, cfg.q_dim)
+    wo = wconstrain(p["wo"].astype(out.dtype), fm, "tp", "fsdp")
+    y = jnp.einsum("bsh,hd->bsd", out, wo)
+    return constrain(y, fm, "attn", "dp", None, None), cache_k, cache_v

@@ -1,0 +1,205 @@
+"""Blockwise (flash-style) attention in pure JAX with a flash backward.
+
+Forward: online-softmax over KV blocks via ``lax.scan`` — O(S·block)
+memory — and it lowers on every backend, so the multi-pod dry-run sees real
+FLOPs. The Pallas TPU kernel (`repro.kernels.flash`) implements the same
+contract and uses this module as its oracle.
+
+Backward: a custom VJP in the FlashAttention style — recompute each KV
+block's probabilities from the saved LSE and accumulate dq/dk/dv blockwise.
+Without it, autodiff of the forward scan stacks every block's fp32 score
+tensor (a full S×S save per layer), which both blows past HBM and floods
+the roofline memory term.
+
+GQA is handled by repeating KV to the full head count *before* the core —
+keeping one flat head axis means TP sharding of heads never forces the
+(Hkv, rep) resharding thrash GSPMD otherwise inserts inside the scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _mask_block(q_pos: Array, kv_pos: Array, *, causal: bool, window: int) -> Array:
+    """(..., Sq) x (..., block) -> (..., Sq, block) boolean visibility."""
+    d = q_pos[..., :, None] - kv_pos[..., None, :]
+    m = jnp.ones(d.shape, bool)
+    if causal:
+        m &= d >= 0
+    if window:
+        m &= d < window
+    return m
+
+
+def _pick_block(skv: int, want: int) -> int:
+    for b in range(min(want, skv), 0, -1):
+        if skv % b == 0:
+            return b
+    return skv
+
+
+def _fwd_scan(q, k, v, q_pos, kv_pos, *, causal, window, block_kv, scale):
+    """Flat-head forward. Returns (out_f32_unnormalized? no — normalized out, lse)."""
+    B, H, Sq, hd = q.shape
+    Skv = k.shape[2]
+    n_blocks = Skv // block_kv
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, hd), jnp.float32)
+
+    def step(carry, idx):
+        m, l, acc = carry
+        kb = jax.lax.dynamic_slice_in_dim(k, idx * block_kv, block_kv, axis=2)
+        vb = jax.lax.dynamic_slice_in_dim(v, idx * block_kv, block_kv, axis=2)
+        pb = jax.lax.dynamic_slice_in_dim(kv_pos, idx * block_kv, block_kv, axis=-1)
+        # Mixed-precision dots (bf16 operands, f32 accumulation) instead of
+        # casting K/V blocks: XLA hoists per-block `astype(f32)` into a
+        # whole-cache convert inside the layer loop (§Perf H1b).
+        s = jnp.einsum("bhsd,bhtd->bhst", q, kb,
+                       preferred_element_type=jnp.float32) * scale
+        vis = _mask_block(q_pos[:, None, :], pb[:, None, :],
+                          causal=causal, window=window)
+        s = jnp.where(vis, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.where(vis, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhst,bhtd->bhsd", p.astype(v.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(n_blocks))
+    lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), jnp.float32(1e30))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out, lse, m, l, acc
+
+
+@functools.lru_cache(maxsize=None)
+def _flash_flat(causal: bool, window: int, block_kv: int, scale: float):
+    """custom_vjp'd flat-head attention (H == Hkv), config closed over."""
+
+    @jax.custom_vjp
+    def attn(q, k, v, q_pos, kv_pos):
+        out, _, _, _, _ = _fwd_scan(q, k, v, q_pos, kv_pos, causal=causal,
+                                    window=window, block_kv=block_kv,
+                                    scale=scale)
+        return out.astype(q.dtype)
+
+    def fwd(q, k, v, q_pos, kv_pos):
+        out, lse, _, _, _ = _fwd_scan(q, k, v, q_pos, kv_pos, causal=causal,
+                                      window=window, block_kv=block_kv,
+                                      scale=scale)
+        out = out.astype(q.dtype)
+        return out, (q, k, v, q_pos, kv_pos, out, lse)
+
+    def bwd(res, dout):
+        q, k, v, q_pos, kv_pos, out, lse = res
+        B, H, Sq, hd = q.shape
+        Skv = k.shape[2]
+        n_blocks = Skv // block_kv
+        qf = q          # stays bf16: cache-sized dots must be homogeneous
+        do = dout       # (see H1b) — f32 accumulation via preferred_element_type
+        delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                        axis=-1)                                  # (B,H,Sq)
+
+        def step(dq, idx):
+            kb = jax.lax.dynamic_slice_in_dim(k, idx * block_kv, block_kv,
+                                              axis=2)
+            vb = jax.lax.dynamic_slice_in_dim(v, idx * block_kv, block_kv,
+                                              axis=2)
+            pb = jax.lax.dynamic_slice_in_dim(kv_pos, idx * block_kv,
+                                              block_kv, axis=-1)
+            s = jnp.einsum("bhsd,bhtd->bhst", qf, kb,
+                           preferred_element_type=jnp.float32) * scale
+            vis = _mask_block(q_pos[:, None, :], pb[:, None, :],
+                              causal=causal, window=window)
+            p = jnp.where(vis, jnp.exp(s - lse[..., None]), 0.0)  # (B,H,Sq,t)
+            dv_b = jnp.einsum("bhst,bhsd->bhtd", p, do,
+                              preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bhsd,bhtd->bhst", do, vb,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - delta[..., None]) * scale
+            dk_b = jnp.einsum("bhst,bhsd->bhtd", ds, qf,
+                              preferred_element_type=jnp.float32)
+            dq = dq + jnp.einsum("bhst,bhtd->bhsd", ds.astype(k.dtype), kb,
+                                 preferred_element_type=jnp.float32)
+            return dq, (dk_b, dv_b)
+
+        dq0 = jnp.zeros((B, H, Sq, hd), jnp.float32)
+        dq, (dk_blocks, dv_blocks) = jax.lax.scan(step, dq0,
+                                                  jnp.arange(n_blocks))
+        dk = dk_blocks.transpose(1, 2, 0, 3, 4).reshape(B, H, Skv, hd)
+        dv = dv_blocks.transpose(1, 2, 0, 3, 4).reshape(B, H, Skv, hd)
+        zero_pos = lambda x: np.zeros(x.shape, dtype=jax.dtypes.float0)
+        return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+                zero_pos(q_pos), zero_pos(kv_pos))
+
+    attn.defvjp(fwd, bwd)
+    return attn
+
+
+def blockwise_attention(
+    q: Array, k: Array, v: Array,
+    q_pos: Array, kv_pos: Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_kv: int = 1024,
+    sm_scale: Optional[float] = None,
+    return_partial: bool = False,
+) -> Array | Tuple[Array, Array, Array]:
+    """q: (B, H, Sq, hd); k/v: (B, Hkv, Skv, hd); *_pos: (B, S*) int32.
+
+    With ``return_partial``, returns the un-normalized ``(acc, m, l)``
+    triple for cross-device LSE combination (context-parallel decode).
+    """
+    B, H, Sq, hd = q.shape
+    _, Hkv, Skv, _ = k.shape
+    rep = H // Hkv
+    if rep > 1:  # flat-head GQA: repeat KV (sharding-friendly, see module doc)
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = sm_scale if sm_scale is not None else hd ** -0.5
+    block = _pick_block(Skv, block_kv)
+
+    if return_partial:
+        _, _, m, l, acc = _fwd_scan(q, k, v, q_pos, kv_pos, causal=causal,
+                                    window=window, block_kv=block, scale=scale)
+        return acc, m, l
+
+    from repro import flags
+    if flags.NO_FLASH_VJP:  # §Perf H0 baseline: autodiff the fwd scan
+        out, _, _, _, _ = _fwd_scan(q, k, v, q_pos, kv_pos, causal=causal,
+                                    window=window, block_kv=block, scale=scale)
+        return out.astype(q.dtype)
+    fn = _flash_flat(bool(causal), int(window), int(block), float(scale))
+    return fn(q, k, v, q_pos.astype(jnp.int32), kv_pos.astype(jnp.int32))
+
+
+def naive_attention(q, k, v, q_pos, kv_pos, *, causal=True, window=0,
+                    sm_scale=None) -> Array:
+    """O(S²)-memory oracle for tests."""
+    B, H, Sq, hd = q.shape
+    Hkv = k.shape[1]
+    rep = H // Hkv
+    scale = sm_scale if sm_scale is not None else hd ** -0.5
+    qg = q.reshape(B, Hkv, rep, Sq, hd).astype(jnp.float32)
+    s = jnp.einsum("bgrsd,bgtd->bgrst", qg, k.astype(jnp.float32)) * scale
+    vis = _mask_block(q_pos[:, None, None, :], kv_pos[:, None, None, :],
+                      causal=causal, window=window)
+    s = jnp.where(vis, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(vis, p, 0.0)
+    out = jnp.einsum("bgrst,bgtd->bgrsd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, Sq, hd).astype(q.dtype)

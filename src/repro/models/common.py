@@ -1,0 +1,117 @@
+"""Shared building blocks: norms, RoPE/M-RoPE, initializers, losses."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dense_init(key, d_in: int, d_out: int, *, scale: Optional[float] = None,
+               dtype=jnp.float32) -> Array:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), dtype) * scale
+
+
+def rmsnorm(x: Array, w: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x: Array, w: Array, b: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def norm_apply(kind: str, x: Array, p: dict) -> Array:
+    if kind == "layernorm":
+        return layernorm(x, p["w"], p["b"])
+    return rmsnorm(x, p["w"])
+
+
+def norm_init(kind: str, d: int) -> dict:
+    if kind == "layernorm":
+        return {"w": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+    return {"w": jnp.zeros((d,), jnp.float32)}  # rmsnorm stores (scale - 1)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # (..., S, 1, hd/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, positions_3d: Array, theta: float,
+                sections: Tuple[int, int, int] = (16, 24, 24)) -> Array:
+    """Qwen2-VL multimodal RoPE.
+
+    ``positions_3d``: (..., S, 3) — (temporal, height, width) position ids.
+    Frequency channels are split into three sections, each rotated by its
+    own position stream [arXiv:2409.12191].
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)                          # (hd/2,)
+    # Section ownership per frequency channel.
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=hd // 2)
+    pos = jnp.take_along_axis(
+        positions_3d.astype(jnp.float32),
+        jnp.broadcast_to(sec_id, positions_3d.shape[:-1] + (hd // 2,)).astype(jnp.int32),
+        axis=-1,
+    )                                                       # (..., S, hd/2)
+    ang = pos * freqs
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def activation(kind: str, gate: Array, up: Optional[Array] = None) -> Array:
+    if kind == "swiglu":
+        return jax.nn.silu(gate) * up
+    if kind == "geglu":
+        return jax.nn.gelu(gate, approximate=True) * up
+    if kind == "gelu":
+        return jax.nn.gelu(gate, approximate=True)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits: Array, labels: Array, mask: Optional[Array] = None
+                          ) -> Tuple[Array, Array]:
+    """Mean token cross-entropy. logits (..., V) any dtype; stable in fp32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    total = jnp.sum(nll * mask)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return total / denom, denom

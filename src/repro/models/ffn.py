@@ -1,0 +1,41 @@
+"""Dense feed-forward layers (SwiGLU / GeGLU / GeLU) with TP sharding."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.folding import FoldedMesh
+from repro.models.common import activation as act_fn
+from repro.models.common import dense_init
+from repro.models.sharding import constrain, wconstrain
+
+Array = jax.Array
+
+
+def init_ffn(key, cfg: ModelConfig, d_ff: int = 0, dtype=jnp.float32) -> Dict[str, Array]:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_gate": dense_init(ks[0], cfg.d_model, d_ff, dtype=dtype),
+        "w_down": dense_init(ks[1], d_ff, cfg.d_model, dtype=dtype),
+    }
+    if cfg.activation in ("swiglu", "geglu"):
+        p["w_up"] = dense_init(ks[2], cfg.d_model, d_ff, dtype=dtype)
+    return p
+
+
+def ffn(p: Dict[str, Array], x: Array, cfg: ModelConfig, fm: FoldedMesh) -> Array:
+    """x: (B, S, D) sharded (dp, cp×tp, -). Column/row-parallel FFN."""
+    x = constrain(x, fm, "attn", "dp", "cp", None)
+    gate = jnp.einsum("bsd,df->bsf", x, wconstrain(p["w_gate"].astype(x.dtype), fm, "fsdp", "tp"))
+    gate = constrain(gate, fm, "attn", "dp", "cp", "tp")
+    up = None
+    if "w_up" in p:
+        up = jnp.einsum("bsd,df->bsf", x, wconstrain(p["w_up"].astype(x.dtype), fm, "fsdp", "tp"))
+        up = constrain(up, fm, "attn", "dp", "cp", "tp")
+    h = act_fn(cfg.activation, gate, up)
+    y = jnp.einsum("bsf,fd->bsd", h, wconstrain(p["w_down"].astype(x.dtype), fm, "tp", "fsdp"))
+    return constrain(y, fm, "attn", "dp", ("cp", "tp"), None)

@@ -1,0 +1,139 @@
+"""Logical-axis sharding rules (MaxText-style) resolved on the folded mesh.
+
+Every parameter leaf path is matched against ``RULES``; the rule's symbols
+are resolved to atom tuples of the :class:`FoldedMesh`. Two modes:
+
+* ``store``   — at-rest sharding: FSDP/ZeRO-3 axes active (params + optimizer
+  state sharded over the data-parallel atoms as well).
+* ``compute`` — the sharding a layer consumes: FSDP axes dropped (GSPMD
+  inserts the per-layer all-gather inside the scan; its reverse becomes the
+  gradient reduce-scatter).
+
+Symbols: ``tp`` (attention tensor axes), ``fsdp`` (attention DP atoms),
+``ep``/``etp``/``efsdp`` (MoE-side), ``None``.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.folding import FoldedMesh
+
+# (path-regex, per-dim symbols for the *trailing* dims of the leaf).
+# Leading dims (layer-stacking) are padded with None.
+RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    (r"embed$",                 ("tp", "fsdp")),       # (V, D)
+    (r"pos_embed$",             (None, None)),
+    (r"(wq|wk|wv)$",            ("fsdp", "tp")),       # (D, H*hd)
+    (r"(bq|bk|bv)$",            ("tp",)),
+    (r"wqkv$",                  ("fsdp", "tp")),
+    (r"wo$",                    ("tp", "fsdp")),       # (H*hd, D)
+    (r"(w_gate|w_up)$",         ("fsdp", "tp")),       # dense FFN (D, F)
+    (r"w_down$",                ("tp", "fsdp")),       # (F, D)
+    (r"router$",                (None, None)),         # (D, E) tiny, replicated
+    (r"experts/w[13]$",         ("ep", "efsdp", "etp")),  # (E, D, F)
+    (r"experts/w2$",            ("ep", "etp", "efsdp")),  # (E, F, D)
+    (r"lm_head$",               ("fsdp", "tp")),       # (D, V)
+    # SSM / xLSTM weights: input-dim FSDP, inner-dim TP.
+    (r"(w_in|w_x|w_z|w_bc|w_dt|wi|wf|wo_gate|w_qkv_lstm)$", ("fsdp", "tp")),
+    (r"(w_out_ssm|w_proj_down)$", ("tp", "fsdp")),
+    (r"(a_log|dt_bias|d_skip)$", ("tp",)),
+    (r"(conv_w)$",              (None, None, "tp")),
+    (r".*",                     ()),                   # norms/scalars: replicated
+)
+
+
+def _resolve(symbol: Optional[str], fm: FoldedMesh, mode: str):
+    if symbol is None:
+        return None
+    if symbol == "tp":
+        return fm.axis("attn", "tp") or None
+    if symbol == "ep":
+        return fm.axis("moe", "ep") or None
+    if symbol == "etp":
+        return fm.axis("moe", "etp") or None
+    if symbol == "fsdp":
+        if mode == "compute" or not fm.pcfg.fsdp:
+            return None
+        return fm.axis("attn", "dp") or None
+    if symbol == "efsdp":
+        if mode == "compute" or not fm.pcfg.fsdp:
+            return None
+        return fm.axis("moe", "edp") or None
+    raise ValueError(symbol)
+
+
+def spec_for_path(path: str, ndim: int, fm: FoldedMesh, mode: str) -> P:
+    for pat, symbols in RULES:
+        if re.search(pat, path):
+            symbols = symbols[:ndim]
+            pad = ndim - len(symbols)
+            entries = [None] * pad + [_resolve(s, fm, mode) for s in symbols]
+            # A dim can't be sharded if not divisible — fall back to replicated
+            return P(*entries)
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _shape_of(leaf):
+    return leaf.shape if hasattr(leaf, "shape") else ()
+
+
+def _safe_spec(spec: P, shape, fm: FoldedMesh) -> P:
+    """Drop axes that don't divide the dim (e.g. kv-heads < tp)."""
+    import math
+    spec = tuple(spec) + (None,) * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, spec):
+        if entry is None:
+            out.append(None)
+            continue
+        atoms = (entry,) if isinstance(entry, str) else tuple(entry)
+        size = math.prod(fm.mesh.shape[a] for a in atoms)
+        out.append(entry if size and dim % size == 0 else None)
+    return P(*out)
+
+
+def param_specs(params, fm: FoldedMesh, mode: str = "store"):
+    """Pytree of PartitionSpec mirroring ``params`` (arrays or ShapeDtypeStruct)."""
+    def one(path, leaf):
+        p = _path_str(path)
+        spec = spec_for_path(p, len(_shape_of(leaf)), fm, mode)
+        return _safe_spec(spec, _shape_of(leaf), fm)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(params, fm: FoldedMesh, mode: str = "store"):
+    return jax.tree.map(lambda s: NamedSharding(fm.mesh, s),
+                        param_specs(params, fm, mode))
+
+
+def constrain(x, fm: FoldedMesh, side: str, *dims):
+    """with_sharding_constraint via logical axis names."""
+    return jax.lax.with_sharding_constraint(x, fm.sharding(side, *dims))
+
+
+def wconstrain(w, fm: FoldedMesh, *symbols: Optional[str]):
+    """Constrain a weight to its *compute* sharding (FSDP atoms gathered).
+
+    This is the ZeRO-3 per-layer gather point: store-mode params keep the
+    FSDP axis; inside the layer we constrain to the compute spec, and GSPMD
+    materializes the all-gather (reverse = gradient reduce-scatter).
+    """
+    entries = [_resolve(s, fm, "compute") for s in symbols]
+    spec = _safe_spec(P(*entries), w.shape, fm)
+    return jax.lax.with_sharding_constraint(w, NamedSharding(fm.mesh, spec))

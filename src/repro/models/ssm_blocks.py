@@ -1,0 +1,341 @@
+"""SSM-family blocks: Mamba2 (chunked SSD), mLSTM and sLSTM (xLSTM).
+
+Mamba2 and mLSTM share one **chunked decay-scan** primitive — the SSD
+block-parallel form (intra-chunk quadratic on the MXU, inter-chunk state
+carry). sLSTM is inherently sequential (hidden-state → gate dependency) and
+runs as a time scan.
+
+TP shards the *head* dimension everywhere: heads are independent in all
+three cells, so head-parallelism needs no collectives inside the cell
+(the in/out projections carry the usual column/row-parallel pattern).
+Sequence stays unsharded inside SSM blocks — recurrent state makes CP a
+serializing dimension, so SSM-arch configs fold those atoms into DP/TP
+instead (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.folding import FoldedMesh
+from repro.models.common import dense_init, norm_apply, norm_init
+from repro.models.sharding import constrain, wconstrain
+from repro.models.transformer import _zero_aux, register_block
+
+Array = jax.Array
+
+CONV_WIDTH = 4
+
+
+# ---------------------------------------------------------------------------
+# Chunked decay scan (SSD / linear-attention-with-decay)
+# ---------------------------------------------------------------------------
+
+def chunked_decay_scan(q: Array, k: Array, v: Array, log_decay: Array,
+                       h0: Array, *, chunk: int = 256) -> Tuple[Array, Array]:
+    """y_i = q_i · (Σ_{j≤i} exp(Σ_{l=j+1..i} log_decay_l) k_j v_jᵀ  [+ decayed h0]).
+
+    q, k: (B, H, S, dk); v: (B, H, S, dv); log_decay: (B, H, S) ≤ 0;
+    h0: (B, H, dk, dv). Returns (y: (B,H,S,dv), h_final).
+    """
+    B, H, S, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    qc = q.reshape(B, H, nc, chunk, dk).transpose(2, 0, 1, 3, 4)
+    kc = k.reshape(B, H, nc, chunk, dk).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, H, nc, chunk, dv).transpose(2, 0, 1, 3, 4)
+    gc = log_decay.reshape(B, H, nc, chunk).transpose(2, 0, 1, 3)
+
+    idx = jnp.arange(chunk)
+    tri = idx[:, None] >= idx[None, :]          # i >= j
+
+    def step(h, xs):
+        qb, kb, vb, gb = xs                      # (B,H,c,·)
+        cum = jnp.cumsum(gb, axis=-1)            # Σ_{l≤i} g_l
+        # D_ij = exp(cum_i - cum_j) for i ≥ j  (decay excludes j itself)
+        # Mask the EXPONENT, not the result: for i < j the argument is
+        # positive and exp overflows, poisoning gradients through where.
+        delta = cum[..., :, None] - cum[..., None, :]
+        D = jnp.exp(jnp.where(tri, delta, -1e30))
+        s = jnp.einsum("bhik,bhjk->bhij", qb, kb) * D
+        y_intra = jnp.einsum("bhij,bhjv->bhiv", s, vb)
+        y_inter = jnp.einsum("bhik,bhkv->bhiv", qb * jnp.exp(cum)[..., None], h)
+        # State update: h' = e^{cum_end} h + Σ_j e^{cum_end - cum_j} k_j v_jᵀ
+        w = jnp.exp(cum[..., -1:] - cum)         # (B,H,c)
+        h_new = h * jnp.exp(cum[..., -1])[..., None, None] + \
+            jnp.einsum("bhjk,bhjv->bhkv", kb * w[..., None], vb)
+        return h_new, y_intra + y_inter
+
+    h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32),
+                               (qc.astype(jnp.float32), kc.astype(jnp.float32),
+                                vc.astype(jnp.float32), gc.astype(jnp.float32)))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(B, H, S, dv)
+    return y, h_final
+
+
+def decay_step(q, k, v, log_decay, h):
+    """Single-token recurrence. q/k: (B,H,dk), v: (B,H,dv), log_decay: (B,H)."""
+    h = h * jnp.exp(log_decay)[..., None, None] + \
+        jnp.einsum("bhk,bhv->bhkv", k, v)
+    y = jnp.einsum("bhk,bhkv->bhv", q, h)
+    return y, h
+
+
+def _causal_conv(x: Array, w: Array, state: Array = None):
+    """Depthwise causal conv. x: (B, S, C); w: (W, 1, C). Returns (y, tail)."""
+    B, S, C = x.shape
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((B, W - 1, C), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = jax.lax.conv_general_dilated(
+        xp, w.astype(x.dtype), window_strides=(1,), padding="VALID",
+        dimension_numbers=("NHC", "HIO", "NHC"), feature_group_count=C)
+    return y, xp[:, -(W - 1):, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2
+# ---------------------------------------------------------------------------
+
+def _mamba_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = cfg.ssm_heads or max(1, d_in // 64)
+    p = d_in // nh
+    n = cfg.ssm_state
+    return d_in, nh, p, n
+
+
+def _init_mamba2(key, cfg, dtype):
+    d, (d_in, nh, p, n) = cfg.d_model, _mamba_dims(cfg)
+    ks = jax.random.split(key, 6)
+    conv_c = d_in + 2 * n
+    return {
+        "norm1": norm_init(cfg.norm, d),
+        "w_in": dense_init(ks[0], d, 2 * d_in + 2 * n + nh, dtype=dtype),
+        "conv_w": jax.random.normal(ks[1], (CONV_WIDTH, 1, conv_c), dtype) * 0.2,
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "w_out_ssm": dense_init(ks[2], d_in, d, dtype=dtype),
+    }
+
+
+def _mamba2_core(p, x, cfg, fm, conv_state=None, h0=None, *, chunk=256):
+    """x: (B, S, D) → (y, conv_tail, h_final)."""
+    B, S, D = x.shape
+    d_in, nh, hp, n = _mamba_dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, wconstrain(p["w_in"].astype(x.dtype), fm, "fsdp", "tp"))
+    z, xs, Bm, Cm, dt_raw = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_out, conv_tail = _causal_conv(conv_in, p["conv_w"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bm, Cm = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])     # (B,S,nh)
+    a = -jnp.exp(p["a_log"])                                            # (nh,)
+    log_decay = (dt * a).transpose(0, 2, 1)                             # (B,nh,S)
+
+    xh = xs.reshape(B, S, nh, hp).transpose(0, 2, 1, 3)                 # (B,nh,S,p)
+    v = xh.astype(jnp.float32) * dt.transpose(0, 2, 1)[..., None]       # dt·x
+    q = jnp.broadcast_to(Cm[:, None], (B, nh, S, n))                    # C shared
+    k = jnp.broadcast_to(Bm[:, None], (B, nh, S, n))
+
+    if h0 is None:
+        h0 = jnp.zeros((B, nh, n, hp), jnp.float32)
+    y, h_final = chunked_decay_scan(q, k, v, log_decay, h0, chunk=chunk)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, :, None, None]
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, wconstrain(p["w_out_ssm"].astype(x.dtype), fm, "tp", "fsdp"))
+    return out, conv_tail, h_final
+
+
+def _apply_mamba2(p, x, pos, cfg, fm, ctx):
+    h = norm_apply(cfg.norm, x, p["norm1"])
+    h = constrain(h, fm, "attn", "dp", None, None)  # seq local for the scan
+    y, _, _ = _mamba2_core(p, h, cfg, fm)
+    y = constrain(y, fm, "attn", "dp", ("cp", "tp"), None)
+    return x + y, _zero_aux()
+
+
+def _mamba2_state(cfg, fm, B, s_max, dtype):
+    d_in, nh, hp, n = _mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((B, CONV_WIDTH - 1, d_in + 2 * n), dtype),
+        "h": jnp.zeros((B, nh, n, hp), jnp.float32),
+    }
+
+
+def _decode_mamba2(p, x, state, step, cfg, fm, ctx):
+    h = norm_apply(cfg.norm, x, p["norm1"])
+    y, conv_tail, h_final = _mamba2_core(p, h, cfg, fm,
+                                         conv_state=state["conv"],
+                                         h0=state["h"], chunk=1)
+    return x + y, {"conv": conv_tail.astype(state["conv"].dtype), "h": h_final}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix cell, chunked linear-attention form)
+# ---------------------------------------------------------------------------
+
+def _mlstm_dims(cfg: ModelConfig):
+    d_in = 2 * cfg.d_model
+    nh = cfg.n_heads
+    return d_in, nh, d_in // nh
+
+
+def _init_mlstm(key, cfg, dtype):
+    d, (d_in, nh, hp) = cfg.d_model, _mlstm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "norm1": norm_init(cfg.norm, d),
+        "w_in": dense_init(ks[0], d, 2 * d_in, dtype=dtype),        # (xm, z)
+        "w_qkv_lstm": dense_init(ks[1], d_in, 3 * d_in, dtype=dtype),
+        "wi": dense_init(ks[2], d_in, nh, dtype=dtype),
+        "wf": dense_init(ks[3], d_in, nh, dtype=dtype),
+        "w_proj_down": dense_init(ks[4], d_in, d, dtype=dtype),
+    }
+
+
+def _mlstm_core(p, h, cfg, h0=None, n0=None, *, chunk=256):
+    B, S, D = h.shape
+    d_in, nh, hp = _mlstm_dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", h, p["w_in"].astype(h.dtype))
+    xm, z = jnp.split(proj, 2, axis=-1)
+    qkv = jnp.einsum("bse,ef->bsf", xm, p["w_qkv_lstm"].astype(h.dtype))
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(B, S, nh, hp).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, nh, hp).transpose(0, 2, 1, 3) / math.sqrt(hp)
+    v = v.reshape(B, S, nh, hp).transpose(0, 2, 1, 3)
+    i_raw = jnp.einsum("bse,eh->bsh", xm, p["wi"].astype(h.dtype))
+    f_raw = jnp.einsum("bse,eh->bsh", xm, p["wf"].astype(h.dtype))
+    # Stabilized gating: f = sigmoid(f̃) ⇒ log f = -softplus(-f̃); i = sigmoid(ĩ).
+    log_f = -jax.nn.softplus(-f_raw.astype(jnp.float32)).transpose(0, 2, 1)
+    i_g = jax.nn.sigmoid(i_raw.astype(jnp.float32)).transpose(0, 2, 1)
+
+    kg = k.astype(jnp.float32) * i_g[..., None]
+    # Append a ones-channel to v to accumulate the normalizer n with the
+    # same scan: state (dk, dv+1).
+    v1 = jnp.concatenate([v.astype(jnp.float32),
+                          jnp.ones(v.shape[:-1] + (1,), jnp.float32)], axis=-1)
+    if h0 is None:
+        h0 = jnp.zeros((B, nh, hp, hp + 1), jnp.float32)
+    y1, h_final = chunked_decay_scan(q.astype(jnp.float32), kg, v1, log_f, h0,
+                                     chunk=chunk)
+    y, nrm = y1[..., :hp], y1[..., hp]
+    y = y / jnp.maximum(jnp.abs(nrm), 1.0)[..., None]
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, d_in).astype(h.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_proj_down"].astype(h.dtype))
+    return out, h_final
+
+
+def _apply_mlstm(p, x, pos, cfg, fm, ctx):
+    h = norm_apply(cfg.norm, x, p["norm1"])
+    h = constrain(h, fm, "attn", "dp", None, None)
+    y, _ = _mlstm_core(p, h, cfg)
+    y = constrain(y, fm, "attn", "dp", ("cp", "tp"), None)
+    return x + y, _zero_aux()
+
+
+def _mlstm_state(cfg, fm, B, s_max, dtype):
+    d_in, nh, hp = _mlstm_dims(cfg)
+    return {"h": jnp.zeros((B, nh, hp, hp + 1), jnp.float32)}
+
+
+def _decode_mlstm(p, x, state, step, cfg, fm, ctx):
+    h = norm_apply(cfg.norm, x, p["norm1"])
+    y, h_final = _mlstm_core(p, h, cfg, h0=state["h"], chunk=1)
+    return x + y, {"h": h_final}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar cell, sequential)
+# ---------------------------------------------------------------------------
+
+def _init_slstm(key, cfg, dtype):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hp = d // nh
+    ks = jax.random.split(key, 4)
+    return {
+        "norm1": norm_init(cfg.norm, d),
+        "w_x": dense_init(ks[0], d, 4 * d, dtype=dtype),             # i,f,z,o
+        "r_h": jax.random.normal(ks[1], (nh, hp, 4 * hp), dtype) * (hp ** -0.5),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "w_proj_down": dense_init(ks[2], d, d, dtype=dtype),
+    }
+
+
+def _slstm_cell(p, xt, carry, cfg):
+    """xt: (B, 4d) preactivations from input; carry: (c, n, h, m) each (B, d)."""
+    B = xt.shape[0]
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hp = d // nh
+    c, n, h, m = carry
+    hh = h.reshape(B, nh, hp)
+    rec = jnp.einsum("bhp,hpq->bhq", hh.astype(p["r_h"].dtype), p["r_h"])
+    gates = xt.astype(jnp.float32) + rec.reshape(B, 4 * d).astype(jnp.float32) + p["b"]
+    ig, fg, zg, og = jnp.split(gates, 4, axis=-1)
+    # Exponential gating with stabilizer state m (xLSTM eq. 15-17).
+    log_f = -jax.nn.softplus(-fg)                  # log sigmoid(f)
+    m_new = jnp.maximum(log_f + m, ig)
+    i_s = jnp.exp(ig - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * jnp.tanh(zg)
+    n_new = f_s * n + i_s
+    h_new = jax.nn.sigmoid(og) * c_new / jnp.maximum(n_new, 1.0)
+    return c_new, n_new, h_new, m_new
+
+
+def _apply_slstm(p, x, pos, cfg, fm, ctx):
+    B, S, d = x.shape
+    h = norm_apply(cfg.norm, x, p["norm1"])
+    h = constrain(h, fm, "attn", "dp", None, None)
+    xt = jnp.einsum("bsd,de->bse", h, p["w_x"].astype(h.dtype))
+
+    def step(carry, x_t):
+        new = _slstm_cell(p, x_t, carry, cfg)
+        return new, new[2]
+
+    z = jnp.zeros((B, d), jnp.float32)
+    (_, _, _, _), hs = jax.lax.scan(step, (z, z, z, z - 30.0),
+                                    xt.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)
+    y = jnp.einsum("bsd,de->bse", y, p["w_proj_down"].astype(x.dtype))
+    y = constrain(y, fm, "attn", "dp", ("cp", "tp"), None)
+    return x + y, _zero_aux()
+
+
+def _slstm_state(cfg, fm, B, s_max, dtype):
+    d = cfg.d_model
+    z = jnp.zeros((B, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z - 30.0}
+
+
+def _decode_slstm(p, x, state, step, cfg, fm, ctx):
+    h = norm_apply(cfg.norm, x, p["norm1"])
+    xt = jnp.einsum("bsd,de->bse", h, p["w_x"].astype(h.dtype))[:, 0]
+    c, n, hh, m = _slstm_cell(p, xt, (state["c"], state["n"], state["h"], state["m"]), cfg)
+    y = jnp.einsum("bd,de->be", hh.astype(x.dtype), p["w_proj_down"].astype(x.dtype))
+    return x + y[:, None], {"c": c, "n": n, "h": hh, "m": m}
+
+
+register_block("mamba2", {"init": _init_mamba2, "apply": _apply_mamba2,
+                          "state": _mamba2_state, "decode": _decode_mamba2})
+register_block("mlstm", {"init": _init_mlstm, "apply": _apply_mlstm,
+                         "state": _mlstm_state, "decode": _decode_mlstm})
+register_block("slstm", {"init": _init_slstm, "apply": _apply_slstm,
+                         "state": _slstm_state, "decode": _decode_slstm})

@@ -1,0 +1,462 @@
+"""Model assembly: block registry + scan-stacked decoder (all families).
+
+Layers are grouped into the minimal repeating *cycle* of block kinds
+(`ModelConfig.blocks()`), parameters are stacked over cycle repeats, and the
+forward pass is a single `lax.scan` over repeats — HLO size is independent
+of depth, which keeps 80-layer dry-run compiles fast. Heterogeneous
+patterns (xLSTM's mmms, Zamba2's shared-attention interleave) fall out of
+the cycle structure naturally.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.folding import FoldedMesh
+from repro.core.moe_layer import init_moe, moe_block
+from repro.models.attention import attention, attention_decode, init_attention
+from repro.models.common import norm_apply, norm_init
+from repro.models.ffn import ffn, init_ffn
+from repro.models.sharding import constrain
+
+Array = jax.Array
+AuxDict = Dict[str, Array]
+
+
+def _zero_aux() -> AuxDict:
+    return {"moe_aux_loss": jnp.float32(0), "moe_z_loss": jnp.float32(0),
+            "moe_drop_fraction": jnp.float32(0)}
+
+
+def _acc_aux(a: AuxDict, b: AuxDict) -> AuxDict:
+    return {k: a[k] + b.get(k, 0.0) for k in a}
+
+
+# ---------------------------------------------------------------------------
+# Block registry. Each kind provides:
+#   init(key, cfg, dtype) -> params
+#   apply(p, x, pos, cfg, fm, ctx) -> (x, aux)            [train/prefill]
+#   init_state(cfg, fm, B, s_max, dtype) -> state          [decode]
+#   decode(p, x, state, step, cfg, fm, ctx) -> (x, state)
+# ``ctx`` carries cross-attention inputs for enc-dec models.
+# ---------------------------------------------------------------------------
+
+def _init_dense(key, cfg, dtype):
+    ka, kf, k1, k2 = jax.random.split(key, 4)
+    return {
+        "norm1": norm_init(cfg.norm, cfg.d_model),
+        "attn": init_attention(ka, cfg, dtype),
+        "norm2": norm_init(cfg.norm, cfg.d_model),
+        "mlp": init_ffn(kf, cfg, dtype=dtype),
+    }
+
+
+def _apply_dense(p, x, pos, cfg, fm, ctx):
+    h = norm_apply(cfg.norm, x, p["norm1"])
+    x = x + attention(p["attn"], h, pos, cfg, fm, causal=not ctx.get("bidirectional"))
+    h = norm_apply(cfg.norm, x, p["norm2"])
+    x = x + ffn(p["mlp"], h, cfg, fm)
+    return x, _zero_aux()
+
+
+def _dense_state(cfg, fm, B, s_max, dtype):
+    hd = cfg.resolved_head_dim
+    shape = (B, cfg.n_kv_heads, s_max, hd)
+    sh = fm.sharding("attn", "dp",
+                     "tp" if cfg.n_kv_heads % max(fm.tp, 1) == 0 else None,
+                     "cp", None)
+    z = jnp.zeros(shape, dtype)
+    return {"k": jax.lax.with_sharding_constraint(z, sh),
+            "v": jax.lax.with_sharding_constraint(z, sh)}
+
+
+def _decode_dense(p, x, state, step, cfg, fm, ctx):
+    h = norm_apply(cfg.norm, x, p["norm1"])
+    y, state["k"], state["v"] = attention_decode(
+        p["attn"], h, state["k"], state["v"], step, cfg, fm)
+    x = x + y
+    h = norm_apply(cfg.norm, x, p["norm2"])
+    x = x + ffn(p["mlp"], h, cfg, fm)
+    return x, state
+
+
+def _init_moe_block(key, cfg, dtype):
+    ka, km = jax.random.split(key)
+    return {
+        "norm1": norm_init(cfg.norm, cfg.d_model),
+        "attn": init_attention(ka, cfg, dtype),
+        "norm2": norm_init(cfg.norm, cfg.d_model),
+        "moe": init_moe(km, cfg, dtype),
+    }
+
+
+def _apply_moe(p, x, pos, cfg, fm, ctx):
+    h = norm_apply(cfg.norm, x, p["norm1"])
+    x = x + attention(p["attn"], h, pos, cfg, fm)
+    h = norm_apply(cfg.norm, x, p["norm2"])
+    y, aux = moe_block(p["moe"], h, cfg, fm)
+    return x + y, aux
+
+
+def _decode_moe(p, x, state, step, cfg, fm, ctx):
+    h = norm_apply(cfg.norm, x, p["norm1"])
+    y, state["k"], state["v"] = attention_decode(
+        p["attn"], h, state["k"], state["v"], step, cfg, fm)
+    x = x + y
+    h = norm_apply(cfg.norm, x, p["norm2"])
+    y, _ = moe_block(p["moe"], h, cfg, fm)
+    return x + y, state
+
+
+def _init_dense_x(key, cfg, dtype):
+    """Decoder block with cross-attention (whisper)."""
+    p = _init_dense(key, cfg, dtype)
+    kx = jax.random.fold_in(key, 17)
+    p["norm_x"] = norm_init(cfg.norm, cfg.d_model)
+    p["xattn"] = init_attention(kx, cfg, dtype)
+    return p
+
+
+def _apply_dense_x(p, x, pos, cfg, fm, ctx):
+    h = norm_apply(cfg.norm, x, p["norm1"])
+    x = x + attention(p["attn"], h, pos, cfg, fm, causal=True)
+    h = norm_apply(cfg.norm, x, p["norm_x"])
+    x = x + attention(p["xattn"], h, pos, cfg, fm, causal=False,
+                      cross_x=ctx["enc_out"], cross_pos=ctx["enc_pos"])
+    h = norm_apply(cfg.norm, x, p["norm2"])
+    x = x + ffn(p["mlp"], h, cfg, fm)
+    return x, _zero_aux()
+
+
+def _dense_x_state(cfg, fm, B, s_max, dtype):
+    st = _dense_state(cfg, fm, B, s_max, dtype)
+    # Cross KV computed once at prefill; stored full-length.
+    src = cfg.max_source_positions
+    hd = cfg.resolved_head_dim
+    z = jnp.zeros((B, cfg.n_kv_heads, src, hd), dtype)
+    st["xk"], st["xv"] = z, z
+    return st
+
+
+def _decode_dense_x(p, x, state, step, cfg, fm, ctx):
+    h = norm_apply(cfg.norm, x, p["norm1"])
+    y, state["k"], state["v"] = attention_decode(
+        p["attn"], h, state["k"], state["v"], step, cfg, fm)
+    x = x + y
+    # Cross attention against precomputed encoder KV (non-causal, full src).
+    h = norm_apply(cfg.norm, x, p["norm_x"])
+    from repro.models.attn_core import blockwise_attention
+    B = h.shape[0]
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", h, p["xattn"]["wq"].astype(h.dtype))
+    if cfg.qkv_bias:
+        q = q + p["xattn"]["bq"].astype(h.dtype)
+    q = q.reshape(B, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    src = state["xk"].shape[2]
+    qp = jnp.zeros((B, 1), jnp.int32)
+    kp = jnp.broadcast_to(jnp.arange(src, dtype=jnp.int32), (B, src))
+    o = blockwise_attention(q, state["xk"], state["xv"], qp, kp, causal=False)
+    o = o.transpose(0, 2, 1, 3).reshape(B, 1, cfg.q_dim)
+    x = x + jnp.einsum("bsh,hd->bsd", o, p["xattn"]["wo"].astype(o.dtype))
+    h = norm_apply(cfg.norm, x, p["norm2"])
+    x = x + ffn(p["mlp"], h, cfg, fm)
+    return x, state
+
+
+BLOCKS: Dict[str, Dict[str, Callable]] = {
+    "dense": {"init": _init_dense, "apply": _apply_dense,
+              "state": _dense_state, "decode": _decode_dense},
+    "moe": {"init": _init_moe_block, "apply": _apply_moe,
+            "state": _dense_state, "decode": _decode_moe},
+    "dense_x": {"init": _init_dense_x, "apply": _apply_dense_x,
+                "state": _dense_x_state, "decode": _decode_dense_x},
+}
+
+
+def register_block(kind: str, fns: Dict[str, Callable]) -> None:
+    BLOCKS[kind] = fns
+
+
+def _cycle_of(blocks: Tuple[str, ...]) -> Tuple[str, ...]:
+    """Minimal repeating unit of the per-layer block-kind sequence."""
+    n = len(blocks)
+    for p in range(1, n + 1):
+        if n % p == 0 and blocks == blocks[:p] * (n // p):
+            return blocks[:p]
+    return blocks
+
+
+def model_cycle(cfg: ModelConfig) -> Tuple[Tuple[str, ...], Tuple[str, ...]]:
+    """(blocks, cycle) — cycle sized so the shared block fires every
+    ``shared_attention_every`` layers (Zamba2)."""
+    blocks = cfg.blocks()
+    if cfg.is_encoder_decoder:
+        blocks = tuple("dense_x" for _ in blocks)
+    cycle = _cycle_of(blocks)
+    if cfg.shared_attention_every:
+        k = cfg.shared_attention_every
+        if len(blocks) % k:
+            raise ValueError(f"n_layers {len(blocks)} % shared_every {k} != 0")
+        if len(cycle) < k:
+            assert k % len(cycle) == 0
+            cycle = blocks[:k]
+    return blocks, cycle
+
+
+def _sinusoid(positions: Array, d: int) -> Array:
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Language model
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    """Initialize all parameters (layer-stacked for scan)."""
+    import repro.models.ssm_blocks  # registers mamba2/mlstm/slstm  # noqa: F401
+
+    blocks, cycle = model_cycle(cfg)
+    n_rep = len(blocks) // len(cycle)
+
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model),
+                                   jnp.float32) * 0.02,
+        "final_norm": norm_init(cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            keys[1], (cfg.d_model, cfg.vocab_size), jnp.float32) * 0.02
+
+    def stack_init(kind: str, base_key, n: int):
+        ks = jax.random.split(base_key, n)
+        leaves = [BLOCKS[kind]["init"](k, cfg, dtype) for k in ks]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *leaves)
+
+    params["cycle"] = {
+        f"b{i}": stack_init(kind, jax.random.fold_in(keys[2], i), n_rep)
+        for i, kind in enumerate(cycle)
+    }
+
+    if cfg.shared_attention_every:
+        params["shared"] = _init_dense(keys[3], cfg, dtype)
+
+    if cfg.is_encoder_decoder:
+        enc_cycle_n = cfg.n_encoder_layers
+        params["encoder"] = {
+            "cycle": {"b0": stack_init("dense", keys[4], enc_cycle_n)},
+            "final_norm": norm_init(cfg.norm, cfg.d_model),
+        }
+    return params
+
+
+def _run_stack(params_cycle, cycle, x, pos, cfg, fm, ctx, *, remat=True):
+    """Scan over cycle repeats; returns (x, accumulated aux)."""
+    def body(carry, layer_params):
+        h, aux = carry
+        for i, kind in enumerate(cycle):
+            h, a = BLOCKS[kind]["apply"](layer_params[f"b{i}"], h, pos, cfg, fm, ctx)
+            aux = _acc_aux(aux, a)
+        if cfg.shared_attention_every and not ctx.get("is_encoder"):
+            h2, _ = _apply_dense(ctx["shared_params"], h, pos, cfg, fm, ctx)
+            h = h2
+        return (h, aux), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, _zero_aux()), params_cycle)
+    return x, aux
+
+
+def apply_lm(params: Dict, batch: Dict[str, Array], cfg: ModelConfig,
+             fm: FoldedMesh, *, remat: bool = True) -> Tuple[Array, AuxDict]:
+    """Forward pass → (logits, aux). ``batch``:
+
+    * tokens: (B, S) int32
+    * positions: (B, S) int32 (or (B, S, 3) for mrope); default arange
+    * vision_embeds: (B, n_vis, D) for vlm
+    * audio_embeds: (B, T_src, D) for audio enc-dec
+    """
+    import repro.models.ssm_blocks  # noqa: F401
+
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    pos = batch.get("positions")
+    if pos is None:
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        if cfg.rope_kind == "mrope":
+            pos = jnp.broadcast_to(pos[..., None], (B, S, 3))
+
+    emb = constrain(params["embed"], fm, "attn", "tp", None)
+    x = emb[tokens].astype(dt)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dt)
+    if cfg.rope_kind == "none" and not cfg.is_encoder_decoder:
+        pos1 = pos if pos.ndim == 2 else pos[..., 0]
+        x = x + _sinusoid(pos1, cfg.d_model).astype(dt)
+    if cfg.n_vision_tokens and "vision_embeds" in batch:
+        ve = batch["vision_embeds"].astype(dt)
+        x = jax.lax.dynamic_update_slice(x, ve, (0, 0, 0))
+    x = constrain(x, fm, "attn", "dp", ("cp", "tp"), None)
+
+    ctx: Dict[str, Any] = {}
+    if cfg.shared_attention_every:
+        ctx["shared_params"] = params["shared"]
+
+    if cfg.is_encoder_decoder:
+        ae = batch["audio_embeds"].astype(dt)
+        T_src = ae.shape[1]
+        epos = jnp.broadcast_to(jnp.arange(T_src, dtype=jnp.int32), (B, T_src))
+        xe = ae + _sinusoid(epos, cfg.d_model).astype(dt)
+        xe = constrain(xe, fm, "attn", "dp", ("cp", "tp"), None)
+        enc_ctx = {"bidirectional": True, "is_encoder": True}
+        xe, _ = _run_stack(params["encoder"]["cycle"], ("dense",), xe, epos,
+                           cfg, fm, enc_ctx, remat=remat)
+        xe = norm_apply(cfg.norm, xe, params["encoder"]["final_norm"])
+        ctx["enc_out"] = constrain(xe, fm, "attn", "dp", None, None)
+        ctx["enc_pos"] = epos
+        x = x + _sinusoid(pos if pos.ndim == 2 else pos[..., 0],
+                          cfg.d_model).astype(dt)
+
+    _, cycle = model_cycle(cfg)
+    x, aux = _run_stack(params["cycle"], cycle, x, pos, cfg, fm, ctx, remat=remat)
+
+    x = norm_apply(cfg.norm, x, params["final_norm"])
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    logits = constrain(logits, fm, "attn", "dp", "cp", "tp")
+    n_moe = sum(1 for b in cfg.blocks() if b == "moe")
+    if n_moe:
+        aux = {k: v / n_moe for k, v in aux.items()}
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, fm: FoldedMesh, B: int, s_max: int,
+                      dtype=jnp.bfloat16) -> Dict:
+    import repro.models.ssm_blocks  # noqa: F401
+
+    blocks, cycle = model_cycle(cfg)
+    n_rep = len(blocks) // len(cycle)
+
+    def stack_state(kind):
+        one = BLOCKS[kind]["state"](cfg, fm, B, s_max, dtype)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n_rep,) + a.shape), one)
+
+    state: Dict[str, Any] = {
+        "cycle": {f"b{i}": stack_state(kind) for i, kind in enumerate(cycle)},
+        "step": jnp.int32(0),
+    }
+    if cfg.shared_attention_every:
+        # The shared block runs once per cycle repeat → per-repeat KV state.
+        one = _dense_state(cfg, fm, B, s_max, dtype)
+        state["shared"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_rep,) + a.shape), one)
+    return state
+
+
+def decode_step(params: Dict, state: Dict, tokens: Array, cfg: ModelConfig,
+                fm: FoldedMesh) -> Tuple[Array, Dict]:
+    """One token for the whole batch. tokens: (B, 1) int32."""
+    import repro.models.ssm_blocks  # noqa: F401
+
+    B = tokens.shape[0]
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    step = state["step"]
+
+    x = params["embed"][tokens].astype(dt)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dt)
+    if cfg.rope_kind == "none" and not cfg.is_encoder_decoder:
+        x = x + _sinusoid(jnp.full((B, 1), step), cfg.d_model).astype(dt)
+    if cfg.is_encoder_decoder:
+        x = x + _sinusoid(jnp.full((B, 1), step), cfg.d_model).astype(dt)
+    x = constrain(x, fm, "attn", "dp", None, None)
+
+    _, cycle = model_cycle(cfg)
+
+    ctx: Dict[str, Any] = {}
+
+    # The state stack rides the scan CARRY with in-place
+    # dynamic-update-slice writes (per-repeat index). Passing it as xs/ys
+    # would make XLA materialize a fresh copy of every KV cache each step —
+    # a full cache read+write per token (§Perf iteration H1).
+    def _index(stack, i):
+        return jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+            stack)
+
+    def _write(stack, i, new):
+        return jax.tree.map(
+            lambda a, s: jax.lax.dynamic_update_index_in_dim(
+                a, s.astype(a.dtype), i, 0), stack, new)
+
+    def body(carry, inp):
+        h, cycle_stack, shared_stack = carry
+        layer_params, i = inp
+        layer_state = _index(cycle_stack, i)
+        new_state = {}
+        for j, kind in enumerate(cycle):
+            h, st = BLOCKS[kind]["decode"](layer_params[f"b{j}"], h,
+                                           dict(layer_state[f"b{j}"]), step,
+                                           cfg, fm, ctx)
+            new_state[f"b{j}"] = st
+        cycle_stack = _write(cycle_stack, i, new_state)
+        if cfg.shared_attention_every:
+            sh = _index(shared_stack, i)
+            hh = norm_apply(cfg.norm, h, params["shared"]["norm1"])
+            y, sh["k"], sh["v"] = attention_decode(
+                params["shared"]["attn"], hh, sh["k"], sh["v"], step, cfg, fm)
+            h = h + y
+            hh = norm_apply(cfg.norm, h, params["shared"]["norm2"])
+            h = h + ffn(params["shared"]["mlp"], hh, cfg, fm)
+            shared_stack = _write(shared_stack, i, sh)
+        return (h, cycle_stack, shared_stack), None
+
+    state = dict(state)
+    n_rep = jax.tree.leaves(params["cycle"])[0].shape[0]
+    from repro import flags
+    if flags.STATE_AS_XS:  # §Perf H1 baseline: state as xs/ys (copies caches)
+        def body_xs(h, inp):
+            layer_params, layer_state, i = inp
+            new_state = {}
+            for j, kind in enumerate(cycle):
+                h, st = BLOCKS[kind]["decode"](layer_params[f"b{j}"], h,
+                                               dict(layer_state[f"b{j}"]),
+                                               step, cfg, fm, ctx)
+                new_state[f"b{j}"] = st
+            return h, new_state
+
+        x, new_cycle_state = jax.lax.scan(
+            body_xs, x, (params["cycle"], state["cycle"], jnp.arange(n_rep)))
+        state["cycle"] = new_cycle_state
+    else:
+        shared0 = state.get("shared", {"_": jnp.zeros((n_rep,), jnp.float32)})
+        (x, new_cycle_state, new_shared), _ = jax.lax.scan(
+            body, (x, state["cycle"], shared0),
+            (params["cycle"], jnp.arange(n_rep)))
+        state["cycle"] = new_cycle_state
+        if cfg.shared_attention_every:
+            state["shared"] = new_shared
+
+    x = norm_apply(cfg.norm, x, params["final_norm"])
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    state["step"] = step + 1
+    return constrain(logits, fm, "attn", "dp", None, "tp"), state

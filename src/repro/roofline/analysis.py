@@ -1,0 +1,381 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+Three terms per (arch × shape × mesh), all in seconds-per-step-per-chip:
+
+    compute_s    = HLO_FLOPs_per_device / peak_FLOPs
+    memory_s     = HLO_bytes_per_device / HBM_bw
+    collective_s = Σ wire_bytes_per_device(op) / ICI_bw
+
+``cost_analysis()`` provides per-device FLOPs/bytes of the partitioned
+module. Collective bytes are NOT in cost_analysis — we parse the post-SPMD
+optimized HLO (``compiled.as_text()``) and convert each collective's result
+shape into ring-algorithm wire bytes:
+
+    all-gather      bytes_out × (g-1)/g
+    reduce-scatter  bytes_in  × (g-1)/g      (= bytes_out × (g-1))
+    all-reduce      2 × bytes × (g-1)/g
+    all-to-all      bytes × (g-1)/g
+    collective-permute  bytes
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+# Inter-pod (multislice) bandwidth per chip over DCN — much slower than ICI.
+# The folding win on TPU is keeping EP/ETP collectives inside the pod.
+DCI_BW = 10e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f32": 4, "s32": 4, "u32": 4,
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """'bf16[2,1024,512]' → bytes. Tuples handled by summing components."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_IOTA_FULL_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+
+
+def _group_info(line: str, default: int, chips_per_pod: int) -> Tuple[int, bool]:
+    """(group_size, crosses_pod) for a collective instruction line.
+
+    Iota replica groups ``[g,s]<=[dims]T(perm)`` are reconstructed exactly;
+    explicit ``{{...}}`` groups are parsed from the first group.
+    """
+    import numpy as _np
+    m = _IOTA_FULL_RE.search(line)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        arr = _np.arange(int(_np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            arr = arr.transpose(perm)
+        groups = arr.reshape(g, s)
+        pods = groups // chips_per_pod
+        crosses = bool((pods != pods[:, :1]).any())
+        return s, crosses
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{} ")
+        if first:
+            ranks = [int(x) for x in first.split(",") if x.strip() != ""]
+            crosses = len({r // chips_per_pod for r in ranks}) > 1
+            return len(ranks), crosses
+    return default, False
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    group_size: int
+    wire_bytes: float
+    count: float = 1.0
+    computation: str = ""
+    crosses_pod: bool = False
+
+    @property
+    def time_s(self) -> float:
+        return self.wire_bytes / (DCI_BW if self.crosses_pod else ICI_BW)
+
+
+_BODY_REF_RE = re.compile(r"body=%?([\w\.\-_]+)")
+_CALL_REF_RE = re.compile(r"(?:to_apply|calls)=%?([\w\.\-_]+)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    """Computation name → instruction lines. Headers look like
+    ``%name (args...) -> type {`` or ``ENTRY %name ... {`` (args may nest
+    parens), bodies end with a bare ``}``."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if cur is None:
+            if s.endswith("{") and "->" in s and (s.startswith("%") or
+                                                  s.startswith("ENTRY")):
+                name = s.split()[1] if s.startswith("ENTRY") else s.split()[0]
+                name = name.split("(")[0].lstrip("%").rstrip()
+                cur = name
+                comps[cur] = []
+        else:
+            if s == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+_COND_REF_RE = re.compile(r"condition=%?([\w\.\-_]+)")
+_CONST_RE = re.compile(r"%?([\w\.\-_]+)\s*=\s*s32\[\]\s*constant\((\d+)\)")
+_COMPARE_RE = re.compile(r"compare\(([^)]*)\).*direction=(LT|LE|GT|GE)")
+
+
+def _while_trip_counts(comps: Dict[str, List[str]]) -> Dict[str, float]:
+    """body-computation name → trip count, parsed from the paired cond.
+
+    ``lax.scan`` lowers to a while whose condition compares the induction
+    variable against a constant — the constant IS the trip count (induction
+    starts at 0). Falls back to 1 when unparsable.
+    """
+    # cond computation name -> trip count
+    cond_trips: Dict[str, float] = {}
+    for name, lines in comps.items():
+        consts: Dict[str, int] = {}
+        for line in lines:
+            m = _CONST_RE.search(line)
+            if m:
+                consts[m.group(1)] = int(m.group(2))
+        for line in lines:
+            if " compare(" in line and ("direction=LT" in line or
+                                        "direction=GT" in line):
+                for cname, cval in consts.items():
+                    if f"%{cname}" in line.split("compare", 1)[1]:
+                        cond_trips[name] = float(cval)
+                        break
+        # XLA sometimes fuses the compare: look in called wrapped computations
+    # Wrapped compare fusions: condition comp calls %wrapped_compare_computation
+    # with the constant as an operand inside the cond comp itself — the
+    # constant regex above already caught it; match any compare-fusion too.
+    for name, lines in comps.items():
+        if name in cond_trips:
+            continue
+        consts = {}
+        for line in lines:
+            m = _CONST_RE.search(line)
+            if m:
+                consts[m.group(1)] = int(m.group(2))
+        if consts and any("compare" in ln for ln in lines):
+            cond_trips[name] = float(max(consts.values()))
+
+    body_trips: Dict[str, float] = {}
+    for name, lines in comps.items():
+        for line in lines:
+            if " while(" in line or line.strip().startswith("while("):
+                bodies = _BODY_REF_RE.findall(line)
+                conds = _COND_REF_RE.findall(line)
+                if bodies:
+                    t = cond_trips.get(conds[0], 1.0) if conds else 1.0
+                    body_trips[bodies[0]] = t
+    return body_trips
+
+
+def _execution_multipliers(comps: Dict[str, List[str]],
+                           depth_factors: List[float]) -> Dict[str, float]:
+    """Multiplier per computation = product of enclosing while trip counts.
+
+    Trip counts are parsed from each while's condition constant; the
+    ``depth_factors`` argument is only a fallback for unparsable whiles.
+    """
+    entry = None
+    for name in comps:
+        if "main" in name:
+            entry = name
+            break
+    if entry is None and comps:
+        entry = next(iter(comps))
+    body_trips = _while_trip_counts(comps)
+    mult: Dict[str, float] = {}
+    stack = [(entry, 1.0, 0)]
+    while stack:
+        name, m, depth = stack.pop()
+        if name not in comps:
+            continue
+        if mult.get(name, 0.0) >= m:
+            continue
+        mult[name] = m
+        for line in comps[name]:
+            is_while = " while(" in line or line.strip().startswith("while(")
+            for ref_re, through_while in ((_BODY_REF_RE, True), (_CALL_REF_RE, False)):
+                for ref in ref_re.findall(line):
+                    if through_while and is_while:
+                        f = body_trips.get(ref)
+                        if f is None:
+                            f = depth_factors[depth] if depth < len(depth_factors) else 1.0
+                        stack.append((ref, m * f, depth + 1))
+                    else:
+                        stack.append((ref, m, depth))
+    return mult
+
+
+def parse_collectives(hlo_text: str, n_devices: int,
+                      depth_factors: Optional[List[float]] = None,
+                      chips_per_pod: int = 256,
+                      ) -> List[CollectiveOp]:
+    """Scan post-SPMD HLO for collectives, scaling by while-loop trips.
+
+    Collectives inside scan bodies appear once in the text but run
+    trip-count times; while trip counts are parsed from cond constants
+    (``depth_factors`` is the fallback). Each op is tagged ``crosses_pod``
+    from its reconstructed replica groups — inter-pod ops are charged DCI
+    bandwidth instead of ICI.
+    """
+    comps = _split_computations(hlo_text)
+    mult = _execution_multipliers(comps, depth_factors or [])
+    ops: Dict[Tuple[str, int, int, str, bool], CollectiveOp] = {}
+    for comp_name, lines in comps.items():
+        m_exec = mult.get(comp_name, 1.0)
+        for line in lines:
+            s = line.strip()
+            if not (s.startswith("%") or s.startswith("ROOT")):
+                continue
+            head = s.split("=", 1)
+            if len(head) != 2:
+                continue
+            rhs = head[1].strip()
+            for kind in _COLLECTIVES:
+                token = f" {kind}("
+                token_start = f" {kind}-start("
+                if token not in rhs and token_start not in rhs \
+                        and not rhs.startswith(kind + "("):
+                    continue
+                if f" {kind}-done(" in rhs:
+                    break  # -done carries no new bytes
+                type_part = rhs.split(kind)[0]
+                b = _shape_bytes(type_part)
+                g, crosses = _group_info(s, n_devices, chips_per_pod)
+                if g <= 1:
+                    break
+                if kind == "all-gather":
+                    wire = b * (g - 1) / g
+                elif kind == "reduce-scatter":
+                    wire = b * (g - 1)          # b is the (small) output
+                elif kind == "all-reduce":
+                    wire = 2 * b * (g - 1) / g
+                elif kind == "all-to-all":
+                    wire = b * (g - 1) / g
+                else:  # collective-permute
+                    wire = b
+                wire *= m_exec
+                key = (kind, b, g, comp_name, crosses)
+                if key in ops:
+                    ops[key].count += m_exec
+                    ops[key].wire_bytes += wire
+                else:
+                    ops[key] = CollectiveOp(kind, b, g, wire, m_exec,
+                                            comp_name, crosses)
+                break
+    return list(ops.values())
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    model_flops_total: Optional[float] = None
+    per_kind: Optional[Dict[str, float]] = None
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap upper bound."""
+        return self.compute_s + self.memory_s + self.collective_s
+
+    @property
+    def mfu_bound(self) -> Optional[float]:
+        """MFU if the step ran at max(terms) (perfect overlap)."""
+        if not self.model_flops_total:
+            return None
+        t = max(self.compute_s, self.memory_s, self.collective_s)
+        return self.model_flops_total / (t * PEAK_FLOPS * self._chips) if t else None
+
+    _chips: int = 1
+
+
+def analyze(compiled, *, chips: int, model_flops_total: Optional[float] = None,
+            hlo_text: Optional[str] = None,
+            depth_factors: Optional[List[float]] = None,
+            flops_override: Optional[float] = None,
+            bytes_override: Optional[float] = None) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flops = flops_override if flops_override is not None else float(ca.get("flops", 0.0))
+    bts = bytes_override if bytes_override is not None else float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    colls = parse_collectives(text, chips, depth_factors)
+    coll_bytes = sum(c.wire_bytes for c in colls)
+    coll_time = sum(c.time_s for c in colls)
+    per_kind: Dict[str, float] = {}
+    for c in colls:
+        tag = c.kind + ("/DCI" if c.crosses_pod else "")
+        per_kind[tag] = per_kind.get(tag, 0.0) + c.wire_bytes
+    r = Roofline(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=bts / HBM_BW,
+        collective_s=coll_time,
+        flops_per_device=flops,
+        bytes_per_device=bts,
+        collective_bytes=coll_bytes,
+        model_flops_total=model_flops_total,
+        per_kind=per_kind,
+    )
+    r._chips = chips
+    return r
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (the "useful work" denominator)
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·tokens for training; 2·N_active·tokens forward-only;
+    plus the attention quadratic term."""
+    n_act = cfg.active_param_count()
+    L, H, hd = cfg.n_layers, cfg.n_heads, cfg.resolved_head_dim
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        eff = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+        return tokens * (6.0 * n_act + 12.0 * L * H * hd * eff / 2)
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        eff = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+        return tokens * (2.0 * n_act + 4.0 * L * H * hd * eff / 2)
+    # decode: one token per sequence against a cache of seq_len
+    tokens = shape.global_batch
+    eff = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+    if cfg.family in ("ssm",):
+        eff = 0
+    return tokens * (2.0 * n_act + 4.0 * L * H * hd * eff)

@@ -1,0 +1,192 @@
+"""FLOP/byte accounting over post-SPMD optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE, so a
+scan-over-layers model under-reports FLOPs by ~n_layers×. This module walks
+the optimized HLO per computation, multiplies by the while-loop trip counts
+(supplied by nesting depth, since HLO doesn't print them), and counts:
+
+* FLOPs: ``dot`` (2·numel(out)·K) and ``convolution`` ops — the MFU-relevant
+  matmul work, matching the convention used for MODEL_FLOPS ratios.
+* HBM bytes: 2 × Σ result-buffer bytes over instructions (each buffer is
+  written once and read ≈once downstream). Counting operand bytes directly
+  would attribute the *full stacked* weight array to every loop iteration's
+  dynamic-slice (a ~n_layers× overcount), so the symmetric write+read
+  approximation is both simpler and closer to real HBM traffic.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.roofline.analysis import (_execution_multipliers,
+                                     _shape_bytes, _split_computations)
+
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-_]+)\s*=\s*(.+)$")
+_TYPE_RE = re.compile(r"^((?:\([^)]*\))|(?:[\w]+\[[\d,]*\](?:\{[^}]*\})?))\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"(?:([\w]+)\[([\d,]*)\](?:\{[^}]*\})?\s+)?%([\w\.\-_]+)")
+_DIMS_RE = re.compile(r"\[([\d,]*)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "copy-start", "copy-done", "after-all", "partition-id", "replica-id",
+    "iota",
+}
+
+
+def _parse_dims(type_str: str) -> List[List[int]]:
+    return [[int(x) for x in m.group(1).split(",") if x]
+            for m in _DIMS_RE.finditer(type_str)]
+
+
+def _numel(dims: List[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _instr_shapes(lines: List[str]) -> Dict[str, str]:
+    """name -> result type string, per computation."""
+    table = {}
+    for line in lines:
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        tm = _TYPE_RE.match(rhs)
+        if tm:
+            table[name] = tm.group(1)
+    return table
+
+
+def _operands(rhs: str, table: Dict[str, str]) -> List[str]:
+    """Operand type strings of an instruction (inline type or table lookup)."""
+    # operand list is inside the first top-level parens after the op name
+    tm = _TYPE_RE.match(rhs)
+    if not tm:
+        return []
+    start = rhs.index("(", tm.end() - 1)
+    depth, end = 0, start
+    for i in range(start, len(rhs)):
+        if rhs[i] == "(":
+            depth += 1
+        elif rhs[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    args = rhs[start + 1:end]
+    out = []
+    for m in _OPERAND_RE.finditer(args):
+        dt, dims, name = m.group(1), m.group(2), m.group(3)
+        if dt:
+            out.append(f"{dt}[{dims}]")
+        elif name in table:
+            out.append(table[name])
+    return out
+
+
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-_]+)")
+
+
+def _dus_rooted(comps: Dict[str, List[str]]) -> set:
+    """Computations whose ROOT is a dynamic-update-slice (possibly through
+    a bitcast) — XLA executes these fusions in place, so charging the full
+    result buffer would overcount HBM traffic by the buffer/update ratio
+    (≈500× for a KV cache insert)."""
+    out = set()
+    for name, lines in comps.items():
+        for line in lines:
+            s = line.strip()
+            if s.startswith("ROOT"):
+                has_dus = any("dynamic-update-slice(" in l for l in lines)
+                if "dynamic-update-slice(" in s or (
+                        has_dus and (" tuple(" in s or "bitcast(" in s)):
+                    out.add(name)
+    return out
+
+
+def _fusion_bodies(comps: Dict[str, List[str]]) -> set:
+    """Computations called by ``fusion`` instructions. Their instructions
+    stream through VMEM inside the fused loop — counting them as HBM
+    traffic (e.g. a convert-then-dynamic-slice of a full KV-cache stack
+    that the fusion elides to slice-then-convert) wildly overcounts."""
+    out = set()
+    for lines in comps.values():
+        for line in lines:
+            if " fusion(" in line:
+                out.update(_CALLS_RE.findall(line))
+    return out
+
+
+def hlo_cost(hlo_text: str, depth_factors: Optional[List[float]] = None,
+             ) -> Tuple[float, float, Dict[str, float]]:
+    """Returns (flops, hbm_bytes, breakdown) for one device's program."""
+    comps = _split_computations(hlo_text)
+    mult = _execution_multipliers(comps, depth_factors or [])
+    dus_comps = _dus_rooted(comps)
+    fusion_bodies = _fusion_bodies(comps)
+    flops = 0.0
+    hbm = 0.0
+    breakdown: Dict[str, float] = {}
+    for comp_name, lines in comps.items():
+        m_exec = mult.get(comp_name, 1.0)
+        in_fusion_body = comp_name in fusion_bodies
+        table = _instr_shapes(lines)
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            rhs = m.group(2)
+            tm = _TYPE_RE.match(rhs)
+            if not tm:
+                continue
+            rtype, op = tm.group(1), tm.group(2)
+            rbytes = _shape_bytes(rtype)
+            if op == "dot":
+                ops_t = _operands(rhs, table)
+                rdims = _parse_dims(rtype)
+                out_n = _numel(rdims[0]) if rdims else 0
+                k = 1
+                cm = _CONTRACT_RE.search(rhs)
+                if cm and ops_t:
+                    ldims = _parse_dims(ops_t[0])
+                    if ldims:
+                        for ci in [int(x) for x in cm.group(1).split(",") if x]:
+                            if ci < len(ldims[0]):
+                                k *= ldims[0][ci]
+                f = 2.0 * out_n * k * m_exec
+                flops += f
+                breakdown["dot_flops"] = breakdown.get("dot_flops", 0.0) + f
+            elif op == "convolution":
+                ops_t = _operands(rhs, table)
+                rdims = _parse_dims(rtype)
+                out_n = _numel(rdims[0]) if rdims else 0
+                k = 1
+                if len(ops_t) > 1:
+                    kd = _parse_dims(ops_t[1])
+                    if kd:
+                        k = _numel(kd[0]) // max(_parse_dims(rtype)[0][-1], 1)
+                f = 2.0 * out_n * max(k, 1) * m_exec
+                flops += f
+                breakdown["conv_flops"] = breakdown.get("conv_flops", 0.0) + f
+            if in_fusion_body:
+                continue  # VMEM-internal; HBM traffic charged at the call
+            if op in _SKIP_BYTES_OPS or op in ("while", "conditional", "call"):
+                continue
+            # In-place updates (DUS or DUS-rooted fusions): traffic is the
+            # update slice, not the whole aliased buffer. The update is the
+            # largest non-aliased operand = sum of operands smaller than the
+            # result.
+            in_place = op == "dynamic-update-slice" or (
+                op == "fusion" and any(c in dus_comps
+                                       for c in _CALLS_RE.findall(rhs)))
+            if in_place:
+                others = sum(b for b in
+                             (_shape_bytes(t) for t in _operands(rhs, table))
+                             if b < rbytes)
+                hbm += 2.0 * others * m_exec
+                continue
+            hbm += 2.0 * rbytes * m_exec
+    return flops, hbm, breakdown

@@ -1,0 +1,152 @@
+"""Serving engine: prefill + KV-cache decode for all architecture families.
+
+* ``make_prefill_step`` — full-sequence forward (the prefill_32k shape);
+  parallel over DP×CP×TP like training, minus backward/optimizer.
+* ``make_serve_step``  — ONE new token against a KV cache of ``s_max``
+  (the decode_32k / long_500k shapes). Attention archs use the CP-sharded
+  flash-decode path; SSM archs carry O(1) recurrent state; sliding-window
+  archs use a ring-buffer cache of ``window`` slots, making 500K-token
+  decode O(window).
+* ``ServeSession`` — a small batched-request driver for the examples:
+  sequential cache-fill prefill (chunked prefill is future §Perf work) and
+  greedy/temperature generation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.folding import FoldedMesh
+from repro.models.sharding import param_shardings
+from repro.models.transformer import (apply_lm, decode_step, init_decode_state,
+                                      init_lm)
+
+Array = jax.Array
+
+
+def cache_len_for(cfg: ModelConfig, seq_len: int) -> int:
+    """KV slots needed to serve ``seq_len`` context.
+
+    Sliding-window attention needs only ``window`` ring slots; full
+    attention needs the whole context.
+    """
+    if cfg.sliding_window:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def make_prefill_step(cfg: ModelConfig, fm: FoldedMesh):
+    def prefill(params, batch):
+        cparams = jax.tree.map(
+            lambda p: p.astype(jnp.bfloat16)
+            if (p.dtype == jnp.float32 and p.ndim >= 2) else p, params)
+        logits, _ = apply_lm(cparams, batch, cfg, fm, remat=True)
+        return logits[:, -1].astype(jnp.float32)
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig, fm: FoldedMesh):
+    def serve(params, state, tokens):
+        cparams = jax.tree.map(
+            lambda p: p.astype(jnp.bfloat16)
+            if (p.dtype == jnp.float32 and p.ndim >= 2) else p, params)
+        logits, state = decode_step(cparams, state, tokens, cfg, fm)
+        return logits.astype(jnp.float32), state
+    return serve
+
+
+def state_shardings(cfg: ModelConfig, fm: FoldedMesh, state_shapes):
+    """NamedShardings for a decode-state pytree (by leaf name).
+
+    Caches: (n_rep, B, Hkv, S, hd) → (-, dp, tp, cp, -); SSM states:
+    batch over dp, heads over tp.
+    """
+    def spec_for(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        nd = len(leaf.shape)
+        dp = fm.axis("attn", "dp") or None
+        cp = fm.axis("attn", "cp") or None
+        tp = fm.axis("attn", "tp") or None
+
+        def fit(dim, axes):
+            if axes is None:
+                return None
+            import math as _m
+            sz = _m.prod(fm.mesh.shape[a] for a in ((axes,) if isinstance(axes, str) else axes))
+            return axes if dim % sz == 0 else None
+
+        if name in ("k", "v", "xk", "xv"):       # (n_rep?, B, Hkv, S, hd)
+            s = leaf.shape[-4:]
+            spec = [None] * (nd - 4) + [fit(s[0], dp), fit(s[1], tp), fit(s[2], cp), None]
+        elif name == "conv":                     # (n_rep?, B, W, C)
+            s = leaf.shape[-3:]
+            spec = [None] * (nd - 3) + [fit(s[0], dp), None, fit(s[2], tp)]
+        elif name == "h" and nd >= 4:            # (n_rep?, B, nh, ·, ·)
+            s = leaf.shape[-4:]
+            spec = [None] * (nd - 4) + [fit(s[0], dp), fit(s[1], tp), None, None]
+        elif name in ("c", "n", "h", "m"):       # sLSTM (n_rep?, B, d)
+            s = leaf.shape[-2:]
+            spec = [None] * (nd - 2) + [fit(s[0], dp), fit(s[1], tp)]
+        else:                                    # step etc.
+            spec = [None] * nd
+        return NamedSharding(fm.mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(spec_for, state_shapes)
+
+
+@dataclasses.dataclass
+class ServeSession:
+    """Batched greedy/temperature generation over a decode step."""
+
+    cfg: ModelConfig
+    fm: FoldedMesh
+    params: Dict
+    s_max: int
+    batch: int
+    state: Dict = None
+    _step_fn: object = None
+
+    def __post_init__(self):
+        if self.state is None:
+            self.state = init_decode_state(self.cfg, self.fm, self.batch,
+                                           self.s_max)
+        self._step_fn = jax.jit(make_serve_step(self.cfg, self.fm))
+
+    def prefill(self, prompts: np.ndarray) -> Array:
+        """Sequential cache-fill prefill. prompts: (B, S_p) int32."""
+        logits = None
+        for t in range(prompts.shape[1]):
+            logits, self.state = self._step_fn(
+                self.params, self.state, jnp.asarray(prompts[:, t:t + 1]))
+        return logits
+
+    def generate(self, prompts: np.ndarray, n_tokens: int, *,
+                 temperature: float = 0.0, seed: int = 0) -> np.ndarray:
+        logits = self.prefill(prompts)
+        key = jax.random.PRNGKey(seed)
+        out = []
+        tok = None
+        for i in range(n_tokens):
+            if temperature > 0:
+                key, sk = jax.random.split(key)
+                tok = jax.random.categorical(sk, logits[:, -1] / temperature)[:, None]
+            else:
+                tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+            tok = tok.astype(jnp.int32)
+            out.append(np.asarray(tok))
+            logits, self.state = self._step_fn(self.params, self.state, tok)
+        return np.concatenate(out, axis=1)
+
+
+def build_session(key, cfg: ModelConfig, fm: FoldedMesh, *, batch: int,
+                  s_max: int) -> ServeSession:
+    pshard = param_shardings(
+        jax.eval_shape(lambda k: init_lm(k, cfg), key), fm, mode="store")
+    params = jax.jit(lambda k: init_lm(k, cfg), out_shardings=pshard)(key)
+    return ServeSession(cfg=cfg, fm=fm, params=params, s_max=s_max, batch=batch)

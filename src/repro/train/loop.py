@@ -1,0 +1,155 @@
+"""Training step factory: mixed precision, ZeRO sharding, grad accumulation.
+
+``make_train_step`` returns a jit-compiled (or lowerable) function
+
+    train_step(params_fp32, opt_state, batch) -> (params, opt_state, metrics)
+
+* params are fp32 masters with *store* sharding (FSDP atoms active);
+* the loss casts to bf16 and layers constrain weights to *compute* sharding
+  (the per-layer ZeRO-3 all-gather);
+* gradient accumulation: ``microbatch`` splits the global batch along DP and
+  scans, summing grads — bounds activation memory for the big shapes;
+* MoE aux/z losses are folded into the objective.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.core.folding import FoldedMesh
+from repro.models.common import softmax_cross_entropy
+from repro.models.sharding import param_shardings
+from repro.models.transformer import apply_lm, init_lm
+from repro.optim import adamw
+
+Array = jax.Array
+
+
+def batch_shardings(cfg: ModelConfig, fm: FoldedMesh) -> Dict[str, NamedSharding]:
+    """Input shardings: batch over DP atoms, seq over CP×TP atoms."""
+    tok = fm.sharding("attn", "dp", ("cp", "tp"))
+    out = {"tokens": tok, "labels": tok}
+    if cfg.rope_kind == "mrope":
+        out["positions"] = fm.sharding("attn", "dp", ("cp", "tp"), None)
+    if cfg.n_vision_tokens:
+        out["vision_embeds"] = fm.sharding("attn", "dp", None, None)
+    if cfg.is_encoder_decoder:
+        out["audio_embeds"] = fm.sharding("attn", "dp", None, None)
+    return out
+
+
+def cast_params(params, cfg: ModelConfig):
+    """fp32 masters → bf16 compute copies (norms/scalars stay fp32)."""
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return jax.tree.map(
+        lambda p: p.astype(dt) if (p.dtype == jnp.float32 and p.ndim >= 2) else p,
+        params)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, fm: FoldedMesh, *,
+            remat: bool = True, pre_cast: bool = False
+            ) -> Tuple[Array, Dict[str, Array]]:
+    cparams = params if pre_cast else cast_params(params, cfg)
+    logits, aux = apply_lm(cparams, batch, cfg, fm, remat=remat)
+    ce, n_tok = softmax_cross_entropy(logits, batch["labels"])
+    loss = ce
+    metrics = {"ce_loss": ce, "tokens": n_tok}
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.aux_loss_coef * aux["moe_aux_loss"] \
+                    + cfg.moe.z_loss_coef * aux["moe_z_loss"]
+        metrics.update({k: aux[k] for k in
+                        ("moe_aux_loss", "moe_z_loss", "moe_drop_fraction")})
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def make_train_step(cfg: ModelConfig, fm: FoldedMesh,
+                    opt_cfg: Optional[adamw.AdamWConfig] = None,
+                    *, donate: bool = True):
+    """Build the jit'd train step (not yet compiled — lower() works too)."""
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    pcfg = fm.pcfg
+    nmicro = pcfg.microbatch
+    remat = pcfg.remat != "none"
+
+    from repro import flags
+    hoist = not flags.NO_HOIST_CAST
+
+    def grads_of(cparams, batch):
+        # Grads are taken wrt the bf16 compute copies: the cast is linear
+        # with unit derivative, so converting them to fp32 afterwards
+        # yields the exact master-parameter gradient — while the backward's
+        # gradient reduce-scatter runs in bf16 and the fp32→bf16 cast
+        # happens once per step, not once per microbatch (§Perf H2).
+        return jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg, fm, remat=remat, pre_cast=hoist),
+            has_aux=True)(cparams)
+
+    def step(params, opt_state, batch):
+        cparams = cast_params(params, cfg) if hoist else params
+        if nmicro and nmicro > 1:
+            B = batch["tokens"].shape[0]
+            assert B % nmicro == 0, (B, nmicro)
+            mb = B // nmicro
+
+            def slice_mb(i):
+                return jax.tree.map(
+                    lambda a: jax.lax.dynamic_slice_in_dim(a, i * mb, mb, axis=0),
+                    batch)
+
+            def body(carry, i):
+                g_acc, m_acc = carry
+                (_, m), g = grads_of(cparams, slice_mb(i))
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                m_acc = jax.tree.map(jnp.add, m_acc, m)
+                return (g_acc, m_acc), None
+
+            (_, m0), g1 = grads_of(cparams, slice_mb(0))
+            g0 = jax.tree.map(lambda g: g.astype(jnp.float32), g1)
+            (g_sum, m_sum), _ = jax.lax.scan(
+                body, (g0, m0), jnp.arange(1, nmicro))
+            grads = jax.tree.map(lambda g: g / nmicro, g_sum)
+            metrics = jax.tree.map(lambda m: m / nmicro, m_sum)
+        else:
+            (_, metrics), grads = grads_of(cparams, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        new_params, new_opt, opt_m = adamw.update(opt_cfg, grads, opt_state, params)
+        metrics.update(opt_m)
+        return new_params, new_opt, metrics
+
+    pshard = param_shardings_fp32(cfg, fm)
+    oshard = adamw.AdamWState(
+        step=NamedSharding(fm.mesh, P()),
+        mu=pshard, nu=pshard)
+    bshard = batch_shardings(cfg, fm)
+    mshard = None  # metrics replicated
+
+    return jax.jit(
+        step,
+        in_shardings=(pshard, oshard, bshard),
+        out_shardings=(pshard, oshard, mshard),
+        donate_argnums=(0, 1) if donate else (),
+    )
+
+
+def param_shardings_fp32(cfg: ModelConfig, fm: FoldedMesh):
+    """Store-mode shardings for the fp32 master param tree."""
+    shapes = jax.eval_shape(lambda k: init_lm(k, cfg), jax.random.PRNGKey(0))
+    return param_shardings(shapes, fm, mode="store")
+
+
+def init_train_state(key, cfg: ModelConfig, fm: FoldedMesh):
+    """Initialize (params, opt_state) directly with store shardings."""
+    pshard = param_shardings_fp32(cfg, fm)
+    params = jax.jit(lambda k: init_lm(k, cfg), out_shardings=pshard)(key)
+    opt = jax.jit(adamw.init, out_shardings=adamw.AdamWState(
+        step=NamedSharding(fm.mesh, P()), mu=pshard, nu=pshard))(params)
+    return params, opt

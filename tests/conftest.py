@@ -1,0 +1,35 @@
+"""Shared fixtures. 8 host devices for sharding tests (NOT 512 — only the
+dry-run uses the production device count, per the assignment spec)."""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.configs.base import ParallelConfig, ParallelMappingSpec  # noqa: E402
+from repro.core.folding import build_folded_mesh  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def fm222():
+    """Folded mesh: attention DP2×CP2×TP2 == MoE (unfolded)."""
+    p = ParallelConfig(attn=ParallelMappingSpec(dp=2, inner=2, tp=2),
+                       moe=ParallelMappingSpec(dp=2, inner=2, tp=2))
+    return build_folded_mesh(p)
+
+
+@pytest.fixture(scope="session")
+def fm_folded():
+    """Folded mesh: attention DP2×CP2×TP2, MoE EDP1×EP4×ETP2."""
+    p = ParallelConfig(attn=ParallelMappingSpec(dp=2, inner=2, tp=2),
+                       moe=ParallelMappingSpec(dp=1, inner=4, tp=2))
+    return build_folded_mesh(p)
+
+
+@pytest.fixture(scope="session")
+def fm_ep8():
+    """EP folded across all of DP×CP×TP (paper appendix config)."""
+    p = ParallelConfig(attn=ParallelMappingSpec(dp=2, inner=2, tp=2),
+                       moe=ParallelMappingSpec(dp=1, inner=8, tp=1))
+    return build_folded_mesh(p)

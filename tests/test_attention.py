@@ -1,0 +1,90 @@
+"""Attention core: blockwise+flash-VJP vs naive oracle; CP decode combine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attn_core import blockwise_attention, naive_attention
+
+CASES = [
+    dict(B=2, H=8, Hkv=2, Sq=128, Skv=128, hd=32, causal=True, window=0, bk=32),
+    dict(B=1, H=4, Hkv=4, Sq=64, Skv=192, hd=32, causal=True, window=0, bk=50),
+    dict(B=2, H=6, Hkv=2, Sq=128, Skv=128, hd=64, causal=True, window=64, bk=32),
+    dict(B=1, H=4, Hkv=2, Sq=96, Skv=96, hd=32, causal=False, window=0, bk=32),
+]
+
+
+def _mk(c, key):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (c["B"], c["H"], c["Sq"], c["hd"]))
+    k = jax.random.normal(ks[1], (c["B"], c["Hkv"], c["Skv"], c["hd"]))
+    v = jax.random.normal(ks[2], (c["B"], c["Hkv"], c["Skv"], c["hd"]))
+    qp = jnp.broadcast_to(jnp.arange(c["Skv"] - c["Sq"], c["Skv"],
+                                     dtype=jnp.int32), (c["B"], c["Sq"]))
+    kp = jnp.broadcast_to(jnp.arange(c["Skv"], dtype=jnp.int32),
+                          (c["B"], c["Skv"]))
+    return q, k, v, qp, kp
+
+
+@pytest.mark.parametrize("c", CASES)
+def test_blockwise_matches_naive(c):
+    q, k, v, qp, kp = _mk(c, jax.random.PRNGKey(0))
+    y1 = blockwise_attention(q, k, v, qp, kp, causal=c["causal"],
+                             window=c["window"], block_kv=c["bk"])
+    y2 = naive_attention(q, k, v, qp, kp, causal=c["causal"], window=c["window"])
+    np.testing.assert_allclose(y1, y2, atol=2e-5)
+
+
+@pytest.mark.parametrize("c", CASES)
+def test_flash_vjp_matches_naive_grads(c):
+    q, k, v, qp, kp = _mk(c, jax.random.PRNGKey(1))
+    f = lambda *a: jnp.sum(jnp.sin(blockwise_attention(
+        *a, qp, kp, causal=c["causal"], window=c["window"], block_kv=c["bk"])))
+    g = lambda *a: jnp.sum(jnp.sin(naive_attention(
+        *a, qp, kp, causal=c["causal"], window=c["window"])))
+    g1 = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(g, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=5e-5)
+
+
+def test_partial_combine_equals_full():
+    """Splitting KV into two shards and LSE-combining partials must equal
+    attention over the full KV (the CP flash-decode identity)."""
+    c = dict(B=1, H=4, Hkv=4, Sq=1, Skv=128, hd=32)
+    q, k, v, qp, kp = _mk(c, jax.random.PRNGKey(2))
+    qp = jnp.full((1, 1), 127, jnp.int32)
+    full = naive_attention(q, k, v, qp, kp, causal=True)
+
+    halves = []
+    for i in range(2):
+        ks_ = k[:, :, i * 64:(i + 1) * 64]
+        vs_ = v[:, :, i * 64:(i + 1) * 64]
+        kps = kp[:, i * 64:(i + 1) * 64]
+        acc, m, l = blockwise_attention(q, ks_, vs_, qp, kps, causal=True,
+                                        block_kv=32, return_partial=True)
+        halves.append((acc, m, l))
+    m_g = jnp.maximum(halves[0][1], halves[1][1])
+    l_g = sum(h[2] * jnp.exp(h[1] - m_g) for h in halves)
+    acc_g = sum(h[0] * jnp.exp(h[1] - m_g)[..., None] for h in halves)
+    combined = acc_g / jnp.maximum(l_g[..., None], 1e-30)
+    np.testing.assert_allclose(combined, full, atol=2e-5)
+
+
+def test_sliding_window_equals_full_when_window_covers():
+    c = dict(B=1, H=2, Hkv=2, Sq=64, Skv=64, hd=32)
+    q, k, v, qp, kp = _mk(c, jax.random.PRNGKey(3))
+    y_w = blockwise_attention(q, k, v, qp, kp, causal=True, window=64, block_kv=32)
+    y_f = blockwise_attention(q, k, v, qp, kp, causal=True, window=0, block_kv=32)
+    np.testing.assert_allclose(y_w, y_f, atol=1e-6)
+
+
+def test_mrope_vs_rope_consistency():
+    """M-RoPE with identical position streams == plain RoPE."""
+    from repro.models.common import apply_mrope, apply_rope
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 16, 4, 64))
+    pos = jnp.broadcast_to(jnp.arange(16, dtype=jnp.int32), (2, 16))
+    pos3 = jnp.broadcast_to(pos[..., None], (2, 16, 3))
+    y1 = apply_rope(x, pos, 10000.0)
+    y2 = apply_mrope(x, pos3, 10000.0, sections=(8, 12, 12))
+    np.testing.assert_allclose(y1, y2, atol=1e-5)

@@ -1,0 +1,149 @@
+"""Token dispatcher: numerical equivalence with the oracle across folded
+mappings, gradient correctness, dropping semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoEConfig, ParallelConfig, ParallelMappingSpec as PM
+from repro.core.dispatcher import moe_ffn, moe_ffn_reference
+from repro.core.folding import build_folded_mesh
+from repro.core.router import capacity_per_expert, route
+
+D, F, E, K = 32, 64, 8, 2
+T = 8 * 16
+
+
+def _weights(key):
+    ks = jax.random.split(key, 5)
+    return (jax.random.normal(ks[0], (T, D)),
+            jax.random.normal(ks[1], (D, E)) * 0.1,
+            jax.random.normal(ks[2], (E, D, F)) * 0.1,
+            jax.random.normal(ks[3], (E, F, D)) * 0.1,
+            jax.random.normal(ks[4], (E, D, F)) * 0.1)
+
+
+MAPPINGS = [
+    PM(dp=1, inner=8, tp=1),        # pure EP, folded across DP×CP×TP
+    PM(dp=1, inner=4, tp=2),        # EP×ETP
+    PM(dp=2, inner=4, tp=1),
+    PM(dp=2, inner=2, tp=2),
+    PM(dp=8, inner=1, tp=1),        # no EP (degenerate)
+]
+
+
+@pytest.mark.parametrize("moe_spec", MAPPINGS)
+def test_dispatcher_matches_oracle(moe_spec):
+    pcfg = ParallelConfig(attn=PM(dp=2, inner=2, tp=2), moe=moe_spec)
+    fm = build_folded_mesh(pcfg)
+    mcfg = MoEConfig(n_experts=E, top_k=K, d_expert=F, capacity_factor=1.0)
+    x, wg, w1, w2, w3 = _weights(jax.random.PRNGKey(0))
+    y, aux = jax.jit(lambda *a: moe_ffn(*a, mcfg, fm))(x, wg, w1, w2, w3)
+    yref, auxref = moe_ffn_reference(x.reshape(8, T // 8, D), wg, w1, w2, w3, mcfg)
+    np.testing.assert_allclose(y, yref.reshape(T, D), atol=1e-4)
+    np.testing.assert_allclose(aux["moe_aux_loss"], auxref["moe_aux_loss"], rtol=1e-5)
+
+
+def test_dispatcher_gradients_match_oracle(fm_folded):
+    mcfg = MoEConfig(n_experts=E, top_k=K, d_expert=F)
+    x, wg, w1, w2, w3 = _weights(jax.random.PRNGKey(1))
+    p = dict(wg=wg, w1=w1, w2=w2, w3=w3)
+
+    def loss_sharded(p):
+        y, aux = moe_ffn(x, p["wg"], p["w1"], p["w2"], p["w3"], mcfg, fm_folded)
+        return jnp.sum(y ** 2) + 0.01 * aux["moe_aux_loss"]
+
+    def loss_ref(p):
+        y, aux = moe_ffn_reference(x.reshape(8, T // 8, D), p["wg"], p["w1"],
+                                   p["w2"], p["w3"], mcfg)
+        return jnp.sum(y ** 2) + 0.01 * aux["moe_aux_loss"]
+
+    g1 = jax.jit(jax.grad(loss_sharded))(p)
+    g2 = jax.jit(jax.grad(loss_ref))(p)
+    for k in p:
+        rel = float(jnp.max(jnp.abs(g1[k] - g2[k]))) / \
+            (float(jnp.max(jnp.abs(g2[k]))) + 1e-9)
+        assert rel < 1e-4, k
+
+
+def test_dropless_never_drops(fm_ep8):
+    mcfg = MoEConfig(n_experts=E, top_k=K, d_expert=F, dropless=True)
+    x, wg, w1, w2, w3 = _weights(jax.random.PRNGKey(2))
+    _, aux = jax.jit(lambda *a: moe_ffn(*a, mcfg, fm_ep8))(x, wg, w1, w2, w3)
+    assert float(aux["moe_drop_fraction"]) == 0.0
+
+
+def test_capacity_factor_drop_monotonic(fm_ep8):
+    x, wg, w1, w2, w3 = _weights(jax.random.PRNGKey(3))
+    drops = []
+    for cf in (0.5, 1.0, 2.0, 8.0):
+        mcfg = MoEConfig(n_experts=E, top_k=K, d_expert=F, capacity_factor=cf)
+        _, aux = jax.jit(lambda *a: moe_ffn(*a, mcfg, fm_ep8))(x, wg, w1, w2, w3)
+        drops.append(float(aux["moe_drop_fraction"]))
+    assert all(a >= b - 1e-6 for a, b in zip(drops, drops[1:]))
+    assert drops[-1] == 0.0
+
+
+def test_full_sequence_dropping_runs(fm_ep8):
+    mcfg = MoEConfig(n_experts=E, top_k=K, d_expert=F,
+                     drop_policy="full_sequence")
+    x, wg, w1, w2, w3 = _weights(jax.random.PRNGKey(4))
+    y, aux = jax.jit(lambda *a: moe_ffn(*a, mcfg, fm_ep8))(x, wg, w1, w2, w3)
+    assert y.shape == (T, D)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    # Full-sequence capacity pools all ranks: with identical per-rank token
+    # counts the drop fraction matches sub-sequence only statistically; just
+    # check it is a valid fraction.
+    assert 0.0 <= float(aux["moe_drop_fraction"]) < 1.0
+
+
+def test_token_padding_path(fm_ep8):
+    """T not divisible by the shard count: dispatcher pads and unpads."""
+    mcfg = MoEConfig(n_experts=E, top_k=K, d_expert=F)
+    x, wg, w1, w2, w3 = _weights(jax.random.PRNGKey(5))
+    x_odd = x[:T - 3]
+    y, _ = jax.jit(lambda *a: moe_ffn(*a, mcfg, fm_ep8))(x_odd, wg, w1, w2, w3)
+    assert y.shape == (T - 3, D)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+# ---------------------------------------------------------------------------
+# Router invariants (seeded property sweep — hypothesis unavailable offline)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(8))
+def test_router_invariants(seed):
+    rng = np.random.default_rng(seed)
+    t = int(rng.integers(4, 64))
+    e = int(2 ** rng.integers(1, 5))
+    k = int(rng.integers(1, min(e, 4) + 1))
+    cf = float(rng.choice([0.5, 1.0, 2.0]))
+    mcfg = MoEConfig(n_experts=e, top_k=k, d_expert=8, capacity_factor=cf)
+    cap = capacity_per_expert(t, mcfg)
+    x = jnp.asarray(rng.standard_normal((t, 16)), jnp.float32)
+    wg = jnp.asarray(rng.standard_normal((16, e)), jnp.float32)
+    r = route(x, wg, mcfg, capacity=cap)
+    # each expert receives at most `cap` kept assignments
+    kept = np.asarray(r.expert_idx)[np.asarray(r.keep)]
+    if kept.size:
+        counts = np.bincount(kept, minlength=e)
+        assert counts.max() <= cap
+    # positions of kept assignments are unique per expert and < capacity
+    pos = np.asarray(r.pos_in_expert)[np.asarray(r.keep)]
+    assert (pos < cap).all()
+    for ee in range(e):
+        pe = pos[kept == ee]
+        assert len(set(pe.tolist())) == len(pe)
+    # combine weights are softmax probs: in (0, 1], rows sum ≤ 1
+    w = np.asarray(r.combine_w)
+    assert (w > 0).all() and (w.sum(axis=1) <= 1.0 + 1e-5).all()
+    # expert ids valid
+    assert (np.asarray(r.expert_idx) < e).all()
+
+
+def test_router_no_drop_when_capacity_huge():
+    mcfg = MoEConfig(n_experts=4, top_k=2, d_expert=8, capacity_factor=1.0)
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 16))
+    wg = jax.random.normal(jax.random.PRNGKey(1), (16, 4))
+    r = route(x, wg, mcfg, capacity=32)
+    assert bool(jnp.all(r.keep))

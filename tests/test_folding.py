@@ -1,0 +1,107 @@
+"""MoE Parallel Folding: refinement algebra + Megatron group equivalence."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs.base import ParallelConfig, ParallelMappingSpec as PM
+from repro.core.folding import (build_folded_mesh, common_refinement,
+                                folded_mesh_groups, megatron_groups, unfolded)
+
+
+def test_refinement_example():
+    atoms, a, b = common_refinement([4, 4], [2, 8])
+    assert atoms == [2, 2, 4]
+    assert a == [[0, 1], [2]]
+    assert b == [[0], [1, 2]]
+
+
+def test_refinement_size_one_factors():
+    atoms, a, b = common_refinement([2, 2, 4], [1, 8, 2])
+    assert math.prod(atoms) == 16
+    assert a[0] != [] and b[0] == []       # size-1 factor maps to no atoms
+
+
+def test_refinement_property_sweep():
+    """Property: atoms multiply to N; each factor = product of its atoms;
+    atom assignments are contiguous and disjoint."""
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        # random power-of-two factorizations of the same N
+        def rand_fact():
+            k = rng.integers(1, 4)
+            f = [int(2 ** rng.integers(0, 4)) for _ in range(k)]
+            return f
+        fa = rand_fact()
+        n = math.prod(fa)
+        # build fb as another factorization of n
+        rem, fb = n, []
+        while rem > 1:
+            d = int(2 ** rng.integers(1, max(int(math.log2(rem)), 1) + 1))
+            while rem % d:
+                d //= 2
+            fb.append(d)
+            rem //= d
+        if not fb:
+            fb = [1]
+        atoms, amap, bmap = common_refinement(fa, fb)
+        assert math.prod(atoms) == n
+        for f, mp in ((fa, amap), (fb, bmap)):
+            seen = []
+            for fi, idxs in zip(f, mp):
+                assert math.prod(atoms[i] for i in idxs) == fi
+                seen.extend(idxs)
+            assert seen == sorted(seen)            # contiguous, ordered
+            assert len(seen) == len(set(seen))     # disjoint
+
+
+def test_unfoldable_raises():
+    with pytest.raises(ValueError):
+        common_refinement([3, 4], [4, 3])
+
+
+@pytest.mark.parametrize("attn,moe,pp", [
+    ((2, 2, 2), (1, 8, 1), 1),     # paper appendix: EP folds all of TP,CP,DP
+    ((2, 2, 2), (2, 2, 2), 1),     # unfolded
+    ((1, 2, 2), (1, 4, 1), 2),     # folded, with pipeline stages
+    ((2, 2, 1), (1, 4, 1), 2),
+    ((4, 1, 2), (1, 4, 2), 1),
+    ((2, 1, 2), (2, 2, 1), 2),
+])
+def test_groups_match_megatron(attn, moe, pp):
+    """The folded mesh induces exactly the rank groups of paper Listing 1
+    (with pp outermost — DESIGN.md §2)."""
+    world = attn[0] * attn[1] * attn[2] * pp
+    p = ParallelConfig(attn=PM(*attn), moe=PM(*moe), pp=pp)
+    fm = build_folded_mesh(p)
+    ag, mg = megatron_groups(world, tp=attn[2], cp=attn[1],
+                             ep=moe[1], etp=moe[2], pp=pp)
+    assert folded_mesh_groups(fm, "attn", "tp") == ag["TP"]
+    assert folded_mesh_groups(fm, "attn", "cp") == ag["CP"]
+    assert folded_mesh_groups(fm, "attn", "dp") == ag["DP"]
+    assert folded_mesh_groups(fm, "moe", "ep") == mg["EP"]
+    assert folded_mesh_groups(fm, "moe", "etp") == mg["ETP"]
+    assert folded_mesh_groups(fm, "moe", "edp") == mg["EDP"]
+    # Paper §3.2: PP groups must be consistent between the two mappings.
+    assert ag["PP"] == mg["PP"]
+    assert folded_mesh_groups(fm, "attn", "pp") == ag["PP"]
+
+
+def test_groups_are_partitions():
+    p = ParallelConfig(attn=PM(2, 2, 2), moe=PM(1, 4, 2))
+    fm = build_folded_mesh(p)
+    for side, names in (("attn", ("dp", "cp", "tp")), ("moe", ("edp", "ep", "etp"))):
+        for n in names:
+            groups = folded_mesh_groups(fm, side, n)
+            flat = sorted(r for g in groups for r in g)
+            assert flat == list(range(8))
+
+
+def test_unfolded_predicate():
+    assert unfolded(ParallelConfig(attn=PM(2, 2, 2), moe=PM(2, 2, 2)))
+    assert not unfolded(ParallelConfig(attn=PM(2, 2, 2), moe=PM(1, 8, 1)))
+
+
+def test_mismatched_sizes_raise():
+    with pytest.raises(ValueError):
+        ParallelConfig(attn=PM(2, 2, 2), moe=PM(2, 2, 1))

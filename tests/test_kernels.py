@@ -1,0 +1,82 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU).
+
+Per the assignment: sweep shapes/dtypes and assert_allclose against ref.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash.flash import flash_attention
+from repro.kernels.flash.ref import flash_ref
+from repro.kernels.gmm.gmm import gmm
+from repro.kernels.gmm.ops import expert_ffn_gmm
+from repro.kernels.gmm.ref import gmm_ref, group_sizes_to_block_expert
+
+GMM_SHAPES = [
+    (256, 128, 128, 4, 128),
+    (512, 256, 384, 8, 64),
+    (1024, 128, 256, 2, 128),
+    (256, 384, 128, 16, 32),
+]
+
+
+@pytest.mark.parametrize("M,K,N,E,bm", GMM_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gmm_matches_ref(M, K, N, E, bm, dtype):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 2)
+    x = jax.random.normal(ks[0], (M, K)).astype(dtype)
+    w = (jax.random.normal(ks[1], (E, K, N)) * 0.1).astype(dtype)
+    be = jnp.asarray(np.random.default_rng(0).integers(0, E, M // bm), jnp.int32)
+    y = gmm(x, w, be, bm=bm, interpret=True)
+    yr = gmm_ref(x, w, be, bm=bm)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(y.astype(jnp.float32), yr.astype(jnp.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_gmm_group_sizes_helper():
+    gs = jnp.asarray([128, 256, 0, 128], jnp.int32)
+    be = group_sizes_to_block_expert(gs, 128)
+    assert be.tolist() == [0, 1, 1, 3]
+
+
+def test_gmm_expert_ffn_backend():
+    """expert_ffn_gmm == einsum expert FFN (dispatcher drop-in)."""
+    from repro.core.dispatcher import _expert_ffn_einsum
+    key = jax.random.PRNGKey(1)
+    E, N, D, F = 4, 128, 128, 256
+    ks = jax.random.split(key, 4)
+    xe = jax.random.normal(ks[0], (E, N, D))
+    w1 = jax.random.normal(ks[1], (E, D, F)) * 0.05
+    w2 = jax.random.normal(ks[2], (E, F, D)) * 0.05
+    w3 = jax.random.normal(ks[3], (E, D, F)) * 0.05
+    y1 = expert_ffn_gmm(xe, w1, w2, w3, "swiglu", interpret=True)
+    y2 = _expert_ffn_einsum(xe, w1, w2, w3, "swiglu")
+    np.testing.assert_allclose(y1, y2, atol=1e-4)
+
+
+FLASH_CASES = [
+    dict(B=2, H=4, Hkv=2, Sq=256, Skv=256, hd=64, causal=True, window=0, off=0),
+    dict(B=1, H=4, Hkv=4, Sq=128, Skv=512, hd=64, causal=True, window=0, off=384),
+    dict(B=2, H=8, Hkv=2, Sq=256, Skv=256, hd=128, causal=True, window=128, off=0),
+    dict(B=1, H=2, Hkv=2, Sq=256, Skv=256, hd=64, causal=False, window=0, off=0),
+]
+
+
+@pytest.mark.parametrize("c", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_kernel_matches_ref(c, dtype):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (c["B"], c["H"], c["Sq"], c["hd"])).astype(dtype)
+    k = jax.random.normal(ks[1], (c["B"], c["Hkv"], c["Skv"], c["hd"])).astype(dtype)
+    v = jax.random.normal(ks[2], (c["B"], c["Hkv"], c["Skv"], c["hd"])).astype(dtype)
+    y = flash_attention(q, k, v, q_offset=c["off"], causal=c["causal"],
+                        window=c["window"], interpret=True)
+    yr = flash_ref(q, k, v, q_offset=c["off"], causal=c["causal"],
+                   window=c["window"])
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(y.astype(jnp.float32), yr.astype(jnp.float32),
+                               atol=tol, rtol=tol)

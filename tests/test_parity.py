@@ -1,0 +1,103 @@
+"""Cross-mapping numerical parity — the JAX analogue of paper appendix 6.1.
+
+The same model + data must produce the same loss/gradients whether the MoE
+layer is folded (EP across TP×CP×DP) or unfolded, and decode must replay
+prefill logits. Dropless mode is used where drop decisions would otherwise
+legitimately differ across token chunkings (as in the paper's parity run).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.base import MoEConfig, ParallelConfig, ParallelMappingSpec as PM
+from repro.core.folding import build_folded_mesh
+from repro.models.transformer import (apply_lm, decode_step, init_decode_state,
+                                      init_lm)
+from repro.train.loop import loss_fn
+
+B, S = 8, 32
+
+
+def _dropless(cfg):
+    # fp32 so chunked-scan ↔ recurrence identities are exact.
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    if cfg.moe is None:
+        return cfg
+    # 8 experts so EP=8 mappings divide (parity tests aren't smoke tests).
+    return dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, dropless=True, n_experts=8))
+
+
+def _mk_batch(cfg, key):
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def test_folded_vs_unfolded_loss_and_grads():
+    """Paper Fig 7/8: folding changes the mapping, not the math."""
+    cfg = _dropless(reduced(get_config("dbrx-132b")))
+    key = jax.random.PRNGKey(0)
+    params = init_lm(key, cfg)
+    batch = _mk_batch(cfg, key)
+
+    results = []
+    for moe_spec in (PM(2, 2, 2), PM(1, 8, 1), PM(1, 4, 2)):
+        fm = build_folded_mesh(ParallelConfig(attn=PM(2, 2, 2), moe=moe_spec))
+        val, grads = jax.jit(jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg, fm)[0]))(params)
+        results.append((float(val), grads))
+    base_val, base_g = results[0]
+    for val, g in results[1:]:
+        assert abs(val - base_val) < 1e-4 * max(abs(base_val), 1)
+        for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(base_g)):
+            np.testing.assert_allclose(a, b, atol=5e-4, rtol=5e-3)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "xlstm-125m", "zamba2-2.7b",
+                                  "dbrx-132b"])
+def test_decode_replays_prefill_logits(arch, fm222):
+    """Greedy decode over a prompt reproduces the parallel forward's logits
+    (dense exactly; SSM validates the chunked-scan ↔ recurrence identity;
+    MoE in dropless mode)."""
+    cfg = _dropless(reduced(get_config(arch)))
+    key = jax.random.PRNGKey(1)
+    params = init_lm(key, cfg)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+
+    logits_full, _ = jax.jit(lambda p, b: apply_lm(p, b, cfg, fm222))(
+        params, {"tokens": toks})
+
+    state = init_decode_state(cfg, fm222, B, S, jnp.float32)
+    step_fn = jax.jit(lambda p, s, t: decode_step(p, s, t, cfg, fm222))
+    outs = []
+    for t in range(S):
+        lg, state = step_fn(params, state, toks[:, t:t + 1])
+        outs.append(lg)
+    logits_decode = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(logits_decode),
+                               np.asarray(logits_full), atol=2e-2, rtol=2e-2)
+
+
+def test_sub_sequence_vs_full_sequence_close_on_balanced_load():
+    """§3.3: sub-sequence dropping ≈ full-sequence when load is balanced.
+    With a huge capacity factor (no drops) they must be numerically equal."""
+    cfg = reduced(get_config("dbrx-132b"))
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0,
+                                     n_experts=8))
+    key = jax.random.PRNGKey(2)
+    params = init_lm(key, cfg)
+    batch = _mk_batch(cfg, key)
+    outs = {}
+    for policy in ("sub_sequence", "full_sequence"):
+        c = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, drop_policy=policy))
+        fm = build_folded_mesh(ParallelConfig(attn=PM(2, 2, 2), moe=PM(1, 8, 1)))
+        logits, _ = jax.jit(lambda p, b: apply_lm(p, b, c, fm))(params, batch)
+        outs[policy] = logits
+    np.testing.assert_allclose(outs["sub_sequence"], outs["full_sequence"],
+                               atol=1e-4)

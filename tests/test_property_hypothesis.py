@@ -1,0 +1,84 @@
+"""Hypothesis property tests on the system's core invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import MoEConfig
+from repro.core.folding import common_refinement
+from repro.core.router import capacity_per_expert, route
+from repro.roofline.analysis import _shape_bytes
+
+pow2 = st.integers(0, 4).map(lambda e: 2 ** e)
+
+
+@st.composite
+def factor_pair(draw):
+    """Two power-of-two factorizations of the same N."""
+    fa = draw(st.lists(pow2, min_size=1, max_size=4))
+    n = math.prod(fa)
+    fb, rem = [], n
+    while rem > 1:
+        d = draw(st.sampled_from([d for d in (2, 4, 8) if rem % d == 0] or [rem]))
+        fb.append(d)
+        rem //= d
+    return fa, fb or [1]
+
+
+@given(factor_pair())
+@settings(max_examples=200, deadline=None)
+def test_refinement_reconstructs_both_factorizations(pair):
+    fa, fb = pair
+    atoms, amap, bmap = common_refinement(fa, fb)
+    assert math.prod(atoms) == math.prod(fa) == math.prod(fb)
+    for f, mp in ((fa, amap), (fb, bmap)):
+        covered = []
+        for fi, idxs in zip(f, mp):
+            assert math.prod(atoms[i] for i in idxs) == fi
+            covered.extend(idxs)
+        assert covered == sorted(covered)              # ordered, contiguous
+        assert len(covered) == len(set(covered))       # disjoint
+        assert set(covered) == set(range(len(atoms)))  # complete cover
+
+
+@given(st.integers(1, 64), st.integers(1, 5).map(lambda e: 2 ** e),
+       st.integers(1, 4), st.floats(0.25, 4.0), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_router_capacity_and_position_invariants(t, e, k, cf, seed):
+    k = min(k, e)
+    mcfg = MoEConfig(n_experts=e, top_k=k, d_expert=8, capacity_factor=cf)
+    cap = capacity_per_expert(t, mcfg)
+    assert cap >= 1
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((t, 8)), jnp.float32)
+    wg = jnp.asarray(rng.standard_normal((8, e)), jnp.float32)
+    r = route(x, wg, mcfg, capacity=cap)
+    keep = np.asarray(r.keep)
+    idx = np.asarray(r.expert_idx)
+    pos = np.asarray(r.pos_in_expert)
+    # kept assignments per expert never exceed capacity, positions unique
+    for ee in range(e):
+        pe = pos[keep & (idx == ee)]
+        assert len(pe) <= cap
+        assert len(set(pe.tolist())) == len(pe)
+        assert (pe < cap).all()
+    # top-k rows select k distinct experts
+    assert all(len(set(row.tolist())) == k for row in idx)
+    # dropless capacity is provably lossless
+    r2 = route(x, wg, MoEConfig(n_experts=e, top_k=k, d_expert=8,
+                                dropless=True),
+               capacity=capacity_per_expert(t, MoEConfig(
+                   n_experts=e, top_k=k, d_expert=8, dropless=True)))
+    assert bool(jnp.all(r2.keep))
+
+
+@given(st.sampled_from(["bf16", "f32", "s32", "u8", "f16"]),
+       st.lists(st.integers(1, 64), min_size=0, max_size=4))
+@settings(max_examples=100, deadline=None)
+def test_hlo_shape_bytes_parser(dt, dims):
+    per = {"bf16": 2, "f32": 4, "s32": 4, "u8": 1, "f16": 2}[dt]
+    n = math.prod(dims) if dims else 1
+    s = f"{dt}[{','.join(map(str, dims))}]{{{','.join(map(str, range(len(dims))))}}}"
+    assert _shape_bytes(s) == n * per

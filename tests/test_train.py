@@ -1,0 +1,101 @@
+"""Training substrate: convergence, grad accumulation, optimizer, checkpoint."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.configs import get_config, reduced
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.optim import adamw
+from repro.train.loop import batch_shardings, init_train_state, make_train_step
+
+
+def test_moe_training_loss_decreases(fm_folded):
+    cfg = reduced(get_config("dbrx-132b"))
+    key = jax.random.PRNGKey(0)
+    params, opt = init_train_state(key, cfg, fm_folded)
+    step = make_train_step(cfg, fm_folded,
+                           adamw.AdamWConfig(lr=1e-3, warmup_steps=5,
+                                             decay_steps=100))
+    data = SyntheticTokens(DataConfig(seq_len=64, global_batch=8,
+                                      vocab_size=cfg.vocab_size))
+    bs = batch_shardings(cfg, fm_folded)
+    losses = []
+    for _, nb in zip(range(15), data):
+        batch = {k: jax.device_put(v, bs[k]) for k, v in nb.items() if k in bs}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0] - 0.3
+
+
+def test_grad_accumulation_equivalent(fm222):
+    """nmicro=2 must equal nmicro=1 up to numerics (mean-of-grads)."""
+    import dataclasses
+    from repro.core.folding import build_folded_mesh
+    cfg = reduced(get_config("llama3.2-1b"))
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (8, 33), 0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    outs = []
+    for nmicro in (0, 2):
+        pcfg = dataclasses.replace(fm222.pcfg, microbatch=nmicro)
+        fm = build_folded_mesh(pcfg)
+        params, opt = init_train_state(key, cfg, fm)
+        step = make_train_step(cfg, fm, adamw.AdamWConfig(lr=1e-3), donate=False)
+        bs = batch_shardings(cfg, fm)
+        sb = {k: jax.device_put(v, bs[k]) for k, v in batch.items()}
+        new_p, _, m = step(params, opt, sb)
+        outs.append((new_p, float(m["ce_loss"])))
+    (p1, l1), (p2, l2) = outs
+    assert abs(l1 - l2) < 1e-3
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+def test_adamw_schedule():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, decay_steps=110,
+                            min_lr_ratio=0.1)
+    assert float(adamw.schedule(cfg, jnp.int32(0))) == 0.0
+    assert abs(float(adamw.schedule(cfg, jnp.int32(10))) - 1.0) < 1e-6
+    assert abs(float(adamw.schedule(cfg, jnp.int32(110))) - 0.1) < 1e-6
+
+
+def test_grad_clip_bounds_update():
+    cfg = adamw.AdamWConfig(lr=1e-2, grad_clip=1.0, warmup_steps=0,
+                            decay_steps=10)
+    params = {"w": jnp.ones((4, 4))}
+    st = adamw.init(params)
+    grads = {"w": jnp.full((4, 4), 1e6)}
+    _, _, m = adamw.update(cfg, grads, st, params)
+    assert float(m["grad_norm"]) > 1e6  # raw norm reported
+    # clipped: effective |g| = 1 → update magnitude bounded by lr * O(1)
+
+
+def test_checkpoint_roundtrip(tmp_path, fm222):
+    cfg = reduced(get_config("llama3.2-1b"))
+    params, opt = init_train_state(jax.random.PRNGKey(2), cfg, fm222)
+    path = store.save(str(tmp_path), 3, {"params": params})
+    assert os.path.exists(path)
+    assert store.latest_step(str(tmp_path)) == 3
+    zeros = jax.tree.map(jnp.zeros_like, {"params": params})
+    restored = store.restore(str(tmp_path), 3, zeros)
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves({"params": params})):
+        np.testing.assert_allclose(a, b)
+
+
+def test_synthetic_data_deterministic_and_structured():
+    d1 = SyntheticTokens(DataConfig(seq_len=128, global_batch=4, vocab_size=1000, seed=7))
+    d2 = SyntheticTokens(DataConfig(seq_len=128, global_batch=4, vocab_size=1000, seed=7))
+    b1, b2 = next(d1), next(d2)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+    # repetition structure exists (some tokens repeat within the window)
+    t = b1["tokens"][0]
+    rep = sum(t[i] in t[max(0, i - 32):i] for i in range(1, len(t)))
+    assert rep > len(t) * 0.2
