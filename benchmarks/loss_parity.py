@@ -24,8 +24,10 @@ def main() -> None:
     from repro.train.loop import batch_shardings, init_train_state, make_train_step
 
     cfg = reduced(get_config("mixtral-8x22b"))
+    # reduced() caps n_experts at 4; the folded mapping below is EP8, so
+    # restore 8 experts to keep E % EP == 0.
     cfg = dataclasses.replace(
-        cfg, moe=dataclasses.replace(cfg.moe, dropless=True))
+        cfg, moe=dataclasses.replace(cfg.moe, dropless=True, n_experts=8))
     steps = 5 if QUICK else 25
     devices = np.asarray(jax.devices())[:8]
 

@@ -17,7 +17,7 @@ def main() -> None:
     key = jax.random.PRNGKey(0)
     devices = np.asarray(jax.devices())[:8]
 
-    # dispatcher (8-way folded EP)
+    # dispatcher (8-way folded EP): scatter/einsum vs sort/GMM permute modes
     D, F, E, K, T = 64, 128, 8, 2, 512
     pcfg = ParallelConfig(attn=PM(2, 2, 2), moe=PM(1, 8, 1))
     fm = build_folded_mesh(pcfg, devices=devices)
@@ -28,9 +28,32 @@ def main() -> None:
     w1 = jax.random.normal(ks[2], (E, D, F)) * 0.1
     w2 = jax.random.normal(ks[3], (E, F, D)) * 0.1
     w3 = jax.random.normal(ks[4], (E, D, F)) * 0.1
-    f = jax.jit(lambda *a: moe_ffn(*a, mcfg, fm)[0])
-    emit("micro/dispatcher_ep8_T512_D64", timeit(f, x, wg, w1, w2, w3),
-         "folded EP8; tokens=512")
+    f = jax.jit(lambda *a: moe_ffn(*a, mcfg, fm, permute_mode="scatter")[0])
+    emit("micro/dispatcher_scatter_einsum_ep8_T512_D64",
+         timeit(f, x, wg, w1, w2, w3), "folded EP8; scatter-add permute")
+    f = jax.jit(lambda *a: moe_ffn(*a, mcfg, fm, permute_mode="sort")[0])
+    emit("micro/dispatcher_sort_einsum_ep8_T512_D64",
+         timeit(f, x, wg, w1, w2, w3),
+         "folded EP8; sorted permute, einsum fallback (non-tileable shape)")
+
+    # MXU-tileable shape: the sorted layout routes expert compute through
+    # the Pallas GMM kernel (interpret mode here — compiled path is TPU).
+    Dg, Fg, Eg, Tg = 128, 256, 4, 1024
+    pcfg_g = ParallelConfig(attn=PM(2, 1, 1), moe=PM(1, 2, 1))
+    fm_g = build_folded_mesh(pcfg_g, devices=devices[:2])
+    mcfg_g = MoEConfig(n_experts=Eg, top_k=K, d_expert=Fg)
+    xg_ = jax.random.normal(ks[0], (Tg, Dg))
+    wgg = jax.random.normal(ks[1], (Dg, Eg)) * 0.1
+    w1g = jax.random.normal(ks[2], (Eg, Dg, Fg)) * 0.05
+    w2g = jax.random.normal(ks[3], (Eg, Fg, Dg)) * 0.05
+    w3g = jax.random.normal(ks[4], (Eg, Dg, Fg)) * 0.05
+    f = jax.jit(lambda *a: moe_ffn(*a, mcfg_g, fm_g, permute_mode="scatter")[0])
+    emit("micro/dispatcher_scatter_einsum_ep2_T1024_D128",
+         timeit(f, xg_, wgg, w1g, w2g, w3g), "tileable shape; einsum experts")
+    f = jax.jit(lambda *a: moe_ffn(*a, mcfg_g, fm_g, permute_mode="sort")[0])
+    emit("micro/dispatcher_sort_gmm_ep2_T1024_D128",
+         timeit(f, xg_, wgg, w1g, w2g, w3g),
+         "tileable shape; Pallas GMM experts (interpret on CPU)")
 
     # blockwise attention fwd+bwd
     q = jax.random.normal(ks[0], (2, 8, 512, 64))

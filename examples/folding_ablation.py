@@ -29,9 +29,10 @@ MAPPINGS = [
 
 
 def main():
+    # reduced() caps n_experts at 4; the EP8 fold below needs E % EP == 0.
     cfg = reduced(get_config("qwen2-57b-a14b"))
     cfg = dataclasses.replace(
-        cfg, moe=dataclasses.replace(cfg.moe, dropless=True))
+        cfg, moe=dataclasses.replace(cfg.moe, dropless=True, n_experts=8))
 
     curves = {}
     for name, moe in MAPPINGS:

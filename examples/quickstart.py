@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import dataclasses
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
@@ -26,7 +27,10 @@ def main():
     fm = build_folded_mesh(pcfg)
     print("mesh:", fm.describe())
 
+    # reduced() caps n_experts at 4; the EP8 fold above needs E % EP == 0.
     cfg = reduced(get_config("mixtral-8x22b"))
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, n_experts=8))
     print(f"model: {cfg.name} (reduced) — "
           f"{sum(p.size for p in jax.tree.leaves(jax.eval_shape(lambda k: __import__('repro.models.transformer', fromlist=['init_lm']).init_lm(k, cfg), jax.random.PRNGKey(0)))):,} params")
 

@@ -1,0 +1,33 @@
+"""Version compatibility shims for JAX API drift.
+
+The repo targets two generations of JAX:
+
+* old (``jax.experimental.shard_map.shard_map`` with ``check_rep``,
+  ``pltpu.CompilerParams``)
+* new (``jax.shard_map`` with ``check_vma``, ``pltpu.TPUCompilerParams``)
+
+Everything that is version-sensitive funnels through here (and through
+``repro.kernels.__init__`` for the Pallas side) so kernel/dispatcher code
+can be written once against a single spelling.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+
+def shard_map(f: Callable, *, mesh: Any, in_specs: Any, out_specs: Any) -> Callable:
+    """``jax.shard_map`` with replication checking off, on any JAX version.
+
+    The dispatcher's collectives produce values whose replication the
+    static checker cannot prove (all-to-all over folded atom tuples), so
+    both spellings disable it: ``check_vma=False`` (new) / ``check_rep=False``
+    (old).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)

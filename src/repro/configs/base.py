@@ -26,6 +26,20 @@ class MoEConfig:
     z_loss_coef: float = 1e-3        # router z-loss
     # "sub_sequence" (paper default) or "full_sequence" dropping decisions.
     drop_policy: str = "sub_sequence"
+    # Dispatcher permutation layout (docs/dispatcher.md):
+    #   "scatter" — scatter-add into per-expert capacity slots (seed path)
+    #   "sort"    — MegaBlocks-style stable sort by expert id; per-expert
+    #               spans are rounded up to the GMM row-block so the Pallas
+    #               grouped-matmul kernel is the expert-compute backend.
+    permute_mode: str = "scatter"
+    # Row-block the sorted layout aligns per-expert spans to (the Pallas GMM
+    # kernel's ``bm``). Only used by permute_mode="sort" when shapes are
+    # MXU-tileable; smoke shapes fall back to unaligned spans + einsum.
+    gmm_block_m: int = 128
+
+    def __post_init__(self):
+        if self.permute_mode not in ("scatter", "sort"):
+            raise ValueError(f"unknown permute_mode {self.permute_mode!r}")
 
 
 @dataclasses.dataclass(frozen=True)

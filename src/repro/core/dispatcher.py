@@ -2,7 +2,7 @@
 
 Forward workflow (Figure 2), verbatim in collective order:
 
-  1. router → permutation into per-expert capacity slots (local)
+  1. router → permutation into per-expert buffer spans (local)
   2. **All-to-All-V** across the EP group (here: `lax.all_to_all` over the
      EP *atom tuple* of the folded mesh; raggedness carried as capacity
      padding + keep masks, which is how static-shape TPU programs express
@@ -18,6 +18,27 @@ Because the mesh axes are the *common refinement* of the attention and MoE
 mappings (core/folding.py), steps 2/3/5 run over exactly the folded device
 groups the paper constructs — EP may span any sub-product of the attention
 TP×CP×DP axes.
+
+Two permutation layouts build the step-1 buffer (see docs/dispatcher.md):
+
+* ``permute_mode="scatter"`` — each kept assignment is scatter-added into
+  slot ``expert * capacity + pos_in_expert``. Simple, but dropless mode
+  must assume the worst case ``capacity = t`` per expert.
+* ``permute_mode="sort"`` — MegaBlocks-style: a stable argsort of the
+  assignments by expert id (token-order drop priority preserved) gives a
+  group-contiguous layout; per-expert spans are rounded up to the Pallas
+  GMM row-block ``bm`` and the ``block_expert`` scalar-prefetch array maps
+  each row-block to its expert, so
+  :func:`repro.kernels.gmm.ops.expert_ffn_gmm` is the default expert
+  backend (einsum remains the fallback for non-MXU-tileable smoke shapes).
+  In dropless mode the buffer is sized from the *actual* routed counts
+  bucketed to a small set of padded capacities
+  (:func:`repro.core.router.dropless_bucket_capacity`) instead of
+  ``capacity = t`` — restoring true dropless semantics under EP×ETP×EDP
+  without the ~``E/top_k``× padding blow-up.
+
+Both layouts share steps 2–6 unchanged: the collectives operate on the
+(E, capacity, D) expert-major buffer regardless of how rows were placed.
 """
 from __future__ import annotations
 
@@ -29,9 +50,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import MoEConfig
 from repro.core.folding import FoldedMesh
-from repro.core.router import capacity_per_expert, route
+from repro.core.router import (capacity_per_expert, dropless_bucket_capacity,
+                               route, sorted_dispatch)
 from repro.models.common import activation as act_fn
 
 Array = jax.Array
@@ -46,6 +69,66 @@ def _expert_ffn_einsum(xe: Array, w1: Array, w2: Array, w3: Array,
     return jnp.einsum("enf,efd->end", h, w2)
 
 
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _token_shards(x: Array, fm: FoldedMesh, *, token_pad_ok: bool = True
+                  ) -> Tuple[Tuple[str, ...], int, Array, int, int]:
+    """Token chunking shared by :func:`moe_ffn` and
+    :func:`routed_capacity_hint` — both MUST see identical per-rank chunks.
+
+    Returns ``(token_axes, n_shards, x_padded, t_local, pad)``.
+    """
+    token_axes = (fm.axis("moe", "edp") + fm.axis("moe", "ep")
+                  + fm.axis("moe", "etp"))
+    n_shards = max(1, math.prod(fm.mesh.shape[a] for a in token_axes))
+    T = x.shape[0]
+    pad = (-T) % n_shards
+    if pad:
+        if not token_pad_ok:
+            raise ValueError(f"T={T} not divisible by token shards {n_shards}")
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return token_axes, n_shards, x, (T + pad) // n_shards, pad
+
+
+def routed_capacity_hint(x: Array, wg: Array, mcfg: MoEConfig, fm: FoldedMesh,
+                         *, block: Optional[int] = None) -> int:
+    """Host-side pre-pass for the sorted dropless layout.
+
+    Routes every rank's token chunk through :func:`route` exactly as
+    :func:`moe_ffn` will, takes the max per-(rank, expert) routed count, and
+    buckets it with :func:`dropless_bucket_capacity`. The returned Python
+    int is a static ``capacity_hint`` — calling this forces a host sync, so
+    use it as a pre-pass outside the jitted train step (one compilation per
+    bucket).
+
+    The hint is only valid for the batch (or batch distribution) it was
+    computed from: a batch whose routed counts exceed the bucket WILL drop
+    the overflow assignments despite ``dropless=True``. Recompute per batch,
+    or monitor ``moe_drop_fraction`` in the dispatcher's stats — it is
+    exactly zero whenever the hint held (tests/test_dispatcher_sort.py
+    covers both directions).
+    """
+    T, D = x.shape
+    _, n_shards, x, t_local, _ = _token_shards(x, fm)
+    chunks = x.reshape(n_shards, t_local, D)
+    valid = (jnp.arange(n_shards)[:, None] * t_local
+             + jnp.arange(t_local)[None, :]) < T                # mask padding
+
+    def counts_one(xc, mask):
+        # Same selection the dispatcher makes (capacity only affects keep,
+        # which dropless counting ignores — every routed assignment counts).
+        r = route(xc, wg, mcfg, capacity=t_local, token_mask=mask)
+        oh = jax.nn.one_hot(r.expert_idx, mcfg.n_experts, dtype=jnp.int32)
+        return jnp.sum(oh * mask[:, None, None], axis=(0, 1))    # (E,)
+
+    counts = jax.vmap(counts_one)(chunks, valid)                 # (n, E)
+    max_count = int(jax.device_get(counts.max()))
+    return dropless_bucket_capacity(max_count, block=block or mcfg.gmm_block_m,
+                                    n_tokens=t_local)
+
+
 def moe_ffn(
     x: Array,
     wg: Array,
@@ -56,7 +139,9 @@ def moe_ffn(
     fm: FoldedMesh,
     *,
     activation: str = "swiglu",
-    expert_fn: Callable = _expert_ffn_einsum,
+    expert_fn: Optional[Callable] = None,
+    permute_mode: Optional[str] = None,
+    capacity_hint: Optional[int] = None,
     token_pad_ok: bool = True,
 ) -> Tuple[Array, Dict[str, Array]]:
     """Apply the MoE FFN to a flat batch of tokens.
@@ -68,22 +153,35 @@ def moe_ffn(
 
     Weights arrive with compute sharding: ``wg`` replicated, ``w1/w2/w3``
     sharded (EP on the expert dim, ETP on the FFN dim).
+
+    ``permute_mode`` overrides ``mcfg.permute_mode`` ("scatter" | "sort").
+    ``expert_fn`` overrides the expert backend (default: einsum for the
+    scatter layout, the Pallas GMM kernel for the sorted layout).
+    ``capacity_hint`` (sort + dropless only): static bucketed capacity from
+    :func:`routed_capacity_hint`; replaces the worst-case ``capacity = t``.
+    The hint must cover this batch's routed counts — an undersized hint
+    drops the overflow (visible as ``moe_drop_fraction > 0`` in the
+    returned stats, which is otherwise exactly 0 under dropless).
     """
+    mode = permute_mode if permute_mode is not None else mcfg.permute_mode
+    if mode not in ("scatter", "sort"):
+        raise ValueError(f"unknown permute_mode {mode!r}")
+    use_sort = mode == "sort"
+    if capacity_hint is not None and mcfg.drop_policy == "full_sequence":
+        # The full-sequence branch recomputes capacity from the gathered
+        # sequence; a hint would be silently ignored there.
+        raise ValueError("capacity_hint is not supported with "
+                         "drop_policy='full_sequence'")
+
     ep_axes = fm.axis("moe", "ep")
     etp_axes = fm.axis("moe", "etp")
     edp_axes = fm.axis("moe", "edp")
-    token_axes = edp_axes + ep_axes + etp_axes
     mesh = fm.mesh
 
-    n_shards = max(1, math.prod(mesh.shape[a] for a in token_axes))
     T, D = x.shape
-    pad = (-T) % n_shards
-    if pad:
-        if not token_pad_ok:
-            raise ValueError(f"T={T} not divisible by token shards {n_shards}")
-        x = jnp.pad(x, ((0, pad), (0, 0)))
+    token_axes, n_shards, x, t_local, pad = _token_shards(
+        x, fm, token_pad_ok=token_pad_ok)
     T_pad = T + pad
-    t_local = T_pad // n_shards
 
     E = mcfg.n_experts
     ep = fm.ep
@@ -92,6 +190,20 @@ def moe_ffn(
         raise ValueError(f"n_experts {E} not divisible by EP {ep}")
     e_local = E // ep
     cap = capacity_per_expert(t_local, mcfg)
+    if use_sort and mcfg.dropless and capacity_hint is not None:
+        # Rebucketed dropless: buffer sized from actual routed counts.
+        cap = max(1, min(int(capacity_hint), t_local))
+
+    # Span alignment for the sorted layout: round per-expert spans to the
+    # GMM row-block when local shapes are MXU-tileable, so the grouped
+    # matmul kernel applies. F is ETP-sharded inside the shard_map.
+    f_local = w1.shape[-1] // max(1, etp)
+    gmm_ok = (use_sort and mcfg.gmm_block_m >= 8
+              and D % 128 == 0 and f_local % 128 == 0)
+    span_block = mcfg.gmm_block_m if gmm_ok else 1
+    default_gmm = use_sort and expert_fn is None
+    if expert_fn is None and not use_sort:
+        expert_fn = _expert_ffn_einsum
 
     def local_fn(x_l, wg_l, w1_l, w2_l, w3_l, tmask_l):
         # ------------------------------------------------ 0. FSDP gather (EDP)
@@ -107,7 +219,6 @@ def moe_ffn(
             # Gather router logits across the sequence-sharding atoms so the
             # drop decision sees the full sequence (paper §3.3 option 1).
             seq_axes = ep_axes + etp_axes
-            g = math.prod(mesh.shape[a] for a in seq_axes)
             logits_l = jnp.einsum("td,de->te", x_l.astype(jnp.float32),
                                   wg_l.astype(jnp.float32))
             # Re-use route() on gathered logits via a shim: route() computes
@@ -133,51 +244,85 @@ def moe_ffn(
             capacity = cap
 
         K = mcfg.top_k
-        idx_flat = (r.expert_idx * capacity + r.pos_in_expert).reshape(-1)  # (t*K,)
-        idx_flat = jnp.where(r.keep.reshape(-1), idx_flat, E * capacity)    # OOB = drop
-        buf = jnp.zeros((E * capacity, D), x_l.dtype)
-        src = jnp.repeat(x_l, K, axis=0)                                    # (t*K, D)
-        buf = buf.at[idx_flat].add(src, mode="drop")
-        buf = buf.reshape(ep, e_local, capacity, D)
+        cap_pad = _round_up(capacity, span_block)
+        flat_e = r.expert_idx.reshape(-1)                                   # (t*K,)
+        keep_flat = r.keep.reshape(-1)
+        if use_sort:
+            # Stable sort by expert id → group-contiguous rows, drops last.
+            # Buffer rows are gathered (not scatter-added): row e*cap_pad + p
+            # holds the p-th kept assignment of expert e in token order.
+            sd = sorted_dispatch(r.expert_idx, r.keep, E)
+            L = flat_e.shape[0]
+            row = jnp.arange(E * cap_pad, dtype=jnp.int32)
+            e_of = row // cap_pad
+            p_of = row % cap_pad
+            valid = p_of < sd.group_sizes[e_of]
+            src_sorted = jnp.minimum(sd.group_offsets[e_of] + p_of, L - 1)
+            src_tok = sd.perm[src_sorted] // K
+            buf = jnp.where(valid[:, None], x_l[src_tok], 0).astype(x_l.dtype)
+            # Combine index: each kept assignment's span position is its
+            # sorted-stream position minus its expert's group offset.
+            span_pos = sd.inv_perm - sd.group_offsets[flat_e]
+            idx_flat = flat_e * cap_pad + span_pos
+        else:
+            idx_flat = flat_e * cap_pad + r.pos_in_expert.reshape(-1)
+        idx_flat = jnp.where(keep_flat, idx_flat, E * cap_pad)             # OOB = drop
+        if not use_sort:
+            buf = jnp.zeros((E * cap_pad, D), x_l.dtype)
+            src = jnp.repeat(x_l, K, axis=0)                               # (t*K, D)
+            buf = buf.at[idx_flat].add(src, mode="drop")
+        buf = buf.reshape(ep, e_local, cap_pad, D)
 
         # ------------------------------------------------ 2. All-to-All-V (EP)
         if ep > 1:
             buf = jax.lax.all_to_all(buf, ep_axes, split_axis=0, concat_axis=0,
                                      tiled=True)
-        # buf: (ep_src, e_local, capacity, D)
+        # buf: (ep_src, e_local, cap_pad, D)
 
         # ------------------------------------------------ 3. AllGather-V (ETP)
         if etp > 1:
             buf = jax.lax.all_gather(buf, etp_axes, axis=0, tiled=False)
-            # (etp, ep_src, e_local, capacity, D)
-            buf = buf.reshape(etp * ep, e_local, capacity, D)
+            # (etp, ep_src, e_local, cap_pad, D)
+            buf = buf.reshape(etp * ep, e_local, cap_pad, D)
 
         n_src = buf.shape[0]
-        xe = buf.transpose(1, 0, 2, 3).reshape(e_local, n_src * capacity, D)
+        xe = buf.transpose(1, 0, 2, 3).reshape(e_local, n_src * cap_pad, D)
 
         # ------------------------------------------------ 4. expert compute
-        ye = expert_fn(xe, w1_l, w2_l, w3_l, activation)
+        if default_gmm:
+            from repro.kernels.gmm.ops import expert_ffn_gmm
+            if gmm_ok:
+                # Uniform spans of cap_pad rows per (source, expert) — the
+                # block_expert scalar-prefetch array is static.
+                be = jnp.repeat(jnp.arange(e_local, dtype=jnp.int32),
+                                n_src * cap_pad // span_block)
+                ye = expert_ffn_gmm(xe, w1_l, w2_l, w3_l, activation,
+                                    bm=span_block, block_expert=be)
+            else:
+                ye = expert_ffn_gmm(xe, w1_l, w2_l, w3_l, activation)
+        else:
+            ye = expert_fn(xe, w1_l, w2_l, w3_l, activation)
 
-        yb = ye.reshape(e_local, n_src, capacity, D).transpose(1, 0, 2, 3)
+        yb = ye.reshape(e_local, n_src, cap_pad, D).transpose(1, 0, 2, 3)
 
         # ------------------------------------------------ 5. ReduceScatter-V (ETP)
         if etp > 1:
-            yb = yb.reshape(etp, ep, e_local, capacity, D)
+            yb = yb.reshape(etp, ep, e_local, cap_pad, D)
             yb = jax.lax.psum_scatter(yb, etp_axes, scatter_dimension=0,
                                       tiled=False)
-        # yb: (ep_src, e_local, capacity, D)
+        # yb: (ep_src, e_local, cap_pad, D)
 
         # ------------------------------------------------ 6. All-to-All-V back
         if ep > 1:
             yb = jax.lax.all_to_all(yb, ep_axes, split_axis=0, concat_axis=0,
                                     tiled=True)
-        # yb: (ep_dst, e_local, capacity, D) — original (E, capacity) layout
+        # yb: (ep_dst, e_local, cap_pad, D) — original (E, cap_pad) layout
 
         # ------------------------------------------------ 7. un-permute + combine
-        out_flat = yb.reshape(E * capacity, D)
-        safe_idx = jnp.minimum(idx_flat, E * capacity - 1)
+        out_flat = yb.reshape(E * cap_pad, D)
+        safe_idx = jnp.minimum(idx_flat, E * cap_pad - 1)
         gath = out_flat[safe_idx]                                           # (t*K, D)
-        w = (r.combine_w.reshape(-1) * r.keep.reshape(-1)).astype(jnp.float32)
+        w = (r.combine_w.reshape(-1) * keep_flat).astype(jnp.float32)
         y = (gath.astype(jnp.float32) * w[:, None]).reshape(-1, K, D).sum(axis=1)
         y = y.astype(x_l.dtype)
 
@@ -185,15 +330,21 @@ def moe_ffn(
         n_axes = token_axes
         aux = jax.lax.pmean(r.aux_loss, n_axes) if n_axes else r.aux_loss
         zl = jax.lax.pmean(r.z_loss, n_axes) if n_axes else r.z_loss
+        # Drop fraction over *real* tokens only — batch-padding rows are not
+        # drops, so this is exactly 0 under dropless (see capacity_hint).
         kept = r.keep & tmask_l[:, None]
-        dropf = 1.0 - jnp.mean(kept.astype(jnp.float32))
-        dropf = jax.lax.pmean(dropf, n_axes) if n_axes else dropf
+        kept_ct = jnp.sum(kept.astype(jnp.float32))
+        tot_ct = jnp.sum(tmask_l.astype(jnp.float32)) * K
+        if n_axes:
+            kept_ct = jax.lax.psum(kept_ct, n_axes)
+            tot_ct = jax.lax.psum(tot_ct, n_axes)
+        dropf = 1.0 - kept_ct / jnp.maximum(tot_ct, 1.0)
         return y, aux, zl, dropf
 
     tok_spec = P(token_axes or None, None)
     mask = jnp.arange(T_pad) < T                                            # padding mask
     edp_or = edp_axes or None
-    fn = jax.shard_map(
+    fn = shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(
@@ -205,7 +356,6 @@ def moe_ffn(
             P(token_axes or None),                      # token mask
         ),
         out_specs=(tok_spec, P(), P(), P()),
-        check_vma=False,
     )
     y, aux, zl, dropf = fn(x, wg, w1, w2, w3, mask)
     if pad:

@@ -7,7 +7,7 @@ same set the MoE mapping (EDP×EP×ETP) factorizes — no collective needed.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,9 +42,16 @@ def init_moe(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
     }
 
 
-def moe_block(p: Dict, x: Array, cfg: ModelConfig, fm: FoldedMesh,
+def moe_block(p: Dict, x: Array, cfg: ModelConfig, fm: FoldedMesh, *,
+              permute_mode: Optional[str] = None,
+              capacity_hint: Optional[int] = None,
               ) -> Tuple[Array, Dict[str, Array]]:
-    """x: (B, S, D) sharded (dp, cp×tp, -) → same, plus aux losses."""
+    """x: (B, S, D) sharded (dp, cp×tp, -) → same, plus aux losses.
+
+    ``permute_mode``/``capacity_hint`` override ``cfg.moe.permute_mode`` and
+    (sort + dropless) the static bucketed capacity — see
+    :func:`repro.core.dispatcher.moe_ffn`.
+    """
     assert cfg.moe is not None
     B, S, D = x.shape
     xt = x.reshape(B * S, D)
@@ -58,6 +65,7 @@ def moe_block(p: Dict, x: Array, cfg: ModelConfig, fm: FoldedMesh,
     w2 = constrain(p["experts"]["w2"], fm, "moe", "ep", "etp", "edp")
 
     y, aux = moe_ffn(xt, p["router"], w1, w2, w3, cfg.moe, fm,
-                     activation=cfg.activation)
+                     activation=cfg.activation, permute_mode=permute_mode,
+                     capacity_hint=capacity_hint)
     y = y.reshape(B, S, D)
     return constrain(y, fm, "attn", "dp", ("cp", "tp"), None), aux

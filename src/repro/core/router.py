@@ -37,6 +37,29 @@ def capacity_per_expert(n_tokens: int, cfg: MoEConfig) -> int:
     return max(1, int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts))
 
 
+def dropless_bucket_capacity(max_count: int, *, block: int = 128,
+                             n_tokens: Optional[int] = None) -> int:
+    """Bucket an observed per-(rank, expert) max routed count into a static
+    capacity for the sorted dropless layout.
+
+    Instead of the worst case ``capacity = t`` (every token to one expert),
+    the sorted path sizes its buffer from the *actual* routed counts. TPU
+    programs need static shapes, so the count is rounded up to a small set
+    of padded capacities — powers of two times the GMM row-block — bounding
+    recompilation at ``log2(t / block)`` variants while keeping the buffer
+    within 2× of the true demand.
+    """
+    if max_count < 0:
+        raise ValueError(f"max_count must be >= 0, got {max_count}")
+    cap = max(1, block)
+    while cap < max_count:
+        cap *= 2
+    if n_tokens is not None:
+        # Never exceed the provable worst case (one expert takes every token).
+        cap = min(cap, max(max_count, n_tokens))
+    return cap
+
+
 def route(x: Array, w_gate: Array, cfg: MoEConfig, *, capacity: int,
           token_mask: Optional[Array] = None) -> RouterOutput:
     """Route a chunk of tokens. ``x``: (t, D); ``w_gate``: (D, E).
@@ -87,3 +110,71 @@ def route(x: Array, w_gate: Array, cfg: MoEConfig, *, capacity: int,
         z_loss=z_loss,
         probs=probs,
     )
+
+
+# ---------------------------------------------------------------------------
+# Sorted-permutation metadata (the MegaBlocks-style "sort" dispatch layout)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SortedDispatch:
+    """Expert-sorted view of one rank's routed assignments.
+
+    ``L = t * top_k`` flat assignment ids; dropped assignments sort after
+    every expert group (key ``n_experts``), so the first
+    ``sum(group_sizes)`` entries of ``perm`` are the kept assignments in
+    (expert-major, token-order) order — token-order drop priority is
+    preserved because the argsort is stable.
+    """
+
+    perm: Array           # (L,) int32 — assignment ids in expert-sorted order
+    inv_perm: Array       # (L,) int32 — position of each assignment in ``perm``
+    group_sizes: Array    # (E,) int32 — kept assignments per expert
+    group_offsets: Array  # (E,) int32 — exclusive cumsum of group_sizes
+
+
+def sorted_dispatch(expert_idx: Array, keep: Array, n_experts: int) -> SortedDispatch:
+    """Stable argsort of assignments by expert id, drops last.
+
+    ``expert_idx``/``keep``: (t, K) from :func:`route`.
+    """
+    flat_e = expert_idx.reshape(-1).astype(jnp.int32)            # (L,)
+    kept = keep.reshape(-1)
+    key = jnp.where(kept, flat_e, n_experts)
+    perm = jnp.argsort(key, stable=True).astype(jnp.int32)
+    inv_perm = jnp.argsort(perm, stable=True).astype(jnp.int32)
+    group_sizes = jnp.zeros((n_experts,), jnp.int32).at[flat_e].add(
+        kept.astype(jnp.int32))
+    group_offsets = jnp.cumsum(group_sizes) - group_sizes
+    return SortedDispatch(perm=perm, inv_perm=inv_perm,
+                          group_sizes=group_sizes.astype(jnp.int32),
+                          group_offsets=group_offsets.astype(jnp.int32))
+
+
+def padded_group_spans(group_sizes: Array, bm: int) -> Tuple[Array, Array]:
+    """Round each expert's row span up to the GMM row-block ``bm``.
+
+    Returns ``(padded_sizes, padded_offsets)`` — the contiguous ragged
+    layout MegaBlocks uses: expert ``e`` owns rows
+    ``[padded_offsets[e], padded_offsets[e] + padded_sizes[e])`` and only
+    the first ``group_sizes[e]`` of them hold real tokens.
+    """
+    padded = ((group_sizes + bm - 1) // bm) * bm
+    offsets = jnp.cumsum(padded) - padded
+    return padded.astype(jnp.int32), offsets.astype(jnp.int32)
+
+
+def block_expert_from_group_sizes(group_sizes: Array, bm: int,
+                                  num_blocks: int) -> Array:
+    """Scalar-prefetch array for ``repro.kernels.gmm``: expert id per
+    ``bm``-row block of the padded ragged layout.
+
+    ``num_blocks`` is the static block count the kernel is launched with
+    (``>= sum(padded_sizes) // bm``); trailing blocks past the last span
+    clamp to the last expert and multiply padding rows only.
+    """
+    padded, _ = padded_group_spans(group_sizes, bm)
+    ends = jnp.cumsum(padded)                                     # rows
+    starts = jnp.arange(num_blocks, dtype=jnp.int32) * bm
+    be = jnp.searchsorted(ends, starts, side="right")
+    return jnp.clip(be, 0, group_sizes.shape[0] - 1).astype(jnp.int32)

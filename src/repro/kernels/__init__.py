@@ -1,3 +1,17 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Pallas API-drift shim: the TPU compiler-params dataclass was renamed
+# (CompilerParams ↔ TPUCompilerParams) across JAX releases. Kernel modules
+# under this package use ``pltpu.TPUCompilerParams``; importing them first
+# imports this package, so patching here makes both spellings work on both
+# JAX generations.
+from jax.experimental.pallas import tpu as _pltpu
+
+if not hasattr(_pltpu, "TPUCompilerParams") and hasattr(_pltpu, "CompilerParams"):
+    _pltpu.TPUCompilerParams = _pltpu.CompilerParams
+elif not hasattr(_pltpu, "CompilerParams") and hasattr(_pltpu, "TPUCompilerParams"):
+    _pltpu.CompilerParams = _pltpu.TPUCompilerParams
+
+del _pltpu

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -10,33 +11,51 @@ from repro.kernels.gmm.gmm import gmm
 from repro.models.common import activation as act_fn
 
 
-def _pick_bm(n_tok: int) -> int:
+def pick_bm(n_tok: int) -> int:
+    """Largest MXU-friendly row-block dividing ``n_tok`` (1 = not tileable)."""
     for bm in (128, 64, 32, 16, 8):
         if n_tok % bm == 0:
             return bm
     return 1
 
 
+def default_interpret() -> bool:
+    """Pallas interpret mode unless we are actually on TPU hardware."""
+    return jax.default_backend() != "tpu"
+
+
 def expert_ffn_gmm(xe: jax.Array, w1: jax.Array, w2: jax.Array, w3: jax.Array,
-                   activation: str, *, interpret: bool = True) -> jax.Array:
+                   activation: str, *, bm: Optional[int] = None,
+                   block_expert: Optional[jax.Array] = None,
+                   interpret: Optional[bool] = None) -> jax.Array:
     """Dispatcher ``expert_fn`` backend using the Pallas GMM kernel.
 
-    xe: (E_local, N, D) capacity-grouped tokens — flattened to (E_local*N, D)
-    with uniform groups of N rows, which satisfies the kernel's
-    block-alignment requirement whenever N % bm == 0.
+    xe: (E_local, N, D) tokens grouped by expert — flattened to (E_local*N, D).
+    With the default uniform layout each expert owns exactly N contiguous
+    rows; the sorted dispatcher can instead pass its own ``block_expert``
+    scalar-prefetch array (expert id per ``bm``-row block) built from the
+    routed group sizes, as long as N % bm == 0 so blocks never straddle
+    groups.
+
+    ``interpret=None`` resolves per backend: compiled on TPU, interpret mode
+    everywhere else (CPU CI, tests).
     """
     E, N, D = xe.shape
     F = w1.shape[-1]
-    bm = _pick_bm(N)
-    if bm < 8 or D % 128 or F % 128:
+    bm = bm if bm is not None else pick_bm(N)
+    if bm < 8 or N % bm or D % 128 or F % 128:
         # Shapes not MXU-tileable (smoke-size) — use the einsum path.
         gate = jnp.einsum("end,edf->enf", xe, w1)
         up = jnp.einsum("end,edf->enf", xe, w3)
         return jnp.einsum("enf,efd->end", act_fn(activation, gate, up), w2)
 
+    if interpret is None:
+        interpret = default_interpret()
     x2 = xe.reshape(E * N, D)
-    be = jnp.repeat(jnp.arange(E, dtype=jnp.int32), N // bm,
-                    total_repeat_length=E * N // bm)
+    be = block_expert
+    if be is None:
+        be = jnp.repeat(jnp.arange(E, dtype=jnp.int32), N // bm,
+                        total_repeat_length=E * N // bm)
     call = functools.partial(gmm, bm=bm, interpret=interpret)
     gate = call(x2, w1, be)
     up = call(x2, w3, be)

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 from repro.core.folding import FoldedMesh
 from repro.models.attn_core import blockwise_attention
@@ -190,7 +191,7 @@ def attention_decode(
             acc = jax.lax.psum(acc * scale[..., None], cp_a)
         return (acc / jnp.maximum(l[..., None], 1e-30)).astype(q_l.dtype)
 
-    out = jax.shard_map(
+    out = shard_map(
         local,
         mesh=fm.mesh,
         in_specs=(
@@ -201,7 +202,6 @@ def attention_decode(
             P(dp_a, cp_a or None),
         ),
         out_specs=P(dp_a, tp_q, None, None),
-        check_vma=False,
     )(q, cache_k, cache_v, pos, kv_pos)
 
     out = out.transpose(0, 2, 1, 3).reshape(B, 1, cfg.q_dim)

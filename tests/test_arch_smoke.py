@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-minute model builds/compiles
+
 from repro.configs import ASSIGNED, get_config, reduced
 from repro.data.pipeline import materialize_batch
 from repro.models.transformer import apply_lm, init_lm

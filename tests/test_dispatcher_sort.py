@@ -1,0 +1,252 @@
+"""Sorted (MegaBlocks-style) dispatch layout: parity with the scatter path
+and the pure-jnp oracle, dropless rebucketing exactness, GMM kernel wiring,
+and the router's sorted-permutation metadata invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoEConfig, ParallelConfig, ParallelMappingSpec as PM
+from repro.core.dispatcher import moe_ffn, moe_ffn_reference, routed_capacity_hint
+from repro.core.folding import build_folded_mesh
+from repro.core.router import (block_expert_from_group_sizes,
+                               capacity_per_expert, dropless_bucket_capacity,
+                               padded_group_spans, route, sorted_dispatch)
+
+D, F, E, T = 16, 32, 8, 64
+
+
+def _weights(key, d=D, f=F, e=E, t=T):
+    ks = jax.random.split(key, 5)
+    return (jax.random.normal(ks[0], (t, d)),
+            jax.random.normal(ks[1], (d, e)) * 0.1,
+            jax.random.normal(ks[2], (e, d, f)) * 0.1,
+            jax.random.normal(ks[3], (e, f, d)) * 0.1,
+            jax.random.normal(ks[4], (e, d, f)) * 0.1)
+
+
+def _mesh(ep, etp):
+    world = ep * etp
+    pcfg = ParallelConfig(attn=PM(dp=world, inner=1, tp=1),
+                          moe=PM(dp=1, inner=ep, tp=etp))
+    return build_folded_mesh(pcfg)
+
+
+@pytest.mark.parametrize("top_k", [1, 2])
+@pytest.mark.parametrize("ep", [1, 2])
+@pytest.mark.parametrize("etp", [1, 2])
+@pytest.mark.parametrize("dropless", [False, True])
+def test_sort_matches_scatter_and_reference(top_k, ep, etp, dropless):
+    """Acceptance sweep: sort == scatter == oracle to 1e-5 (f32) under
+    capacity-drop and dropless, across EP×ETP."""
+    fm = _mesh(ep, etp)
+    mcfg = MoEConfig(n_experts=E, top_k=top_k, d_expert=F,
+                     capacity_factor=1.0, dropless=dropless)
+    x, wg, w1, w2, w3 = _weights(jax.random.PRNGKey(top_k * 10 + ep * 2 + etp))
+    y_sc, aux_sc = jax.jit(
+        lambda *a: moe_ffn(*a, mcfg, fm, permute_mode="scatter"))(x, wg, w1, w2, w3)
+    y_so, aux_so = jax.jit(
+        lambda *a: moe_ffn(*a, mcfg, fm, permute_mode="sort"))(x, wg, w1, w2, w3)
+    np.testing.assert_allclose(y_so, y_sc, atol=1e-5)
+    np.testing.assert_allclose(aux_so["moe_drop_fraction"],
+                               aux_sc["moe_drop_fraction"], atol=1e-6)
+    n = fm.mesh.devices.size
+    yref, _ = moe_ffn_reference(x.reshape(n, T // n, D), wg, w1, w2, w3, mcfg)
+    np.testing.assert_allclose(y_so, yref.reshape(T, D), atol=1e-5)
+
+
+def test_sort_mode_via_config_knob():
+    """MoEConfig(permute_mode="sort") selects the sorted layout end to end."""
+    fm = _mesh(2, 1)
+    mcfg = MoEConfig(n_experts=E, top_k=2, d_expert=F, permute_mode="sort")
+    x, wg, w1, w2, w3 = _weights(jax.random.PRNGKey(7))
+    y, _ = jax.jit(lambda *a: moe_ffn(*a, mcfg, fm))(x, wg, w1, w2, w3)
+    yref, _ = moe_ffn_reference(x.reshape(2, T // 2, D), wg, w1, w2, w3, mcfg)
+    np.testing.assert_allclose(y, yref.reshape(T, D), atol=1e-5)
+    with pytest.raises(ValueError):
+        MoEConfig(n_experts=E, top_k=2, d_expert=F, permute_mode="bogus")
+
+
+def test_sort_gradients_match_scatter():
+    """The gather-based permutation is differentiable and matches the
+    scatter-add path's gradients."""
+    fm = _mesh(2, 2)
+    mcfg = MoEConfig(n_experts=E, top_k=2, d_expert=F)
+    x, wg, w1, w2, w3 = _weights(jax.random.PRNGKey(3))
+    p = dict(wg=wg, w1=w1, w2=w2, w3=w3)
+
+    def loss(mode):
+        def f(p):
+            y, aux = moe_ffn(x, p["wg"], p["w1"], p["w2"], p["w3"], mcfg, fm,
+                             permute_mode=mode)
+            return jnp.sum(y ** 2) + 0.01 * aux["moe_aux_loss"]
+        return f
+
+    g_sc = jax.jit(jax.grad(loss("scatter")))(p)
+    g_so = jax.jit(jax.grad(loss("sort")))(p)
+    for k in p:
+        rel = float(jnp.max(jnp.abs(g_so[k] - g_sc[k]))) / \
+            (float(jnp.max(jnp.abs(g_sc[k]))) + 1e-9)
+        assert rel < 1e-5, k
+
+
+def test_sort_gmm_kernel_exercised_on_tileable_shape(monkeypatch):
+    """On an MXU-tileable shape the sorted layout routes expert compute
+    through the Pallas GMM kernel (interpret mode on CPU) — and still
+    matches the einsum-backed scatter path."""
+    import repro.core.dispatcher as disp
+    import repro.kernels.gmm.ops as ops
+    d, f, e, t, top_k = 128, 256, 4, 512, 2
+    calls = []
+    real_gmm = ops.gmm
+
+    def spy(*a, **k):
+        calls.append(k)
+        return real_gmm(*a, **k)
+
+    monkeypatch.setattr(ops, "gmm", spy)
+    fm = _mesh(2, 1)
+    mcfg = MoEConfig(n_experts=e, top_k=top_k, d_expert=f)
+    x, wg, w1, w2, w3 = _weights(jax.random.PRNGKey(5), d, f, e, t)
+    y_sc, _ = jax.jit(
+        lambda *a: moe_ffn(*a, mcfg, fm, permute_mode="scatter"))(x, wg, w1, w2, w3)
+    assert not calls, "scatter path must not touch the GMM kernel"
+    y_so, _ = jax.jit(
+        lambda *a: moe_ffn(*a, mcfg, fm, permute_mode="sort"))(x, wg, w1, w2, w3)
+    assert len(calls) >= 3, "sort path should run gate/up/down grouped matmuls"
+    assert all(k.get("interpret") for k in calls), "CPU must use interpret mode"
+    np.testing.assert_allclose(y_so, y_sc, atol=2e-5)
+    yref, _ = moe_ffn_reference(x.reshape(2, t // 2, d), wg, w1, w2, w3, mcfg)
+    np.testing.assert_allclose(y_so, yref.reshape(t, d), atol=1e-4)
+
+
+def test_sort_dropless_rebucketing_exact():
+    """Dropless + capacity_hint: the bucketed buffer is (usually much)
+    smaller than the worst case yet drops nothing and matches the oracle."""
+    fm = _mesh(2, 1)
+    mcfg = MoEConfig(n_experts=E, top_k=2, d_expert=F, dropless=True)
+    x, wg, w1, w2, w3 = _weights(jax.random.PRNGKey(11))
+    t_local = T // 2
+    hint = routed_capacity_hint(x, wg, mcfg, fm, block=8)
+    assert hint <= t_local, "bucketed capacity must not exceed worst case"
+    y, aux = jax.jit(lambda *a: moe_ffn(*a, mcfg, fm, permute_mode="sort",
+                                        capacity_hint=hint))(x, wg, w1, w2, w3)
+    assert float(aux["moe_drop_fraction"]) == 0.0
+    yref, _ = moe_ffn_reference(x.reshape(2, t_local, D), wg, w1, w2, w3, mcfg)
+    np.testing.assert_allclose(y, yref.reshape(T, D), atol=1e-5)
+
+
+def test_sort_dropless_undersized_hint_is_visible():
+    """The hint contract: an undersized capacity_hint drops overflow, and
+    the violation is observable as moe_drop_fraction > 0 (never silent)."""
+    fm = _mesh(1, 1)
+    mcfg = MoEConfig(n_experts=2, top_k=1, d_expert=F, dropless=True)
+    # All tokens route to one expert → needed capacity is T, hint of 2 drops.
+    x = jnp.ones((T, D))
+    wg = jnp.zeros((D, 2)).at[:, 0].set(1.0)
+    _x, _wg, w1, w2, w3 = _weights(jax.random.PRNGKey(0), e=2)
+    _, aux = jax.jit(lambda *a: moe_ffn(*a, mcfg, fm, permute_mode="sort",
+                                        capacity_hint=2))(x, wg, w1, w2, w3)
+    assert float(aux["moe_drop_fraction"]) > 0.5
+
+
+def test_capacity_hint_rejected_with_full_sequence_policy():
+    """The full-sequence branch recomputes capacity from the gathered
+    sequence, so a capacity_hint there must be an explicit error rather
+    than a silent no-op."""
+    fm = _mesh(2, 1)
+    mcfg = MoEConfig(n_experts=E, top_k=2, d_expert=F, dropless=True,
+                     drop_policy="full_sequence")
+    x, wg, w1, w2, w3 = _weights(jax.random.PRNGKey(17))
+    with pytest.raises(ValueError, match="full_sequence"):
+        moe_ffn(x, wg, w1, w2, w3, mcfg, fm, permute_mode="sort",
+                capacity_hint=8)
+
+
+def test_dropless_drop_fraction_ignores_batch_padding():
+    """T not divisible by the shard count: padding rows are not counted as
+    drops, so dropless keeps the moe_drop_fraction == 0 contract."""
+    fm = _mesh(2, 1)
+    mcfg = MoEConfig(n_experts=E, top_k=2, d_expert=F, dropless=True)
+    x, wg, w1, w2, w3 = _weights(jax.random.PRNGKey(13))
+    x_odd = x[:T - 3]
+    for mode in ("scatter", "sort"):
+        y, aux = jax.jit(lambda *a: moe_ffn(*a, mcfg, fm, permute_mode=mode)
+                         )(x_odd, wg, w1, w2, w3)
+        assert y.shape == (T - 3, D)
+        assert float(aux["moe_drop_fraction"]) == 0.0, mode
+
+
+def test_dropless_bucket_capacity_buckets():
+    assert dropless_bucket_capacity(0, block=128) == 128
+    assert dropless_bucket_capacity(1, block=128) == 128
+    assert dropless_bucket_capacity(129, block=128) == 256
+    assert dropless_bucket_capacity(257, block=128) == 512
+    # clamped to the worst case t (one expert takes every token)
+    assert dropless_bucket_capacity(50, block=128, n_tokens=60) == 60
+    assert dropless_bucket_capacity(50, block=32, n_tokens=1024) == 64
+    with pytest.raises(ValueError):
+        dropless_bucket_capacity(-1)
+
+
+# ---------------------------------------------------------------------------
+# Sorted-permutation metadata invariants (seeded sweep — the hypothesis
+# variant lives in test_property_hypothesis.py)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(8))
+def test_sorted_dispatch_metadata_invariants(seed):
+    rng = np.random.default_rng(seed)
+    t = int(rng.integers(4, 64))
+    e = int(2 ** rng.integers(1, 5))
+    k = int(rng.integers(1, min(e, 4) + 1))
+    cf = float(rng.choice([0.5, 1.0, 2.0]))
+    bm = int(rng.choice([8, 16, 128]))
+    mcfg = MoEConfig(n_experts=e, top_k=k, d_expert=8, capacity_factor=cf)
+    cap = capacity_per_expert(t, mcfg)
+    x = jnp.asarray(rng.standard_normal((t, 16)), jnp.float32)
+    wg = jnp.asarray(rng.standard_normal((16, e)), jnp.float32)
+    r = route(x, wg, mcfg, capacity=cap)
+    sd = sorted_dispatch(r.expert_idx, r.keep, e)
+
+    L = t * k
+    perm = np.asarray(sd.perm)
+    inv = np.asarray(sd.inv_perm)
+    gs = np.asarray(sd.group_sizes)
+    go = np.asarray(sd.group_offsets)
+    keep = np.asarray(r.keep).reshape(-1)
+    idx = np.asarray(r.expert_idx).reshape(-1)
+
+    # perm is a permutation of the L assignments; inv_perm inverts it
+    assert sorted(perm.tolist()) == list(range(L))
+    assert (perm[inv] == np.arange(L)).all()
+    # group sizes sum to t*K minus drops, offsets are the exclusive cumsum
+    assert gs.sum() == keep.sum() == L - (~keep).sum()
+    np.testing.assert_array_equal(go, np.cumsum(gs) - gs)
+    # first sum(gs) sorted entries are the kept assignments, expert-major,
+    # stable (token order) within each expert
+    kept_sorted = perm[:gs.sum()]
+    assert keep[kept_sorted].all()
+    assert not keep[perm[gs.sum():]].any()
+    experts_sorted = idx[kept_sorted]
+    assert (np.diff(experts_sorted) >= 0).all()
+    for ee in range(e):
+        mine = kept_sorted[experts_sorted == ee]
+        assert (np.diff(mine) > 0).all()          # stable = ascending ids
+        assert len(mine) == gs[ee]
+
+    # padded spans: multiples of bm covering each group
+    ps, po = (np.asarray(a) for a in padded_group_spans(sd.group_sizes, bm))
+    assert (ps % bm == 0).all() and (ps >= gs).all() and (ps < gs + bm).all()
+    np.testing.assert_array_equal(po, np.cumsum(ps) - ps)
+
+    # block_expert: non-decreasing and consistent with the padded spans
+    num_blocks = int(ps.sum()) // bm + 2
+    be = np.asarray(block_expert_from_group_sizes(sd.group_sizes, bm, num_blocks))
+    assert (np.diff(be) >= 0).all()
+    for b in range(num_blocks):
+        start = b * bm
+        if start >= ps.sum():
+            break
+        ee = be[b]
+        assert po[ee] <= start and start + bm <= po[ee] + ps[ee]

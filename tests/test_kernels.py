@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.kernels  # Pallas kernel vs oracle sweeps
+
 from repro.kernels.flash.flash import flash_attention
 from repro.kernels.flash.ref import flash_ref
 from repro.kernels.gmm.gmm import gmm

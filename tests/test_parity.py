@@ -12,6 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-minute model builds/compiles
+
 from repro.configs import get_config, reduced
 from repro.configs.base import MoEConfig, ParallelConfig, ParallelMappingSpec as PM
 from repro.core.folding import build_folded_mesh
@@ -57,8 +59,15 @@ def test_folded_vs_unfolded_loss_and_grads():
             np.testing.assert_allclose(a, b, atol=5e-4, rtol=5e-3)
 
 
-@pytest.mark.parametrize("arch", ["llama3.2-1b", "xlstm-125m", "zamba2-2.7b",
-                                  "dbrx-132b"])
+@pytest.mark.parametrize("arch", [
+    "llama3.2-1b", "xlstm-125m",
+    pytest.param("zamba2-2.7b", marks=pytest.mark.skip(
+        reason="XLA CPU aborts (free(): invalid pointer) compiling the "
+               "combined mamba2 + shared-attention decode program on "
+               "jaxlib<=0.4.37; pure-mamba2 and attention-only decode both "
+               "compile. Process-killing compiler crash — skipped rather "
+               "than xfailed so it cannot take down the suite.")),
+    "dbrx-132b"])
 def test_decode_replays_prefill_logits(arch, fm222):
     """Greedy decode over a prompt reproduces the parallel forward's logits
     (dense exactly; SSM validates the chunked-scan ↔ recurrence identity;

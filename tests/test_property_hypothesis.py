@@ -1,5 +1,14 @@
-"""Hypothesis property tests on the system's core invariants."""
+"""Hypothesis property tests on the system's core invariants.
+
+Skipped (not errored) when hypothesis is not installed — CI installs it via
+requirements.txt; the seeded sweeps in test_dispatcher*.py keep local
+coverage without it.
+"""
 import math
+
+import pytest
+
+pytest.importorskip("hypothesis")
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +17,9 @@ from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import MoEConfig
 from repro.core.folding import common_refinement
-from repro.core.router import capacity_per_expert, route
+from repro.core.router import (block_expert_from_group_sizes,
+                               capacity_per_expert, padded_group_spans, route,
+                               sorted_dispatch)
 from repro.roofline.analysis import _shape_bytes
 
 pow2 = st.integers(0, 4).map(lambda e: 2 ** e)
@@ -72,6 +83,56 @@ def test_router_capacity_and_position_invariants(t, e, k, cf, seed):
                capacity=capacity_per_expert(t, MoEConfig(
                    n_experts=e, top_k=k, d_expert=8, dropless=True)))
     assert bool(jnp.all(r2.keep))
+
+
+@given(st.integers(1, 64), st.integers(1, 5).map(lambda e: 2 ** e),
+       st.integers(1, 4), st.floats(0.25, 4.0),
+       st.sampled_from([8, 16, 64, 128]), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_sorted_permutation_metadata_invariants(t, e, k, cf, bm, seed):
+    """The router's sorted-dispatch metadata (the "sort" permute layout):
+    group sizes account for every kept assignment, and the block_expert
+    scalar-prefetch array is non-decreasing and consistent with the
+    bm-padded group spans."""
+    k = min(k, e)
+    mcfg = MoEConfig(n_experts=e, top_k=k, d_expert=8, capacity_factor=cf)
+    cap = capacity_per_expert(t, mcfg)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((t, 8)), jnp.float32)
+    wg = jnp.asarray(rng.standard_normal((8, e)), jnp.float32)
+    r = route(x, wg, mcfg, capacity=cap)
+    sd = sorted_dispatch(r.expert_idx, r.keep, e)
+
+    keep = np.asarray(r.keep).reshape(-1)
+    idx = np.asarray(r.expert_idx).reshape(-1)
+    perm = np.asarray(sd.perm)
+    gs = np.asarray(sd.group_sizes)
+    L = t * k
+    # group sizes sum to t*K minus drops; per-expert counts match
+    assert gs.sum() == L - (~keep).sum()
+    np.testing.assert_array_equal(gs, np.bincount(idx, weights=keep,
+                                                  minlength=e).astype(int))
+    # sorted stream: kept assignments first, expert-major, stable in token order
+    kept_sorted = perm[:gs.sum()]
+    assert keep[kept_sorted].all()
+    assert (np.diff(idx[kept_sorted]) >= 0).all()
+    for ee in range(e):
+        mine = kept_sorted[idx[kept_sorted] == ee]
+        assert (np.diff(mine) > 0).all()
+
+    # block_expert non-decreasing and consistent with the padded group spans
+    ps, po = (np.asarray(a) for a in padded_group_spans(sd.group_sizes, bm))
+    assert (ps % bm == 0).all() and (ps >= gs).all()
+    num_blocks = int(ps.sum()) // bm + 1
+    be = np.asarray(block_expert_from_group_sizes(sd.group_sizes, bm,
+                                                  num_blocks))
+    assert (np.diff(be) >= 0).all()
+    for b in range(num_blocks):
+        start = b * bm
+        if start >= ps.sum():
+            break
+        ee = be[b]
+        assert po[ee] <= start and start + bm <= po[ee] + ps[ee]
 
 
 @given(st.sampled_from(["bf16", "f32", "s32", "u8", "f16"]),

@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-minute model builds/compiles
+
 from repro.configs import get_config, reduced
 from repro.data.pipeline import DataConfig, SyntheticTokens
 from repro.optim import adamw
@@ -71,8 +73,9 @@ def test_collective_parser_on_sharded_program(fm222):
         return jax.lax.psum(x, axes)
 
     x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
-    sf = jax.shard_map(f, mesh=mesh, in_specs=P(axes, None),
-                       out_specs=P(None, None), check_vma=False)
+    from repro.compat import shard_map
+    sf = shard_map(f, mesh=mesh, in_specs=P(axes, None),
+                   out_specs=P(None, None))
     c = jax.jit(sf).lower(x).compile()
     colls = parse_collectives(c.as_text(), mesh.devices.size)
     ar = [op for op in colls if op.kind == "all-reduce"]

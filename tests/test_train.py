@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-minute model builds/compiles
+
 from repro.checkpoint import store
 from repro.configs import get_config, reduced
 from repro.data.pipeline import DataConfig, SyntheticTokens

@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""CI gate: the full suite may not regress past the recorded seed baseline.
+
+Usage: python tools/assert_no_worse.py <pytest-log>
+
+Parses the pytest summary line out of a ``pytest -q`` log and compares the
+failure + error count against ``tests/seed_baseline.json``. The repo's seed
+state has known failures; this gate enforces "no worse than seed" until the
+suite is green, at which point the recorded budget should be ratcheted to 0.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+import sys
+
+BASELINE = pathlib.Path(__file__).resolve().parent.parent / "tests" / "seed_baseline.json"
+
+
+def parse_summary(text: str) -> dict:
+    """Parse the final pytest summary line, e.g.
+    "37 failed, 51 passed in 149.88s" / "1 error in 1.42s".
+
+    Hard-fails when no summary line exists — a suite that crashed before
+    printing one (segfault, OOM kill) must gate red, not green.
+    """
+    summary = None
+    for line in text.splitlines():
+        if re.search(r"\d+ (failed|passed|error)", line) and " in " in line \
+                and re.search(r"\d+\.\d+s", line):
+            summary = line                      # keep the last one
+    if summary is None:
+        raise SystemExit(
+            "assert_no_worse: FAIL — no pytest summary line in log "
+            "(suite crashed before finishing?)")
+    counts = {"failed": 0, "passed": 0, "error": 0}
+    for n, word in re.findall(r"(\d+) (failed|passed|error)", summary):
+        counts[word] = int(n)
+    return counts
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    text = pathlib.Path(argv[1]).read_text()
+    counts = parse_summary(text)
+    budget = json.loads(BASELINE.read_text())
+    bad = counts["failed"] + counts["error"]
+    print(f"assert_no_worse: {counts['failed']} failed + {counts['error']} "
+          f"errors = {bad} (budget {budget['failed']}), "
+          f"{counts['passed']} passed (floor {budget['passed']})")
+    if bad > budget["failed"]:
+        print("assert_no_worse: FAIL — more failures than the recorded baseline")
+        return 1
+    if counts["passed"] < budget["passed"]:
+        # Guards against coverage silently collapsing (broken collection,
+        # over-broad skip markers) while the failure count stays green.
+        print("assert_no_worse: FAIL — fewer tests passed than the recorded "
+              "baseline (did some stop being collected?)")
+        return 1
+    print("assert_no_worse: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
