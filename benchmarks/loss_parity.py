@@ -2,7 +2,12 @@
 
 Trains the same reduced MoE from identical init with (a) the unfolded
 mapping and (b) EP folded across TP×CP×DP (dropless, like the paper's
-parity run), and reports the max loss deviation over the run.
+parity run), and reports the max loss deviation over the run — twice:
+with the stock router, and with ``MoEConfig.deterministic_router`` (the
+quantized index-ordered tie-break), which keeps the discrete top-k
+selection identical across mappings so fp reduction-order noise cannot
+amplify through flipped routing ties (the ~2e-2 multi-step drift in
+ROADMAP tightens to the continuous-noise floor).
 
 Runs for real on CPU host devices — this is an execution benchmark, not a
 dry-run.
@@ -23,38 +28,47 @@ def main() -> None:
     from repro.optim import adamw
     from repro.train.loop import batch_shardings, init_train_state, make_train_step
 
-    cfg = reduced(get_config("mixtral-8x22b"))
+    base = reduced(get_config("mixtral-8x22b"))
     # reduced() caps n_experts at 4; the folded mapping below is EP8, so
-    # restore 8 experts to keep E % EP == 0.
-    cfg = dataclasses.replace(
-        cfg, moe=dataclasses.replace(cfg.moe, dropless=True, n_experts=8))
+    # restore 8 experts to keep E % EP == 0. fp32 like tests/test_parity.py:
+    # this benchmark measures *mapping* equivalence, and bf16 forward noise
+    # (~1e-3 relative) would be sign-amplified to ±lr per step by Adam's
+    # m/√v normalization, swamping what it is trying to measure.
+    base = dataclasses.replace(
+        base, dtype="float32",
+        moe=dataclasses.replace(base.moe, dropless=True, n_experts=8))
     steps = 5 if QUICK else 25
     devices = np.asarray(jax.devices())[:8]
 
-    curves = {}
-    for name, moe in (("baseline", PM(2, 2, 2)), ("folding", PM(1, 8, 1))):
-        pcfg = ParallelConfig(attn=PM(2, 2, 2), moe=moe)
-        fm = build_folded_mesh(pcfg, devices=devices)
-        key = jax.random.PRNGKey(0)
-        params, opt = init_train_state(key, cfg, fm)
-        step = make_train_step(cfg, fm, adamw.AdamWConfig(
-            lr=1e-3, warmup_steps=5, decay_steps=200))
-        data = SyntheticTokens(DataConfig(seq_len=64, global_batch=8,
-                                          vocab_size=cfg.vocab_size, seed=1))
-        bs = batch_shardings(cfg, fm)
-        losses = []
-        for _, nb in zip(range(steps), data):
-            batch = {k: jax.device_put(v, bs[k]) for k, v in nb.items()
-                     if k in bs}
-            params, opt, m = step(params, opt, batch)
-            losses.append(float(m["loss"]))
-        curves[name] = losses
+    for det in (False, True):
+        cfg = dataclasses.replace(
+            base, moe=dataclasses.replace(base.moe, deterministic_router=det))
+        curves = {}
+        for name, moe in (("baseline", PM(2, 2, 2)), ("folding", PM(1, 8, 1))):
+            pcfg = ParallelConfig(attn=PM(2, 2, 2), moe=moe)
+            fm = build_folded_mesh(pcfg, devices=devices)
+            key = jax.random.PRNGKey(0)
+            params, opt = init_train_state(key, cfg, fm)
+            step = make_train_step(cfg, fm, adamw.AdamWConfig(
+                lr=1e-3, warmup_steps=5, decay_steps=200))
+            data = SyntheticTokens(DataConfig(seq_len=64, global_batch=8,
+                                              vocab_size=cfg.vocab_size, seed=1))
+            bs = batch_shardings(cfg, fm)
+            losses = []
+            for _, nb in zip(range(steps), data):
+                batch = {k: jax.device_put(v, bs[k]) for k, v in nb.items()
+                         if k in bs}
+                params, opt, m = step(params, opt, batch)
+                losses.append(float(m["loss"]))
+            curves[name] = losses
 
-    dev = max(abs(a - b) for a, b in zip(curves["baseline"], curves["folding"]))
-    emit("loss_parity/mixtral-reduced", 0.0,
-         f"steps={steps};final_baseline={curves['baseline'][-1]:.4f};"
-         f"final_folding={curves['folding'][-1]:.4f};max_dev={dev:.2e};"
-         f"{'PASS' if dev < 1e-2 else 'FAIL'}")
+        dev = max(abs(a - b) for a, b in zip(curves["baseline"],
+                                             curves["folding"]))
+        bound = 1e-3 if det else 1e-2
+        emit(f"loss_parity/mixtral-reduced{'-det-router' if det else ''}", 0.0,
+             f"steps={steps};final_baseline={curves['baseline'][-1]:.4f};"
+             f"final_folding={curves['folding'][-1]:.4f};max_dev={dev:.2e};"
+             f"{'PASS' if dev < bound else 'FAIL'}")
 
 
 if __name__ == "__main__":

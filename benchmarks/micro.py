@@ -8,7 +8,7 @@ def main() -> None:
     import jax
     import jax.numpy as jnp
     from repro.configs.base import MoEConfig, ParallelConfig, ParallelMappingSpec as PM
-    from repro.core.dispatcher import moe_ffn
+    from repro.core.dispatcher import ep_dispatch_payload_bytes, moe_ffn
     from repro.core.folding import build_folded_mesh
     from repro.kernels.flash.flash import flash_attention
     from repro.kernels.gmm.gmm import gmm
@@ -35,6 +35,48 @@ def main() -> None:
     emit("micro/dispatcher_sort_einsum_ep8_T512_D64",
          timeit(f, x, wg, w1, w2, w3),
          "folded EP8; sorted permute, einsum fallback (non-tileable shape)")
+    f = jax.jit(lambda *a: moe_ffn(*a, mcfg, fm, permute_mode="sort",
+                                   ragged=True)[0])
+    emit("micro/dispatcher_ragged_einsum_ep8_T512_D64",
+         timeit(f, x, wg, w1, w2, w3),
+         "folded EP8; ragged A2A-V (count exchange + packed streams)")
+
+    # Ragged-vs-padded EP A2A communication volume, dropless, on a routing
+    # skewed onto one hot expert (the regime where uniform capacity padding
+    # blows up even with the bucketed capacity_hint — ROADMAP 'ragged EP
+    # All-to-All sizing'). Skew = shift every token along the expert-0 gate
+    # direction, a uniform logit boost. Payload bytes are exact host-side
+    # accounting of what each path ships per rank; the wall times below
+    # pair with them. k=v pairs in the derived column are the ratchet
+    # surface for tools/assert_no_worse.py-style gates.
+    from repro.core.dispatcher import routed_capacity_hint
+    mcfg_dl = MoEConfig(n_experts=E, top_k=K, d_expert=F, dropless=True)
+    u = wg[:, 0]
+    x_skew = x + 3.0 * (u / jnp.linalg.norm(u))[None, :]
+    hint = routed_capacity_hint(x_skew, wg, mcfg_dl, fm, block=8)
+    stats = ep_dispatch_payload_bytes(x_skew, wg, mcfg_dl, fm,
+                                      capacity_hint=hint)
+    # Network-volume reduction uses the recv mean; the recv max is the hot
+    # expert's link, which at full skew genuinely needs every row and so
+    # approaches the padded size — both are reported.
+    emit("micro/dispatcher_ep8_a2a_payload_dropless_skewed", 0.0,
+         f"hint={hint};padded_bytes={int(stats['padded_bytes'])};"
+         f"send_bytes_max={int(stats['ragged_send_bytes_max'])};"
+         f"recv_bytes_max={int(stats['ragged_recv_bytes_max'])};"
+         f"recv_bytes_mean={int(stats['ragged_recv_bytes_mean'])};"
+         f"count_exchange_bytes={int(stats['count_exchange_bytes'])};"
+         f"volume_reduction="
+         f"{stats['padded_bytes'] / max(stats['ragged_recv_bytes_mean'], 1):.1f}x")
+    f = jax.jit(lambda *a: moe_ffn(*a, mcfg_dl, fm, permute_mode="sort",
+                                   capacity_hint=hint)[0])
+    emit("micro/dispatcher_sort_dropless_skewed_ep8",
+         timeit(f, x_skew, wg, w1, w2, w3),
+         "padded buffer @ capacity_hint, skewed routing")
+    f = jax.jit(lambda *a: moe_ffn(*a, mcfg_dl, fm, permute_mode="sort",
+                                   capacity_hint=hint, ragged=True)[0])
+    emit("micro/dispatcher_ragged_dropless_skewed_ep8",
+         timeit(f, x_skew, wg, w1, w2, w3),
+         "ragged A2A-V, skewed routing (emulated exchange on jax<0.5)")
 
     # MXU-tileable shape: the sorted layout routes expert compute through
     # the Pallas GMM kernel (interpret mode here — compiled path is TPU).

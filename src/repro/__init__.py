@@ -1,0 +1,15 @@
+"""MoE Parallel Folding reproduction (jax_pallas).
+
+One process-wide config knob lives here: partitionable threefry. Without
+it, ``jax.random`` values computed under jit with sharded ``out_shardings``
+depend on the *sharding* on the older JAX generation this repo supports —
+so two parallelism mappings of the same model silently initialized
+different expert/attention weights, which surfaced as the EP8 multi-step
+"loss-parity drift" (it was never fp noise: the runs trained different
+models). Partitionable threefry makes random bits a pure function of key
+and position, independent of the mesh mapping; newer JAX defaults to it.
+"""
+import jax as _jax
+
+if hasattr(_jax.config, "jax_threefry_partitionable"):
+    _jax.config.update("jax_threefry_partitionable", True)

@@ -12,9 +12,10 @@ can be written once against a single spelling.
 """
 from __future__ import annotations
 
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
+import jax.numpy as jnp
 
 
 def shard_map(f: Callable, *, mesh: Any, in_specs: Any, out_specs: Any) -> Callable:
@@ -31,3 +32,73 @@ def shard_map(f: Callable, *, mesh: Any, in_specs: Any, out_specs: Any) -> Calla
     from jax.experimental.shard_map import shard_map as _shard_map
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                       check_rep=False)
+
+
+def has_ragged_all_to_all() -> bool:
+    """True when this JAX exposes a native ``lax.ragged_all_to_all``."""
+    return hasattr(jax.lax, "ragged_all_to_all")
+
+
+def ragged_all_to_all(operand: jax.Array, output: jax.Array,
+                      input_offsets: jax.Array, send_sizes: jax.Array,
+                      output_offsets: jax.Array, recv_sizes: jax.Array,
+                      *, axis_name: Any,
+                      max_send: Optional[int] = None) -> jax.Array:
+    """All-to-All-V over ragged row spans, on any JAX version.
+
+    Semantics follow ``jax.lax.ragged_all_to_all``: ``operand`` holds, for
+    each peer ``i`` of the ``axis_name`` group, the contiguous row slice
+    ``[input_offsets[i], input_offsets[i] + send_sizes[i])`` bound for that
+    peer; the slice lands in peer ``i``'s ``output`` at row
+    ``output_offsets[i]`` (the *sender* names the destination offset);
+    ``recv_sizes[i]`` is the row count arriving *from* peer ``i``. Rows of
+    ``output`` that no peer writes keep their input values.
+
+    On JAX with the native op this lowers to a true ragged exchange — the
+    wire payload is exactly the routed rows. Older JAX (this repo's CPU CI
+    pins 0.4.37) gets a numerically identical emulation that pads each
+    per-peer slice to the static bucket ``max_send`` (default: all of
+    ``operand``) and ships it through dense ``lax.all_to_all`` — the
+    count/offset protocol is exercised for real, only the wire volume stays
+    bucket-padded. ``max_send`` is ignored by the native path.
+
+    Emulation precondition: ``max_send`` must bound every per-peer span
+    (``max(send_sizes) <= max_send`` on every rank, hence also every
+    ``recv_sizes`` entry). A span exceeding the bucket is truncated to it —
+    consistently on both ends (the excess rows are neither shipped nor
+    expected), but silently diverging from the native op, which has no
+    bucket. Validated eagerly; not checkable under a trace, where sizes are
+    dynamic.
+    """
+    if has_ragged_all_to_all():
+        return jax.lax.ragged_all_to_all(
+            operand, output, input_offsets, send_sizes, output_offsets,
+            recv_sizes, axis_name=axis_name)
+
+    n_peers = input_offsets.shape[0]
+    n_rows = operand.shape[0]
+    s_max = n_rows if max_send is None else min(int(max_send), n_rows)
+    if not isinstance(send_sizes, jax.core.Tracer):
+        if int(jnp.max(send_sizes)) > s_max or int(jnp.max(recv_sizes)) > s_max:
+            raise ValueError(
+                f"ragged_all_to_all emulation bucket max_send={s_max} does "
+                f"not cover every span (max send "
+                f"{int(jnp.max(send_sizes))}, max recv "
+                f"{int(jnp.max(recv_sizes))}) — rows would be truncated")
+    lane = jnp.arange(s_max, dtype=jnp.int32)
+    # Slice out each peer's span, padded to the static bucket.
+    src = input_offsets[:, None] + lane[None, :]                  # (peers, S)
+    send_ok = lane[None, :] < send_sizes[:, None]
+    rows = jnp.take(operand, jnp.clip(src, 0, n_rows - 1), axis=0)
+    rows = jnp.where(send_ok[(...,) + (None,) * (operand.ndim - 1)], rows, 0)
+    got = jax.lax.all_to_all(rows, axis_name, split_axis=0, concat_axis=0,
+                             tiled=True)                          # (peers, S, ...)
+    # Senders name destination offsets; route each sender's scalar to its
+    # target so the receiver learns where every incoming span lands.
+    dst_off = jax.lax.all_to_all(output_offsets, axis_name, split_axis=0,
+                                 concat_axis=0, tiled=True)       # (peers,)
+    recv_ok = lane[None, :] < recv_sizes[:, None]
+    pos = dst_off[:, None] + lane[None, :]
+    pos = jnp.where(recv_ok, pos, output.shape[0])                # OOB = drop
+    flat = got.reshape((n_peers * s_max,) + got.shape[2:])
+    return output.at[pos.reshape(-1)].set(flat, mode="drop")

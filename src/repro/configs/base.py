@@ -36,10 +36,31 @@ class MoEConfig:
     # kernel's ``bm``). Only used by permute_mode="sort" when shapes are
     # MXU-tileable; smoke shapes fall back to unaligned spans + einsum.
     gmm_block_m: int = 128
+    # Ragged EP All-to-All-V (sort layout only): exchange per-destination-rank
+    # routed counts first, then ship only the packed routed rows through the
+    # EP exchange instead of the uniform (E, capacity, D) padded buffer —
+    # native ``lax.ragged_all_to_all`` when the installed jax has it, a
+    # bucket-padded emulation otherwise (see docs/dispatcher.md).
+    ragged_a2a: bool = False
+    # Deterministic top-k: snap router logits to a fixed grid
+    # (``router_quantum``) and break ties by lower expert index, cutting
+    # the probability that fp-reduction-order noise across parallelism
+    # mappings flips the discrete expert selection by ~noise/quantum (the
+    # EP8 multi-step loss-parity drift — ROADMAP; see
+    # router.deterministic_top_k for the exact guarantee). Gating weights
+    # still use the full-precision softmax.
+    deterministic_router: bool = False
+    router_quantum: float = 2.0 ** -10
 
     def __post_init__(self):
         if self.permute_mode not in ("scatter", "sort"):
             raise ValueError(f"unknown permute_mode {self.permute_mode!r}")
+        if self.ragged_a2a and self.permute_mode != "sort":
+            raise ValueError("ragged_a2a requires permute_mode='sort' "
+                             "(the packed expert-major stream is what the "
+                             "ragged exchange ships)")
+        if self.router_quantum <= 0:
+            raise ValueError("router_quantum must be > 0")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -39,6 +39,17 @@ Two permutation layouts build the step-1 buffer (see docs/dispatcher.md):
 
 Both layouts share steps 2–6 unchanged: the collectives operate on the
 (E, capacity, D) expert-major buffer regardless of how rows were placed.
+
+The sorted layout additionally supports a **ragged EP exchange**
+(``ragged=True`` / ``MoEConfig.ragged_a2a``): per-destination-rank routed
+counts are exchanged over the EP atom tuple first (one E-int32 AllGather),
+then steps 2–6 run on *packed* streams — each rank ships only its actual
+routed rows through the All-to-All-V (``jax.lax.ragged_all_to_all`` when
+the installed jax has it; a numerically identical bucket-padded emulation
+via ``repro.compat`` otherwise), the ETP AllGather-V/ReduceScatter-V move
+the packed streams plus their size matrices, and the return All-to-All-V
+lands rows back at each source's packed offsets. Combine outputs are
+bitwise-identical to the padded sort path (tests/test_dispatcher_ragged.py).
 """
 from __future__ import annotations
 
@@ -50,11 +61,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.compat import shard_map
+from repro.compat import ragged_all_to_all, shard_map
 from repro.configs.base import MoEConfig
 from repro.core.folding import FoldedMesh
 from repro.core.router import (capacity_per_expert, dropless_bucket_capacity,
-                               route, sorted_dispatch)
+                               resolved_capacity, route, sorted_dispatch)
 from repro.models.common import activation as act_fn
 
 Array = jax.Array
@@ -92,6 +103,20 @@ def _token_shards(x: Array, fm: FoldedMesh, *, token_pad_ok: bool = True
     return token_axes, n_shards, x, (T + pad) // n_shards, pad
 
 
+def _reject_tracers(fname: str, *arrays: Array) -> None:
+    """Host-sync pre-passes cannot run under a jit/shard_map trace — the
+    ``device_get`` would die with an opaque ``ConcretizationTypeError``.
+    Fail early with an actionable message instead.
+    """
+    if any(isinstance(a, jax.core.Tracer) for a in arrays):
+        raise ValueError(
+            f"{fname}() host-syncs the routed counts and must be called "
+            "outside jit/shard_map traces. Run it as a pre-pass on concrete "
+            "arrays and pass the returned Python int into the jitted step "
+            "(e.g. capacity_hint=). See docs/dispatcher.md, 'Dropless "
+            "rebucketing'.")
+
+
 def routed_capacity_hint(x: Array, wg: Array, mcfg: MoEConfig, fm: FoldedMesh,
                          *, block: Optional[int] = None) -> int:
     """Host-side pre-pass for the sorted dropless layout.
@@ -110,23 +135,111 @@ def routed_capacity_hint(x: Array, wg: Array, mcfg: MoEConfig, fm: FoldedMesh,
     exactly zero whenever the hint held (tests/test_dispatcher_sort.py
     covers both directions).
     """
+    _reject_tracers("routed_capacity_hint", x, wg)
+
+    def counts_one(r, mask):
+        # Same selection the dispatcher makes (capacity only affects keep,
+        # which dropless counting ignores — every routed assignment counts).
+        oh = jax.nn.one_hot(r.expert_idx, mcfg.n_experts, dtype=jnp.int32)
+        return jnp.sum(oh * mask[:, None, None], axis=(0, 1))    # (E,)
+
+    counts, t_local = _route_sweep(x, wg, mcfg, fm, lambda t: t, counts_one)
+    max_count = int(jax.device_get(counts.max()))
+    return dropless_bucket_capacity(max_count, block=block or mcfg.gmm_block_m,
+                                    n_tokens=t_local)
+
+
+def _route_sweep(x: Array, wg: Array, mcfg: MoEConfig, fm: FoldedMesh,
+                 cap_fn: Callable[[int], int], stat_fn: Callable
+                 ) -> Tuple[Array, int]:
+    """Shared host-side pre-pass sweep: route every rank's chunk exactly as
+    :func:`moe_ffn` will (same ``_token_shards`` chunking, same padding
+    mask) and vmap ``stat_fn(router_output, mask)`` over the chunks.
+
+    ``cap_fn(t_local)`` supplies the capacity :func:`route` runs with.
+    Returns ``(stacked stats, t_local)``. Keeping the chunk/mask formula in
+    one place is what guarantees every pre-pass sees the chunks the
+    dispatcher dispatches.
+    """
     T, D = x.shape
     _, n_shards, x, t_local, _ = _token_shards(x, fm)
     chunks = x.reshape(n_shards, t_local, D)
     valid = (jnp.arange(n_shards)[:, None] * t_local
-             + jnp.arange(t_local)[None, :]) < T                # mask padding
+             + jnp.arange(t_local)[None, :]) < T                 # mask padding
+    cap = cap_fn(t_local)
 
-    def counts_one(xc, mask):
-        # Same selection the dispatcher makes (capacity only affects keep,
-        # which dropless counting ignores — every routed assignment counts).
-        r = route(xc, wg, mcfg, capacity=t_local, token_mask=mask)
-        oh = jax.nn.one_hot(r.expert_idx, mcfg.n_experts, dtype=jnp.int32)
-        return jnp.sum(oh * mask[:, None, None], axis=(0, 1))    # (E,)
+    def one(xc, mask):
+        return stat_fn(route(xc, wg, mcfg, capacity=cap, token_mask=mask),
+                       mask)
 
-    counts = jax.vmap(counts_one)(chunks, valid)                 # (n, E)
-    max_count = int(jax.device_get(counts.max()))
-    return dropless_bucket_capacity(max_count, block=block or mcfg.gmm_block_m,
-                                    n_tokens=t_local)
+    return jax.vmap(one)(chunks, valid), t_local
+
+
+def ep_dispatch_payload_bytes(x: Array, wg: Array, mcfg: MoEConfig,
+                              fm: FoldedMesh, *,
+                              capacity_hint: Optional[int] = None) -> Dict[str, float]:
+    """Host-side accounting of the per-rank EP All-to-All-V payload.
+
+    Routes every rank's chunk exactly as :func:`moe_ffn` will and reports,
+    per rank, what each EP All-to-All-V direction ships:
+
+    * ``padded_bytes`` — the uniform ``(E, capacity, D)`` buffer, identical
+      for send and receive and independent of routing (span-alignment
+      padding excluded);
+    * ``ragged_send_bytes_max`` / ``_mean`` — the ragged path's send side:
+      each rank's kept routed rows (max / mean over ranks);
+    * ``ragged_recv_bytes_max`` / ``_mean`` — the receive side: rows bound
+      for each rank's local experts, summed over sources. Under skewed
+      routing this is the hot link — a rank hosting a hot expert can
+      receive up to ``EP×`` the per-rank send volume (at full skew it
+      approaches ``padded_bytes``: the hot rank genuinely needs every
+      row), so total network volume shrinks by ~``E/top_k`` while the hot
+      link shrinks less;
+    * ``count_exchange_bytes`` — the ragged path's extra metadata AllGather
+      (``ep`` × ``E`` int32 sizes per rank);
+    * ``capacity`` — the resolved per-(rank, expert) capacity.
+
+    Host-syncs like :func:`routed_capacity_hint`; call outside jit. Used by
+    ``benchmarks/micro.py`` to surface the ragged-vs-padded communication
+    volume in the ``BENCH_QUICK`` smoke.
+    """
+    _reject_tracers("ep_dispatch_payload_bytes", x, wg)
+    if mcfg.drop_policy == "full_sequence":
+        # The full-sequence branch derives capacity/keep from the gathered
+        # sequence; this local-chunk sweep would report the wrong bytes.
+        raise ValueError("ep_dispatch_payload_bytes does not support "
+                         "drop_policy='full_sequence'")
+    E = mcfg.n_experts
+    D = x.shape[1]
+
+    def cap_fn(t_local):
+        return resolved_capacity(t_local, mcfg, capacity_hint)
+
+    def kept_per_expert(r, mask):
+        oh = jax.nn.one_hot(r.expert_idx, E, dtype=jnp.int32)    # (t, K, E)
+        kept = (r.keep & mask[:, None]).astype(jnp.int32)
+        return jnp.sum(oh * kept[..., None], axis=(0, 1))        # (E,)
+
+    counts, t_local = _route_sweep(x, wg, mcfg, fm, cap_fn, kept_per_expert)
+    counts = jax.device_get(counts)                              # (n_shards, E)
+    send = counts.sum(axis=1)
+    # Chunks enumerate the token atoms (EDP, EP, ETP) row-major; the EP
+    # exchange runs within each (edp, etp) group, so the rows received by
+    # EP rank d are the group's counts for d's expert slice.
+    edp, ep, etp = fm.edp, fm.ep, fm.etp
+    e_local = E // ep
+    recv = (counts.reshape(edp, ep, etp, ep, e_local)
+            .sum(axis=(1, 4)))                                   # (edp, etp, ep_dst)
+    isz = jnp.dtype(x.dtype).itemsize
+    return {
+        "padded_bytes": float(E * cap_fn(t_local) * D * isz),
+        "ragged_send_bytes_max": float(int(send.max()) * D * isz),
+        "ragged_send_bytes_mean": float(send.mean() * D * isz),
+        "ragged_recv_bytes_max": float(int(recv.max()) * D * isz),
+        "ragged_recv_bytes_mean": float(recv.mean() * D * isz),
+        "count_exchange_bytes": float(fm.ep * E * 4),
+        "capacity": float(cap_fn(t_local)),
+    }
 
 
 def moe_ffn(
@@ -142,6 +255,7 @@ def moe_ffn(
     expert_fn: Optional[Callable] = None,
     permute_mode: Optional[str] = None,
     capacity_hint: Optional[int] = None,
+    ragged: Optional[bool] = None,
     token_pad_ok: bool = True,
 ) -> Tuple[Array, Dict[str, Array]]:
     """Apply the MoE FFN to a flat batch of tokens.
@@ -162,16 +276,31 @@ def moe_ffn(
     The hint must cover this batch's routed counts — an undersized hint
     drops the overflow (visible as ``moe_drop_fraction > 0`` in the
     returned stats, which is otherwise exactly 0 under dropless).
+    ``ragged`` (sort only) overrides ``mcfg.ragged_a2a``: exchange per-rank
+    routed counts over EP first, then ship only the packed routed rows
+    through the EP All-to-All-V / ETP AllGather-V / ReduceScatter-V / return
+    All-to-All-V instead of the uniform padded buffer (docs/dispatcher.md,
+    'Ragged EP exchange'). Combine outputs are bitwise-identical to the
+    padded sort path.
     """
     mode = permute_mode if permute_mode is not None else mcfg.permute_mode
     if mode not in ("scatter", "sort"):
         raise ValueError(f"unknown permute_mode {mode!r}")
     use_sort = mode == "sort"
+    use_ragged = bool(mcfg.ragged_a2a if ragged is None else ragged)
+    if use_ragged and not use_sort:
+        raise ValueError("ragged A2A requires permute_mode='sort' — the "
+                         "packed expert-major stream is what it ships")
     if capacity_hint is not None and mcfg.drop_policy == "full_sequence":
         # The full-sequence branch recomputes capacity from the gathered
         # sequence; a hint would be silently ignored there.
         raise ValueError("capacity_hint is not supported with "
                          "drop_policy='full_sequence'")
+    if use_ragged and mcfg.drop_policy == "full_sequence":
+        raise ValueError("ragged A2A is not supported with "
+                         "drop_policy='full_sequence' — the gathered-logit "
+                         "branch has no per-rank packed stream; use the "
+                         "padded path")
 
     ep_axes = fm.axis("moe", "ep")
     etp_axes = fm.axis("moe", "etp")
@@ -189,10 +318,10 @@ def moe_ffn(
     if E % ep:
         raise ValueError(f"n_experts {E} not divisible by EP {ep}")
     e_local = E // ep
-    cap = capacity_per_expert(t_local, mcfg)
-    if use_sort and mcfg.dropless and capacity_hint is not None:
-        # Rebucketed dropless: buffer sized from actual routed counts.
-        cap = max(1, min(int(capacity_hint), t_local))
+    # Rebucketed dropless (sort only): buffer sized from actual routed
+    # counts via the clamped hint; otherwise the worst case.
+    cap = resolved_capacity(t_local, mcfg,
+                            capacity_hint if use_sort else None)
 
     # Span alignment for the sorted layout: round per-expert spans to the
     # GMM row-block when local shapes are MXU-tileable, so the grouped
@@ -247,81 +376,187 @@ def moe_ffn(
         cap_pad = _round_up(capacity, span_block)
         flat_e = r.expert_idx.reshape(-1)                                   # (t*K,)
         keep_flat = r.keep.reshape(-1)
-        if use_sort:
-            # Stable sort by expert id → group-contiguous rows, drops last.
-            # Buffer rows are gathered (not scatter-added): row e*cap_pad + p
-            # holds the p-th kept assignment of expert e in token order.
-            sd = sorted_dispatch(r.expert_idx, r.keep, E)
+        sd = (sorted_dispatch(r.expert_idx, r.keep, E, ep=ep)
+              if use_sort else None)
+
+        def expert_compute(xe):
+            # ------------------------------------------ 4. expert compute
+            # Shared by both exchange layouts: xe is (e_local, n_src·cap_pad,
+            # D) with every bm-row block owned by one expert, so the grouped
+            # matmul grid — and each row's output — is identical whether
+            # rows arrive capacity-strided (padded) or packed (ragged).
+            if default_gmm:
+                from repro.kernels.gmm.ops import (expert_ffn_gmm,
+                                                   uniform_block_expert)
+                if gmm_ok:
+                    be = uniform_block_expert(e_local, xe.shape[1], span_block)
+                    return expert_ffn_gmm(xe, w1_l, w2_l, w3_l, activation,
+                                          bm=span_block, block_expert=be)
+                return expert_ffn_gmm(xe, w1_l, w2_l, w3_l, activation)
+            return expert_fn(xe, w1_l, w2_l, w3_l, activation)
+
+        def ragged_exchange():
+            # Steps 2–6 on *packed* ragged streams: ship only the routed
+            # rows, not the (E, capacity) padded buffer. Protocol in
+            # docs/dispatcher.md ('Ragged EP exchange').
             L = flat_e.shape[0]
-            row = jnp.arange(E * cap_pad, dtype=jnp.int32)
-            e_of = row // cap_pad
-            p_of = row % cap_pad
-            valid = p_of < sd.group_sizes[e_of]
-            src_sorted = jnp.minimum(sd.group_offsets[e_of] + p_of, L - 1)
-            src_tok = sd.perm[src_sorted] // K
-            buf = jnp.where(valid[:, None], x_l[src_tok], 0).astype(x_l.dtype)
-            # Combine index: each kept assignment's span position is its
-            # sorted-stream position minus its expert's group offset.
-            span_pos = sd.inv_perm - sd.group_offsets[flat_e]
-            idx_flat = flat_e * cap_pad + span_pos
-        else:
-            idx_flat = flat_e * cap_pad + r.pos_in_expert.reshape(-1)
-        idx_flat = jnp.where(keep_flat, idx_flat, E * cap_pad)             # OOB = drop
-        if not use_sort:
-            buf = jnp.zeros((E * cap_pad, D), x_l.dtype)
-            src = jnp.repeat(x_l, K, axis=0)                               # (t*K, D)
-            buf = buf.at[idx_flat].add(src, mode="drop")
-        buf = buf.reshape(ep, e_local, cap_pad, D)
-
-        # ------------------------------------------------ 2. All-to-All-V (EP)
-        if ep > 1:
-            buf = jax.lax.all_to_all(buf, ep_axes, split_axis=0, concat_axis=0,
-                                     tiled=True)
-        # buf: (ep_src, e_local, cap_pad, D)
-
-        # ------------------------------------------------ 3. AllGather-V (ETP)
-        if etp > 1:
-            buf = jax.lax.all_gather(buf, etp_axes, axis=0, tiled=False)
-            # (etp, ep_src, e_local, cap_pad, D)
-            buf = buf.reshape(etp * ep, e_local, cap_pad, D)
-
-        n_src = buf.shape[0]
-        xe = buf.transpose(1, 0, 2, 3).reshape(e_local, n_src * cap_pad, D)
-
-        # ------------------------------------------------ 4. expert compute
-        if default_gmm:
-            from repro.kernels.gmm.ops import expert_ffn_gmm
-            if gmm_ok:
-                # Uniform spans of cap_pad rows per (source, expert) — the
-                # block_expert scalar-prefetch array is static.
-                be = jnp.repeat(jnp.arange(e_local, dtype=jnp.int32),
-                                n_src * cap_pad // span_block)
-                ye = expert_ffn_gmm(xe, w1_l, w2_l, w3_l, activation,
-                                    bm=span_block, block_expert=be)
+            n_kept = jnp.sum(sd.group_sizes)
+            lane = jnp.arange(L, dtype=jnp.int32)
+            # 1b. packed send stream: kept assignments, expert-major — and
+            # experts are EP-rank-major, so per-destination slices are
+            # contiguous at (sd.rank_offsets, sd.rank_counts).
+            send = jnp.where((lane < n_kept)[:, None], x_l[sd.perm // K],
+                             0).astype(x_l.dtype)
+            # 2a. count exchange over the EP atom tuple: every rank's
+            # per-expert routed sizes (E int32 each — the "-V" metadata).
+            sizes_all = jax.lax.all_gather(sd.group_sizes, ep_axes, axis=0,
+                                           tiled=False)          # (ep, E)
+            my = jax.lax.axis_index(ep_axes)
+            to_rank = sizes_all.reshape(ep, ep, e_local).sum(axis=2)
+            mine = jax.lax.dynamic_slice_in_dim(sizes_all, my * e_local,
+                                                e_local, axis=1)  # (ep, e_local)
+            recv_sizes = mine.sum(axis=1)                         # (ep,)
+            recv_off = jnp.cumsum(recv_sizes) - recv_sizes
+            # Receivers pack incoming spans source-major, so my span lands
+            # at dst d after every source before me: Σ_{s<my} to_rank[s, d].
+            out_off = (jnp.cumsum(to_rank, axis=0) - to_rank)[my]  # (ep,)
+            # 2b. ragged All-to-All-V. Static recv bucket per source: a
+            # source cannot send me more than its whole stream (L) nor more
+            # than cap_pad per expert — the same bucket set the padded
+            # buffer uses (dropless_bucket_capacity via capacity_hint).
+            r_src = min(L, e_local * cap_pad)
+            recv = jnp.zeros((ep * r_src, D), x_l.dtype)
+            recv = ragged_all_to_all(send, recv, sd.rank_offsets,
+                                     sd.rank_counts, out_off, recv_sizes,
+                                     axis_name=ep_axes, max_send=r_src)
+            # 3. AllGather-V (ETP): gather the packed streams *and* their
+            # size matrices; each member's stream keeps its own packing,
+            # offset by its block base.
+            if etp > 1:
+                recv = jax.lax.all_gather(recv, etp_axes, axis=0,
+                                          tiled=False)            # (etp, ep·r_src, D)
+                mine_g = jax.lax.all_gather(mine, etp_axes, axis=0,
+                                            tiled=False)          # (etp, ep, e_local)
+                per_se = mine_g.reshape(etp * ep, e_local)
+                sizes_src = per_se.sum(axis=1).reshape(etp, ep)
+                base = (jnp.arange(etp, dtype=jnp.int32) * (ep * r_src))[:, None]
+                src_off = (jnp.cumsum(sizes_src, axis=1) - sizes_src
+                           + base).reshape(-1)                    # (etp·ep,)
+                recv = recv.reshape(etp * ep * r_src, D)
             else:
-                ye = expert_ffn_gmm(xe, w1_l, w2_l, w3_l, activation)
+                per_se = mine
+                src_off = recv_off
+            n_src = per_se.shape[0]
+            n_rows = recv.shape[0]
+            # 3b. re-layout into expert-major spans (packed rows, zero tail)
+            # for the grouped matmul: row j of local expert e is the j-th
+            # routed row across sources in source order.
+            span = n_src * cap_pad
+            j = jnp.arange(span, dtype=jnp.int32)
+            incl = jnp.cumsum(per_se, axis=0)                     # (n_src, e_local)
+            within = jnp.cumsum(per_se, axis=1) - per_se          # (n_src, e_local)
+            tot_e = incl[-1]                                      # (e_local,)
+            s_idx = jax.vmap(lambda col: jnp.searchsorted(col, j, side="right"),
+                             in_axes=1)(incl)                     # (e_local, span)
+            s_idx = jnp.clip(s_idx, 0, n_src - 1).astype(jnp.int32)
+            e_ids = jnp.arange(e_local, dtype=jnp.int32)[:, None]
+            excl = incl - per_se
+            src_row = (src_off[s_idx] + within[s_idx, e_ids]
+                       + j[None, :] - excl[s_idx, e_ids])         # (e_local, span)
+            valid = j[None, :] < tot_e[:, None]
+            xe = jnp.where(valid[..., None],
+                           recv[jnp.clip(src_row, 0, n_rows - 1)], 0)
+            ye = expert_compute(xe)
+            # 5. ReduceScatter-V (ETP): scatter partial sums back into the
+            # per-member packed streams, then reduce-scatter my block.
+            pos = jnp.where(valid, src_row, n_rows)               # OOB = pad row
+            y_rows = jnp.zeros((n_rows, D), ye.dtype)
+            y_rows = y_rows.at[pos.reshape(-1)].set(
+                ye.reshape(e_local * span, D), mode="drop")
+            if etp > 1:
+                y_rows = jax.lax.psum_scatter(
+                    y_rows.reshape(etp, ep * r_src, D), etp_axes,
+                    scatter_dimension=0, tiled=False)             # (ep·r_src, D)
+            # 6. return All-to-All-V: roles swap — my received spans go back
+            # to their sources, landing at each source's original packed
+            # offset for me (its rank_offsets[my], known from the counts).
+            back_off = (jnp.cumsum(to_rank, axis=1) - to_rank)[:, my]
+            y_stream = jnp.zeros((L, D), ye.dtype)
+            y_stream = ragged_all_to_all(y_rows, y_stream, recv_off,
+                                         recv_sizes, back_off, sd.rank_counts,
+                                         axis_name=ep_axes, max_send=r_src)
+            # 7a. un-permute: assignment a sits at packed position
+            # inv_perm[a]; dropped assignments point past n_kept where the
+            # stream is zero (and their combine weight is zero anyway).
+            return y_stream[jnp.minimum(sd.inv_perm, L - 1)]      # (t·K, D)
+
+        if use_ragged and ep > 1:
+            gath = ragged_exchange()
         else:
-            ye = expert_fn(xe, w1_l, w2_l, w3_l, activation)
+            if use_sort:
+                # Stable sort by expert id → group-contiguous rows, drops
+                # last. Buffer rows are gathered (not scatter-added): row
+                # e*cap_pad + p holds the p-th kept assignment of expert e
+                # in token order.
+                L = flat_e.shape[0]
+                row = jnp.arange(E * cap_pad, dtype=jnp.int32)
+                e_of = row // cap_pad
+                p_of = row % cap_pad
+                valid = p_of < sd.group_sizes[e_of]
+                src_sorted = jnp.minimum(sd.group_offsets[e_of] + p_of, L - 1)
+                src_tok = sd.perm[src_sorted] // K
+                buf = jnp.where(valid[:, None], x_l[src_tok], 0).astype(x_l.dtype)
+                # Combine index: each kept assignment's span position is its
+                # sorted-stream position minus its expert's group offset.
+                span_pos = sd.inv_perm - sd.group_offsets[flat_e]
+                idx_flat = flat_e * cap_pad + span_pos
+            else:
+                idx_flat = flat_e * cap_pad + r.pos_in_expert.reshape(-1)
+            idx_flat = jnp.where(keep_flat, idx_flat, E * cap_pad)         # OOB = drop
+            if not use_sort:
+                buf = jnp.zeros((E * cap_pad, D), x_l.dtype)
+                src = jnp.repeat(x_l, K, axis=0)                           # (t*K, D)
+                buf = buf.at[idx_flat].add(src, mode="drop")
+            buf = buf.reshape(ep, e_local, cap_pad, D)
 
-        yb = ye.reshape(e_local, n_src, cap_pad, D).transpose(1, 0, 2, 3)
+            # -------------------------------------------- 2. All-to-All-V (EP)
+            if ep > 1:
+                buf = jax.lax.all_to_all(buf, ep_axes, split_axis=0,
+                                         concat_axis=0, tiled=True)
+            # buf: (ep_src, e_local, cap_pad, D)
 
-        # ------------------------------------------------ 5. ReduceScatter-V (ETP)
-        if etp > 1:
-            yb = yb.reshape(etp, ep, e_local, cap_pad, D)
-            yb = jax.lax.psum_scatter(yb, etp_axes, scatter_dimension=0,
-                                      tiled=False)
-        # yb: (ep_src, e_local, cap_pad, D)
+            # -------------------------------------------- 3. AllGather-V (ETP)
+            if etp > 1:
+                buf = jax.lax.all_gather(buf, etp_axes, axis=0, tiled=False)
+                # (etp, ep_src, e_local, cap_pad, D)
+                buf = buf.reshape(etp * ep, e_local, cap_pad, D)
 
-        # ------------------------------------------------ 6. All-to-All-V back
-        if ep > 1:
-            yb = jax.lax.all_to_all(yb, ep_axes, split_axis=0, concat_axis=0,
-                                    tiled=True)
-        # yb: (ep_dst, e_local, cap_pad, D) — original (E, cap_pad) layout
+            n_src = buf.shape[0]
+            xe = buf.transpose(1, 0, 2, 3).reshape(e_local, n_src * cap_pad, D)
 
-        # ------------------------------------------------ 7. un-permute + combine
-        out_flat = yb.reshape(E * cap_pad, D)
-        safe_idx = jnp.minimum(idx_flat, E * cap_pad - 1)
-        gath = out_flat[safe_idx]                                           # (t*K, D)
+            ye = expert_compute(xe)
+
+            yb = ye.reshape(e_local, n_src, cap_pad, D).transpose(1, 0, 2, 3)
+
+            # -------------------------------------------- 5. ReduceScatter-V (ETP)
+            if etp > 1:
+                yb = yb.reshape(etp, ep, e_local, cap_pad, D)
+                yb = jax.lax.psum_scatter(yb, etp_axes, scatter_dimension=0,
+                                          tiled=False)
+            # yb: (ep_src, e_local, cap_pad, D)
+
+            # -------------------------------------------- 6. All-to-All-V back
+            if ep > 1:
+                yb = jax.lax.all_to_all(yb, ep_axes, split_axis=0,
+                                        concat_axis=0, tiled=True)
+            # yb: (ep_dst, e_local, cap_pad, D) — original (E, cap_pad) layout
+
+            # -------------------------------------------- 7a. un-permute
+            out_flat = yb.reshape(E * cap_pad, D)
+            safe_idx = jnp.minimum(idx_flat, E * cap_pad - 1)
+            gath = out_flat[safe_idx]                                       # (t*K, D)
+
+        # ------------------------------------------------ 7b. top-k combine
         w = (r.combine_w.reshape(-1) * keep_flat).astype(jnp.float32)
         y = (gath.astype(jnp.float32) * w[:, None]).reshape(-1, K, D).sum(axis=1)
         y = y.astype(x_l.dtype)

@@ -45,11 +45,13 @@ def init_moe(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
 def moe_block(p: Dict, x: Array, cfg: ModelConfig, fm: FoldedMesh, *,
               permute_mode: Optional[str] = None,
               capacity_hint: Optional[int] = None,
+              ragged: Optional[bool] = None,
               ) -> Tuple[Array, Dict[str, Array]]:
     """x: (B, S, D) sharded (dp, cp×tp, -) → same, plus aux losses.
 
-    ``permute_mode``/``capacity_hint`` override ``cfg.moe.permute_mode`` and
-    (sort + dropless) the static bucketed capacity — see
+    ``permute_mode``/``capacity_hint``/``ragged`` override
+    ``cfg.moe.permute_mode``, (sort + dropless) the static bucketed
+    capacity, and ``cfg.moe.ragged_a2a`` — see
     :func:`repro.core.dispatcher.moe_ffn`.
     """
     assert cfg.moe is not None
@@ -66,6 +68,6 @@ def moe_block(p: Dict, x: Array, cfg: ModelConfig, fm: FoldedMesh, *,
 
     y, aux = moe_ffn(xt, p["router"], w1, w2, w3, cfg.moe, fm,
                      activation=cfg.activation, permute_mode=permute_mode,
-                     capacity_hint=capacity_hint)
+                     capacity_hint=capacity_hint, ragged=ragged)
     y = y.reshape(B, S, D)
     return constrain(y, fm, "attn", "dp", ("cp", "tp"), None), aux

@@ -37,6 +37,19 @@ def capacity_per_expert(n_tokens: int, cfg: MoEConfig) -> int:
     return max(1, int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts))
 
 
+def resolved_capacity(n_tokens: int, cfg: MoEConfig,
+                      capacity_hint: Optional[int] = None) -> int:
+    """The per-(rank, expert) capacity the dispatcher's sub-sequence branch
+    actually runs with: :func:`capacity_per_expert`, overridden by a
+    clamped ``capacity_hint`` under sorted dropless. One definition shared
+    by ``moe_ffn`` and the host-side accounting pre-passes so the two can
+    never drift apart.
+    """
+    if cfg.dropless and capacity_hint is not None:
+        return max(1, min(int(capacity_hint), n_tokens))
+    return capacity_per_expert(n_tokens, cfg)
+
+
 def dropless_bucket_capacity(max_count: int, *, block: int = 128,
                              n_tokens: Optional[int] = None) -> int:
     """Bucket an observed per-(rank, expert) max routed count into a static
@@ -60,6 +73,33 @@ def dropless_bucket_capacity(max_count: int, *, block: int = 128,
     return cap
 
 
+def deterministic_top_k(logits: Array, k: int, quantum: float) -> Array:
+    """Top-k expert selection robust to fp reduction-order noise.
+
+    Logits are snapped to multiples of ``quantum`` and exact ties on the
+    snapped grid break toward the *lower* expert index. Two runs whose
+    logits differ by fp noise ε (e.g. the same model trained under
+    different parallelism foldings, where collective reduction order
+    perturbs the weights at ~1e-7) can then flip a selection only when a
+    logit lands within ε of a grid boundary *and* another expert's snapped
+    key is adjacent — roughly an ``ε/quantum`` (~1e-4 at the defaults)
+    reduction in flip probability versus raw fp comparison, not a hard
+    guarantee. Selection is discrete, so this changes no gradients — only
+    which experts win near-ties.
+
+    Returns the (t, k) int32 expert indices, best first.
+    """
+    e = logits.shape[-1]
+    # int32 lexicographic key: (snapped logit, -expert index). The snap
+    # budget is clamped so key = q*e + (e-1-idx) cannot overflow int32.
+    lim = (2 ** 30) // max(e, 1)
+    q = jnp.clip(jnp.round(logits / quantum), -lim, lim).astype(jnp.int32)
+    idx = jnp.arange(e, dtype=jnp.int32)
+    key = q * e + (e - 1 - idx)[None, :]
+    _, top_i = jax.lax.top_k(key, k)
+    return top_i.astype(jnp.int32)
+
+
 def route(x: Array, w_gate: Array, cfg: MoEConfig, *, capacity: int,
           token_mask: Optional[Array] = None) -> RouterOutput:
     """Route a chunk of tokens. ``x``: (t, D); ``w_gate``: (D, E).
@@ -69,7 +109,11 @@ def route(x: Array, w_gate: Array, cfg: MoEConfig, *, capacity: int,
     t = x.shape[0]
     logits = jnp.einsum("td,de->te", x.astype(jnp.float32), w_gate.astype(jnp.float32))
     probs = jax.nn.softmax(logits, axis=-1)                       # (t, E)
-    top_p, top_i = jax.lax.top_k(probs, cfg.top_k)                # (t, K)
+    if cfg.deterministic_router:
+        top_i = deterministic_top_k(logits, cfg.top_k, cfg.router_quantum)
+        top_p = jnp.take_along_axis(probs, top_i, axis=1)         # (t, K)
+    else:
+        top_p, top_i = jax.lax.top_k(probs, cfg.top_k)            # (t, K)
 
     # Load-balancing auxiliary loss (Switch Transformer form):
     #   E * sum_e f_e * P_e, f_e = fraction of assignments to e, P_e = mean prob.
@@ -131,12 +175,38 @@ class SortedDispatch:
     inv_perm: Array       # (L,) int32 — position of each assignment in ``perm``
     group_sizes: Array    # (E,) int32 — kept assignments per expert
     group_offsets: Array  # (E,) int32 — exclusive cumsum of group_sizes
+    # Per-destination-EP-rank spans of the packed sorted stream (populated
+    # when ``sorted_dispatch`` is given ``ep``): experts are rank-major, so
+    # the rows bound for EP rank d are the contiguous slice
+    # ``[rank_offsets[d], rank_offsets[d] + rank_counts[d])``. This is the
+    # send-side half of the ragged All-to-All-V count-exchange protocol.
+    rank_counts: Optional[Array] = None    # (ep,) int32
+    rank_offsets: Optional[Array] = None   # (ep,) int32
 
 
-def sorted_dispatch(expert_idx: Array, keep: Array, n_experts: int) -> SortedDispatch:
+def dest_rank_spans(group_sizes: Array, ep: int) -> Tuple[Array, Array]:
+    """Per-destination-EP-rank send counts/offsets in the packed stream.
+
+    EP rank ``d`` owns experts ``[d·E/ep, (d+1)·E/ep)`` and the packed
+    sorted stream is expert-major, so its slice is contiguous:
+    ``counts[d] = Σ group_sizes[d·E/ep : (d+1)·E/ep]`` and ``offsets`` is
+    the exclusive cumsum of ``counts``.
+    """
+    E = group_sizes.shape[0]
+    if E % ep:
+        raise ValueError(f"n_experts {E} not divisible by EP {ep}")
+    counts = group_sizes.reshape(ep, E // ep).sum(axis=1)
+    offsets = jnp.cumsum(counts) - counts
+    return counts.astype(jnp.int32), offsets.astype(jnp.int32)
+
+
+def sorted_dispatch(expert_idx: Array, keep: Array, n_experts: int,
+                    *, ep: Optional[int] = None) -> SortedDispatch:
     """Stable argsort of assignments by expert id, drops last.
 
-    ``expert_idx``/``keep``: (t, K) from :func:`route`.
+    ``expert_idx``/``keep``: (t, K) from :func:`route`. Passing ``ep``
+    additionally emits the per-destination-rank send spans
+    (:func:`dest_rank_spans`) the ragged EP All-to-All-V needs.
     """
     flat_e = expert_idx.reshape(-1).astype(jnp.int32)            # (L,)
     kept = keep.reshape(-1)
@@ -146,9 +216,13 @@ def sorted_dispatch(expert_idx: Array, keep: Array, n_experts: int) -> SortedDis
     group_sizes = jnp.zeros((n_experts,), jnp.int32).at[flat_e].add(
         kept.astype(jnp.int32))
     group_offsets = jnp.cumsum(group_sizes) - group_sizes
+    rank_counts = rank_offsets = None
+    if ep is not None:
+        rank_counts, rank_offsets = dest_rank_spans(group_sizes, ep)
     return SortedDispatch(perm=perm, inv_perm=inv_perm,
                           group_sizes=group_sizes.astype(jnp.int32),
-                          group_offsets=group_offsets.astype(jnp.int32))
+                          group_offsets=group_offsets.astype(jnp.int32),
+                          rank_counts=rank_counts, rank_offsets=rank_offsets)
 
 
 def padded_group_spans(group_sizes: Array, bm: int) -> Tuple[Array, Array]:

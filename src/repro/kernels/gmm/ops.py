@@ -24,6 +24,22 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def uniform_block_expert(e_local: int, span: int, bm: int) -> jax.Array:
+    """Scalar-prefetch ``block_expert`` array for ``e_local`` experts with a
+    uniform per-expert span of ``span`` rows (``span % bm == 0``).
+
+    Both dispatcher exchange layouts use this: the padded path strides each
+    source's rows at ``capacity`` within the span; the ragged path packs the
+    per-rank ragged spans at the front of the same static span (zero rows
+    behind) — either way every ``bm``-row block maps to one expert, so the
+    grouped-matmul grid is identical and per-row outputs are bitwise equal.
+    """
+    if span % bm:
+        raise ValueError(f"span {span} not a multiple of block {bm}")
+    return jnp.repeat(jnp.arange(e_local, dtype=jnp.int32), span // bm,
+                      total_repeat_length=e_local * (span // bm))
+
+
 def expert_ffn_gmm(xe: jax.Array, w1: jax.Array, w2: jax.Array, w3: jax.Array,
                    activation: str, *, bm: Optional[int] = None,
                    block_expert: Optional[jax.Array] = None,

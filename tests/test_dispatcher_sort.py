@@ -150,6 +150,19 @@ def test_sort_dropless_undersized_hint_is_visible():
     assert float(aux["moe_drop_fraction"]) > 0.5
 
 
+def test_routed_capacity_hint_rejected_inside_jit():
+    """The hint pre-pass host-syncs; calling it under a trace used to die
+    with an opaque tracer error — it must be a clear ValueError pointing at
+    the pre-pass contract."""
+    fm = _mesh(2, 1)
+    mcfg = MoEConfig(n_experts=E, top_k=2, d_expert=F, dropless=True)
+    x, wg, *_ = _weights(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="outside jit"):
+        jax.jit(lambda a: routed_capacity_hint(a, wg, mcfg, fm))(x)
+    with pytest.raises(ValueError, match="docs/dispatcher.md"):
+        jax.jit(lambda w: routed_capacity_hint(x, w, mcfg, fm))(wg)
+
+
 def test_capacity_hint_rejected_with_full_sequence_policy():
     """The full-sequence branch recomputes capacity from the gathered
     sequence, so a capacity_hint there must be an explicit error rather

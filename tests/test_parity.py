@@ -6,9 +6,11 @@ prefill logits. Dropless mode is used where drop decisions would otherwise
 legitimately differ across token chunkings (as in the paper's parity run).
 """
 import dataclasses
+import re
 
 import jax
 import jax.numpy as jnp
+import jaxlib
 import numpy as np
 import pytest
 
@@ -59,9 +61,20 @@ def test_folded_vs_unfolded_loss_and_grads():
             np.testing.assert_allclose(a, b, atol=5e-4, rtol=5e-3)
 
 
+# jaxlib<=0.4.37's CPU backend aborts compiling the combined mamba2 +
+# shared-attention decode program; the skip is version-conditional so a
+# jaxlib upgrade re-enables the case automatically (ROADMAP item). The
+# digit-prefix parse survives pre-release suffixes like "0.5.0rc0".
+_ZAMBA2_CPU_ABORT = (
+    jax.default_backend() == "cpu"
+    and tuple(int(re.match(r"\d+", p).group()) if re.match(r"\d+", p) else 0
+              for p in jaxlib.__version__.split(".")[:3]) <= (0, 4, 37))
+
+
 @pytest.mark.parametrize("arch", [
     "llama3.2-1b", "xlstm-125m",
-    pytest.param("zamba2-2.7b", marks=pytest.mark.skip(
+    pytest.param("zamba2-2.7b", marks=pytest.mark.skipif(
+        _ZAMBA2_CPU_ABORT,
         reason="XLA CPU aborts (free(): invalid pointer) compiling the "
                "combined mamba2 + shared-attention decode program on "
                "jaxlib<=0.4.37; pure-mamba2 and attention-only decode both "
