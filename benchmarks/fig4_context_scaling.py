@@ -3,6 +3,13 @@
 Mixtral-8x22B, MCore vs Folding. CP grows with sequence length; the global
 batch shrinks to keep tokens/step constant (paper setup). Folding keeps
 EP=8 regardless of CP (folded across CP×TP); unfolded EP stays inside DP.
+
+Each row also reports the per-rank KV residency of the two CP schedules
+(``repro.models.attention.cp_kv_stats``): allgather-KV materializes the
+full-sequence K/V on every CP rank (O(S) regardless of cp), while ring CP
+keeps one S/cp shard resident and rotates the rest — the ``kv_ring_mb``
+column shrinks by ~cp× relative to ``kv_ag_mb``, plus the P2P ring payload
+each rank sends per layer forward.
 """
 from benchmarks.common import QUICK, emit
 
@@ -12,17 +19,26 @@ from repro.configs.shapes import InputShape
 
 def main() -> None:
     from repro.launch.dryrun import run_pair
+    from repro.launch.mappings import model_for
+    from repro.models.attention import cp_kv_stats
 
     cases = [(16384, 4), (32768, 8)] if QUICK else \
         [(16384, 4), (32768, 8), (65536, 16), (131072, 16)]
     tokens_per_step = 4 * 2 ** 20
+    cfg = model_for("mixtral-8x22b", "train_4k")
     for seq, cp in cases:
         gbs = max(tokens_per_step // seq, 8)
         dp = 256 // (cp * 2)
         attn = (dp, cp, 2)
+        nmicro = max(1, gbs // dp)
+        b_rank = max(gbs // (dp * nmicro), 1)   # per-microbatch per-DP-rank
+        kv = cp_kv_stats(cfg, seq, b_rank, cp, dtype_bytes=2)
+        mb = 2.0 ** -20
+        kv_note = (f"kv_ag_mb={kv['kv_bytes_allgather'] * mb:.1f};"
+                   f"kv_ring_mb={kv['kv_bytes_ring'] * mb:.1f};"
+                   f"ring_payload_mb={kv['ring_payload_bytes'] * mb:.1f}")
         for folded in (False, True):
             moe = (32, 8, 1) if folded else (256 // 8, 4, 2)
-            nmicro = max(1, gbs // dp)
             pcfg = ParallelConfig(attn=PM(*attn), moe=PM(*moe),
                                   microbatch=nmicro, fsdp=True)
             shape = InputShape(f"ctx{seq}", seq, gbs, "train")
@@ -37,7 +53,7 @@ def main() -> None:
             emit(f"fig4/mixtral-8x22b/{'folding' if folded else 'mcore'}/{seq}",
                  t * 1e6,
                  f"mfu_bound={rec['mfu_bound'] or 0:.3f};"
-                 f"dominant={rec['dominant']};cp={cp};gbs={gbs}")
+                 f"dominant={rec['dominant']};cp={cp};gbs={gbs};{kv_note}")
 
 
 if __name__ == "__main__":

@@ -34,6 +34,75 @@ def shard_map(f: Callable, *, mesh: Any, in_specs: Any, out_specs: Any) -> Calla
                       check_rep=False)
 
 
+def ring_permute(x: jax.Array, axis_name: Any, shift: int = 1) -> jax.Array:
+    """Rotate ``x`` by ``shift`` positions around the (possibly multi-atom)
+    ring named by ``axis_name``, inside ``shard_map``.
+
+    The folded mesh frequently realizes one *logical* CP axis as a tuple of
+    atomic mesh axes (e.g. ``("pod", "f1")`` under ``pod_role="cp"``), with
+    the ring index being the row-major flat index over the tuple. Newer JAX
+    accepts tuple axis names in ``lax.ppermute`` directly; this shim mirrors
+    the ``ragged_all_to_all`` pattern — try the native spelling, fall back to
+    a per-atom decomposition (:func:`_ring_permute_decomposed`) when the
+    pinned JAX rejects tuples.
+
+    ``shift`` is the source→destination distance: rank ``r``'s shard lands on
+    rank ``(r + shift) % n``.
+    """
+    names = axis_name if isinstance(axis_name, tuple) else (axis_name,)
+    if len(names) == 1:
+        n = jax.lax.psum(1, names[0])
+        # psum of 1 over a bound axis is statically known (a Python int)
+        # inside shard_map on every supported JAX version.
+        return jax.lax.ppermute(
+            x, names[0], [(i, (i + shift) % n) for i in range(n)])
+    try:
+        n = _static_axes_size(names)
+        return jax.lax.ppermute(
+            x, names, [(i, (i + shift) % n) for i in range(n)])
+    except (TypeError, ValueError, NotImplementedError):
+        return _ring_permute_decomposed(x, names, shift)
+
+
+def _ring_permute_decomposed(x: jax.Array, names: tuple, shift: int) -> jax.Array:
+    """Multi-atom ring shift expressed as per-atom ``ppermute`` + select.
+
+    Only unit shifts are decomposable this way (the ring rotation only ever
+    steps by one). Row-major flat order over ``names``: shifting the
+    innermost atom by one covers every rank except those that wrap
+    (innermost index 0 after the shift), which additionally need the carry
+    propagated into the next-outer atom — recursively, like ripple-carry
+    addition over the mixed-radix rank index.
+    """
+    if shift % _static_axes_size(names) == 0:
+        return x
+    if abs(shift) != 1:
+        raise NotImplementedError(
+            f"decomposed ring_permute only supports unit shifts, got {shift}")
+
+    def go(x, names):
+        inner, outer = names[-1], names[:-1]
+        n_inner = jax.lax.psum(1, inner)
+        y = jax.lax.ppermute(
+            x, inner, [(i, (i + shift) % n_inner) for i in range(n_inner)])
+        if not outer:
+            return y
+        # Ranks that received the wrapped value also need the outer carry.
+        z = go(y, outer)
+        idx = jax.lax.axis_index(inner)
+        wrapped = idx == (0 if shift > 0 else n_inner - 1)
+        return jnp.where(wrapped, z, y)
+
+    return go(x, names)
+
+
+def _static_axes_size(names: tuple) -> int:
+    n = 1
+    for a in names:
+        n *= jax.lax.psum(1, a)
+    return int(n)
+
+
 def has_ragged_all_to_all() -> bool:
     """True when this JAX exposes a native ``lax.ragged_all_to_all``."""
     return hasattr(jax.lax, "ragged_all_to_all")

@@ -232,6 +232,13 @@ class ParallelConfig:
     fsdp: bool = True                  # shard params/opt-state over DP (ZeRO-3-ish)
     remat: str = "full"                # full | none
     use_pallas: bool = False           # route matmuls through Pallas kernels
+    # Context-parallel attention collective schedule (docs/folding.md §4):
+    #   "allgather" — gather full K/V over CP on every rank (seed path; KV
+    #                 memory per rank is O(S) regardless of cp).
+    #   "ring"      — load-balanced zigzag sequence layout + P2P K/V rotation
+    #                 around the CP ring with online-softmax merging; per-rank
+    #                 KV memory and attention work are O(S/cp).
+    cp_mode: str = "allgather"
 
     def __post_init__(self):
         if self.attn.size != self.moe.size:
@@ -239,6 +246,9 @@ class ParallelConfig:
                 f"folded mappings must cover the same devices: "
                 f"attention {self.attn.size} != moe {self.moe.size}"
             )
+        if self.cp_mode not in ("allgather", "ring"):
+            raise ValueError(f"unknown cp_mode {self.cp_mode!r} "
+                             "(options: 'allgather', 'ring')")
 
     @property
     def world_size(self) -> int:

@@ -252,6 +252,94 @@ def build_folded_mesh(
     return FoldedMesh(mesh=mesh, pcfg=pcfg, attn_axes=attn_axes, moe_axes=moe_axes)
 
 
+# ---------------------------------------------------------------------------
+# Load-balanced causal context-parallel layout (ring CP)
+# ---------------------------------------------------------------------------
+#
+# Contiguous sequence sharding gives causal attention a triangle workload:
+# the rank owning the tail of the sequence attends to (almost) everything,
+# the rank owning the head to (almost) nothing. The paper's load-balanced
+# layout splits the sequence into ``2·cp`` chunks and hands rank *i* the
+# pair ``(i, 2·cp−1−i)`` — one early chunk and its mirror-image late chunk —
+# so every rank's causal work is identical (see ``causal_chunk_work``).
+
+def zigzag_chunks(cp: int) -> List[Tuple[int, int]]:
+    """Chunk-id pair owned by each CP rank under the load-balanced layout.
+
+    >>> zigzag_chunks(4)
+    [(0, 7), (1, 6), (2, 5), (3, 4)]
+    >>> zigzag_chunks(1)
+    [(0, 1)]
+    """
+    return [(i, 2 * cp - 1 - i) for i in range(cp)]
+
+
+def contiguous_chunks(cp: int) -> List[Tuple[int, int]]:
+    """Naive layout at the same 2·cp granularity (for comparison/tests).
+
+    >>> contiguous_chunks(2)
+    [(0, 1), (2, 3)]
+    """
+    return [(2 * i, 2 * i + 1) for i in range(cp)]
+
+
+def causal_chunk_work(chunks: Sequence[int], n_chunks: int) -> float:
+    """Causal attention work units for a rank owning ``chunks``.
+
+    Chunk-granular accounting over the global ``n_chunks``-chunk sequence:
+    each (q-chunk, kv-chunk) pair with ``q > kv`` is one fully-visible block
+    (1.0), the ``q == kv`` diagonal is half-visible (0.5), future pairs are
+    fully masked (0). Every rank's zigzag pair sums to exactly ``n_chunks``:
+
+    >>> [causal_chunk_work(c, 8) for c in zigzag_chunks(4)]
+    [8.0, 8.0, 8.0, 8.0]
+    >>> [causal_chunk_work(c, 8) for c in contiguous_chunks(4)]
+    [2.0, 6.0, 10.0, 14.0]
+    """
+    return float(sum(q + 0.5 for q in chunks if q < n_chunks))
+
+
+def zigzag_perm(seq_len: int, cp: int) -> np.ndarray:
+    """Natural→zigzag gather indices for a length-``seq_len`` sequence.
+
+    ``x[:, zigzag_perm(S, cp)]`` reorders the sequence so that a contiguous
+    shard over ``cp`` ranks gives rank *i* exactly chunks ``i`` and
+    ``2·cp−1−i`` of the natural order. Identity when ``cp == 1``.
+
+    >>> zigzag_perm(8, 2).tolist()
+    [0, 1, 6, 7, 2, 3, 4, 5]
+    >>> zigzag_perm(8, 1).tolist()
+    [0, 1, 2, 3, 4, 5, 6, 7]
+    """
+    if seq_len % (2 * cp):
+        raise ValueError(
+            f"load-balanced CP layout needs seq_len % (2*cp) == 0, got "
+            f"seq_len={seq_len}, cp={cp}")
+    c = seq_len // (2 * cp)
+    chunk = np.arange(seq_len).reshape(2 * cp, c)
+    return np.concatenate([
+        np.concatenate([chunk[a], chunk[b]]) for a, b in zigzag_chunks(cp)
+    ])
+
+
+def zigzag_inverse_perm(seq_len: int, cp: int) -> np.ndarray:
+    """Scatter indices undoing :func:`zigzag_perm`.
+
+    >>> p = zigzag_perm(16, 4); inv = zigzag_inverse_perm(16, 4)
+    >>> bool((p[inv] == np.arange(16)).all())
+    True
+    """
+    return np.argsort(zigzag_perm(seq_len, cp))
+
+
+def cp_ring_axes(fm: "FoldedMesh") -> Tuple[str, ...]:
+    """Atom tuple forming the CP ring — including the pod atom when the
+    fold extends CP across pods (``pod_role="cp"``). The ring index is the
+    row-major flat index over these atoms (what ``compat.ring_permute``
+    rotates over)."""
+    return fm.axis("attn", "cp")
+
+
 def unfolded(pcfg: ParallelConfig) -> bool:
     """True when attention and MoE mappings coincide (no folding)."""
     a, m = pcfg.attn, pcfg.moe

@@ -26,9 +26,12 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_off_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_ref, l_ref, acc_ref, *, sm_scale, causal, window,
-                  bq, bkv, kv_len):
+def _flash_kernel(off_ref, q_ref, k_ref, v_ref, *refs, sm_scale, causal,
+                  window, bq, bkv, kv_len, normalize):
+    if normalize:
+        o_ref, m_ref, l_ref, acc_ref = refs
+    else:  # partial outputs: unnormalized acc + running (m, l)
+        o_ref, mo_ref, lo_ref, m_ref, l_ref, acc_ref = refs
     kv_i = pl.program_id(3)
 
     @pl.when(kv_i == 0)
@@ -43,9 +46,10 @@ def _flash_kernel(q_off_ref, q_ref, k_ref, v_ref, o_ref,
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * sm_scale
 
-    q_pos = q_off_ref[0] + pl.program_id(2) * bq + \
+    q_pos = off_ref[0] + pl.program_id(2) * bq + \
         jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
-    k_pos = kv_i * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    k_pos = off_ref[1] + kv_i * bkv + \
+        jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
     vis = jnp.ones((bq, bkv), jnp.bool_)
     if causal:
         vis &= q_pos >= k_pos
@@ -67,8 +71,13 @@ def _flash_kernel(q_off_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(kv_i == pl.num_programs(3) - 1)
     def _store():
-        l = jnp.maximum(l_ref[...], 1e-30)
-        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        if normalize:
+            l = jnp.maximum(l_ref[...], 1e-30)
+            o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        else:
+            o_ref[0, 0] = acc_ref[...]
+            mo_ref[0, 0] = m_ref[...][:, 0]
+            lo_ref[0, 0] = l_ref[...][:, 0]
 
 
 def flash_attention(
@@ -76,14 +85,26 @@ def flash_attention(
     k: jax.Array,    # (B, Hkv, Skv, hd)
     v: jax.Array,
     *,
-    q_offset: int = 0,          # absolute position of q[..., 0, :] (CP chunk)
+    q_offset=0,                 # absolute position of q[..., 0, :] (CP chunk)
+    kv_offset=0,                # absolute position of k[..., 0, :] (ring CP)
     causal: bool = True,
     window: int = 0,
     sm_scale: float | None = None,
     bq: int = 128,
     bkv: int = 128,
     interpret: bool = False,
-) -> jax.Array:
+    return_partial: bool = False,
+):
+    """Blockwise attention kernel.
+
+    ``q_offset``/``kv_offset`` may be Python ints or traced int32 scalars
+    (ring CP derives them from the rank's ``axis_index`` at runtime).
+
+    With ``return_partial`` the kernel skips the final normalization and
+    returns the ``(acc, m, l)`` triple — unnormalized f32 accumulator plus
+    running max / sum — for cross-shard online-softmax merging (ring CP /
+    flash-decode). Otherwise returns the normalized output in ``q.dtype``.
+    """
     B, H, Sq, hd = q.shape
     _, Hkv, Skv, _ = k.shape
     rep = H // Hkv
@@ -94,20 +115,39 @@ def flash_attention(
 
     grid = (B, H, Sq // bq, Skv // bkv)
 
-    def q_map(b, h, i, j, qo):
+    def q_map(b, h, i, j, off):
         return (b, h, i, 0)
 
-    def kv_map(b, h, i, j, qo):
+    def kv_map(b, h, i, j, off):
         return (b, h // rep, j, 0)
 
-    def o_map(b, h, i, j, qo):
+    def o_map(b, h, i, j, off):
         return (b, h, i, 0)
+
+    def ml_map(b, h, i, j, off):
+        return (b, h, i)
 
     kern = functools.partial(
         _flash_kernel, sm_scale=scale, causal=causal, window=window,
-        bq=bq, bkv=bkv, kv_len=Skv)
+        bq=bq, bkv=bkv, kv_len=Skv, normalize=not return_partial)
 
-    q_off = jnp.asarray([q_offset], jnp.int32)
+    if return_partial:
+        out_shape = [
+            jax.ShapeDtypeStruct((B, H, Sq, hd), jnp.float32),   # acc
+            jax.ShapeDtypeStruct((B, H, Sq), jnp.float32),       # m
+            jax.ShapeDtypeStruct((B, H, Sq), jnp.float32),       # l
+        ]
+        out_specs = [
+            pl.BlockSpec((1, 1, bq, hd), o_map),
+            pl.BlockSpec((1, 1, bq), ml_map),
+            pl.BlockSpec((1, 1, bq), ml_map),
+        ]
+    else:
+        out_shape = jax.ShapeDtypeStruct(q.shape, q.dtype)
+        out_specs = pl.BlockSpec((1, 1, bq, hd), o_map)
+
+    offs = jnp.stack([jnp.asarray(q_offset, jnp.int32),
+                      jnp.asarray(kv_offset, jnp.int32)])
     return pl.pallas_call(
         kern,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -118,16 +158,16 @@ def flash_attention(
                 pl.BlockSpec((1, 1, bkv, hd), kv_map),
                 pl.BlockSpec((1, 1, bkv, hd), kv_map),
             ],
-            out_specs=pl.BlockSpec((1, 1, bq, hd), o_map),
+            out_specs=out_specs,
             scratch_shapes=[
                 pltpu.VMEM((bq, 1), jnp.float32),
                 pltpu.VMEM((bq, 1), jnp.float32),
                 pltpu.VMEM((bq, hd), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        out_shape=out_shape,
         compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(q_off, q, k, v)
+    )(offs, q, k, v)

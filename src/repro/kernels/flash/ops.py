@@ -12,7 +12,14 @@ def is_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset"))
-def flash(q, k, v, *, q_offset=0, causal=True, window=0):
-    return flash_attention(q, k, v, q_offset=q_offset, causal=causal,
-                           window=window, interpret=not is_tpu())
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "return_partial"))
+def flash(q, k, v, *, q_offset=0, kv_offset=0, causal=True, window=0,
+          return_partial=False):
+    """Normalized output, or the ``(acc, m, l)`` partial triple when
+    ``return_partial`` (ring-CP / flash-decode merging). Offsets may be
+    traced scalars."""
+    return flash_attention(q, k, v, q_offset=q_offset, kv_offset=kv_offset,
+                           causal=causal, window=window,
+                           return_partial=return_partial,
+                           interpret=not is_tpu())

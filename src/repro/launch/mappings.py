@@ -79,6 +79,47 @@ _TABLE: Dict[Tuple[str, str], Tuple[Tuple[int, int, int], Tuple[int, int, int], 
 }
 
 
+def _validate_table() -> None:
+    """Import-time sanity check of every ``_TABLE`` row.
+
+    A bad row (heads not divisible by TP, sequence not divisible by the
+    CP×TP sequence-parallel layout, or by the 2·CP zigzag chunking the ring
+    CP path needs) used to surface as an opaque reshape/sharding failure
+    deep inside lowering. Fail at import instead, naming the offending
+    (arch, shape) row and the violated constraint.
+    """
+    problems = []
+    for (arch, shape_name), ((adp, acp, atp), _moe, _nm) in _TABLE.items():
+        try:
+            cfg = get_config(arch)
+            seq = get_shape(shape_name).seq_len
+        except KeyError as e:
+            problems.append(f"({arch!r}, {shape_name!r}): {e}")
+            continue
+        checks = (
+            (cfg.n_heads % atp == 0,
+             f"n_heads {cfg.n_heads} not divisible by tp={atp}"),
+            (cfg.n_kv_heads % atp == 0,
+             f"n_kv_heads {cfg.n_kv_heads} not divisible by tp={atp}"),
+            (seq % (acp * atp) == 0,
+             f"seq_len {seq} not divisible by cp*tp={acp * atp} "
+             "(sequence-parallel entry layout)"),
+            (seq % (2 * acp) == 0,
+             f"seq_len {seq} not divisible by 2*cp={2 * acp} "
+             "(load-balanced ring-CP chunking)"),
+        )
+        for ok, msg in checks:
+            if not ok:
+                problems.append(f"({arch!r}, {shape_name!r}): {msg}")
+    if problems:
+        raise ValueError(
+            "invalid parallelism mapping row(s) in launch.mappings._TABLE:\n  "
+            + "\n  ".join(problems))
+
+
+_validate_table()
+
+
 def model_for(arch: str, shape_name: str) -> ModelConfig:
     """Arch config, with the long_500k sub-quadratic variant applied."""
     cfg = get_config(arch)

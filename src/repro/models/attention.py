@@ -2,8 +2,19 @@
 
 Training/prefill forward uses GSPMD: activations enter sequence-sharded over
 (CP×TP) atoms (Megatron sequence-parallel layout); constraints drive the
-AG(seq→tp) / RS pattern. KV is gathered over CP (allgather-KV context
-parallelism) and attention runs blockwise (flash-style scan).
+AG(seq→tp) / RS pattern. Two context-parallel schedules for K/V, selected by
+``ParallelConfig.cp_mode`` (docs/folding.md §4):
+
+* ``"allgather"`` — K/V gathered over CP on every rank; attention runs
+  blockwise (flash-style scan) over the full sequence. Per-rank KV memory is
+  O(S) regardless of ``cp``.
+* ``"ring"`` — the sequence is permuted into the paper's load-balanced
+  zigzag layout (rank *i* owns chunks *i* and *2·cp−1−i*), K/V shards rotate
+  around the CP ring via ``ppermute``, and partials merge with online-softmax
+  rescaling (``attn_core.ring_attention``). Per-rank KV memory and causal
+  work are O(S/cp). The permutation is undone on the attention *output*, so
+  everything downstream — residual stream, router, EP dispatch order — sees
+  the natural token order (docs/dispatcher.md §CP × MoE).
 
 Decode runs one token against a CP-sharded KV cache via ``shard_map`` with
 log-sum-exp partial combination across the CP atoms (flash-decode).
@@ -19,8 +30,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.configs.base import ModelConfig
-from repro.core.folding import FoldedMesh
-from repro.models.attn_core import blockwise_attention
+from repro.core.folding import (FoldedMesh, cp_ring_axes, zigzag_inverse_perm,
+                                zigzag_perm)
+from repro.models.attn_core import blockwise_attention, ring_attention
 from repro.models.common import apply_mrope, apply_rope, dense_init
 from repro.models.sharding import constrain, wconstrain
 
@@ -91,6 +103,13 @@ def attention(
     block_kv: int = 1024,
 ) -> Array:
     """x: (B, S, D) sharded (dp, cp×tp, -). Returns same layout."""
+    cp_mode = getattr(fm.pcfg, "cp_mode", "allgather")
+    if cp_mode == "ring" and fm.cp > 1 and cross_x is None:
+        # Cross-attention KV is not sequence-sharded over CP (encoder output
+        # is replicated), so only self-attention takes the ring schedule.
+        return _ring_self_attention(p, x, pos, cfg, fm, causal=causal,
+                                    window=window or cfg.sliding_window,
+                                    block_kv=block_kv)
     # Sequence-parallel AG over TP atoms: seq stays CP-sharded for compute.
     x = constrain(x, fm, "attn", "dp", "cp", None)
     x_kv = x if cross_x is None else constrain(cross_x, fm, "attn", "dp", None, None)
@@ -119,6 +138,97 @@ def attention(
     wo = wconstrain(p["wo"].astype(out.dtype), fm, "tp", "fsdp")
     y = jnp.einsum("bsh,hd->bsd", out, wo)
     return constrain(y, fm, "attn", "dp", ("cp", "tp"), None)
+
+
+# ---------------------------------------------------------------------------
+# Ring context parallelism (cp_mode="ring")
+# ---------------------------------------------------------------------------
+
+def _ring_self_attention(p, x, pos, cfg: ModelConfig, fm: FoldedMesh, *,
+                         causal: bool, window: int, block_kv: int) -> Array:
+    """Load-balanced ring-CP self-attention (see module docstring).
+
+    Layout: permute the (sequence-sharded) activations into zigzag order so
+    each CP rank holds one early + one mirrored late chunk, run the ring
+    inside ``shard_map`` over the CP atom tuple, then un-permute the output
+    back to natural order *before* the output projection — the MoE router
+    downstream never observes the CP layout.
+    """
+    B, S, _ = x.shape
+    cp = fm.cp
+    idx = zigzag_perm(S, cp)            # raises with a clear error if S % 2cp
+    inv = zigzag_inverse_perm(S, cp)
+
+    x = constrain(x, fm, "attn", "dp", "cp", None)
+    xz = jnp.take(x, idx, axis=1)
+    xz = constrain(xz, fm, "attn", "dp", "cp", None)
+    posz = jnp.take(pos, idx, axis=1)   # (B, S) or (B, S, 3): seq is axis 1
+
+    q, k, v = _project_qkv(p, xz, xz, posz, posz, cfg, fm)
+    q = q.transpose(0, 2, 1, 3)         # (B, H, S, hd)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    mask_pos = posz[..., 0] if posz.ndim == 3 else posz
+
+    dp_a = fm.axis("attn", "dp") or None
+    if dp_a and B % math.prod(fm.mesh.shape[a] for a in dp_a):
+        dp_a = None  # batch smaller than DP: keep it replicated in the ring
+    cp_a = cp_ring_axes(fm)
+    tp_a = fm.axis("attn", "tp")
+    tp_q = tp_a if (tp_a and cfg.n_heads % fm.tp == 0) else None
+    tp_kv = tp_a if (tp_a and cfg.n_kv_heads % fm.tp == 0) else None
+    if tp_q and not tp_kv:
+        tp_q = None  # same GQA-slicing restriction as the decode path
+
+    def local(q_l, k_l, v_l, pos_l):
+        return ring_attention(q_l, k_l, v_l, pos_l, pos_l,
+                              axis_names=cp_a, cp=cp, causal=causal,
+                              window=window, block_kv=block_kv,
+                              use_flash=fm.pcfg.use_pallas)
+
+    out = shard_map(
+        local,
+        mesh=fm.mesh,
+        in_specs=(
+            P(dp_a, tp_q, cp_a, None),
+            P(dp_a, tp_kv, cp_a, None),
+            P(dp_a, tp_kv, cp_a, None),
+            P(dp_a, cp_a),
+        ),
+        out_specs=P(dp_a, tp_q, cp_a, None),
+    )(q, k, v, mask_pos)
+
+    out = out.transpose(0, 2, 1, 3)                   # (B, S, H, hd) zigzag
+    out = jnp.take(out, inv, axis=1)                  # back to natural order
+    out = constrain(out, fm, "attn", "dp", "cp", None, None)
+    out = out.reshape(B, S, cfg.q_dim)
+    wo = wconstrain(p["wo"].astype(out.dtype), fm, "tp", "fsdp")
+    y = jnp.einsum("bsh,hd->bsd", out, wo)
+    return constrain(y, fm, "attn", "dp", ("cp", "tp"), None)
+
+
+def cp_kv_stats(cfg: ModelConfig, seq_len: int, batch_per_rank: int, cp: int,
+                *, dtype_bytes: int = 2) -> Dict[str, float]:
+    """Per-rank KV-residency and ring-payload accounting for one attention
+    layer forward (used by ``benchmarks/fig4_context_scaling.py``).
+
+    * ``kv_bytes_allgather`` — K+V resident per rank after the CP allgather
+      (the full sequence, independent of ``cp``).
+    * ``kv_bytes_ring`` — K+V resident per rank under ring CP (one S/cp
+      shard; the in-flight visiting shard is the same size again at peak).
+    * ``ring_payload_bytes`` — total P2P bytes each rank sends over the
+      ``cp − 1`` forward rotations (K + V + kv positions).
+    """
+    hd = cfg.resolved_head_dim
+    kv_row = 2 * cfg.n_kv_heads * hd * dtype_bytes          # K+V per token
+    full = float(batch_per_rank * seq_len * kv_row)
+    shard = full / cp
+    pos_bytes = batch_per_rank * (seq_len / cp) * 4
+    return {
+        "kv_bytes_allgather": full,
+        "kv_bytes_ring": shard,
+        "ring_payload_bytes": (cp - 1) * (shard + pos_bytes),
+    }
 
 
 # ---------------------------------------------------------------------------

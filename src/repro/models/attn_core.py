@@ -85,6 +85,58 @@ def _fwd_scan(q, k, v, q_pos, kv_pos, *, causal, window, block_kv, scale):
     return out, lse, m, l, acc
 
 
+def _bwd_scan(q, k, v, q_pos, kv_pos, lse, dout, delta, *, causal, window,
+              block_kv, scale):
+    """Flash-style backward over one KV stretch, given the (global) LSE.
+
+    Recomputes each block's probabilities from ``lse`` and accumulates
+    ``(dq, dk, dv)`` blockwise. Shared between the flat-flash VJP (full KV)
+    and the ring-CP VJP, where it runs once per visiting KV shard — the
+    ``p·(dp − delta)`` form is exact for *partial* KV too because ``delta``
+    is computed from the fully-merged output.
+    """
+    B, H, Sq, hd = q.shape
+    Skv = k.shape[2]
+    n_blocks = Skv // block_kv
+    qf = q          # stays bf16: cache-sized dots must be homogeneous
+    do = dout       # (see H1b) — f32 accumulation via preferred_element_type
+
+    def step(dq, idx):
+        kb = jax.lax.dynamic_slice_in_dim(k, idx * block_kv, block_kv,
+                                          axis=2)
+        vb = jax.lax.dynamic_slice_in_dim(v, idx * block_kv, block_kv,
+                                          axis=2)
+        pb = jax.lax.dynamic_slice_in_dim(kv_pos, idx * block_kv,
+                                          block_kv, axis=-1)
+        s = jnp.einsum("bhsd,bhtd->bhst", qf, kb,
+                       preferred_element_type=jnp.float32) * scale
+        vis = _mask_block(q_pos[:, None, :], pb[:, None, :],
+                          causal=causal, window=window)
+        p = jnp.where(vis, jnp.exp(s - lse[..., None]), 0.0)  # (B,H,Sq,t)
+        dv_b = jnp.einsum("bhst,bhsd->bhtd", p, do,
+                          preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bhsd,bhtd->bhst", do, vb,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[..., None]) * scale
+        dk_b = jnp.einsum("bhst,bhsd->bhtd", ds, qf,
+                          preferred_element_type=jnp.float32)
+        dq = dq + jnp.einsum("bhst,bhtd->bhsd", ds.astype(k.dtype), kb,
+                             preferred_element_type=jnp.float32)
+        return dq, (dk_b, dv_b)
+
+    dq0 = jnp.zeros((B, H, Sq, hd), jnp.float32)
+    dq, (dk_blocks, dv_blocks) = jax.lax.scan(step, dq0,
+                                              jnp.arange(n_blocks))
+    dk = dk_blocks.transpose(1, 2, 0, 3, 4).reshape(B, H, Skv, hd)
+    dv = dv_blocks.transpose(1, 2, 0, 3, 4).reshape(B, H, Skv, hd)
+    return dq, dk, dv
+
+
+def _zero_pos_grads(q_pos, kv_pos):
+    zero = lambda x: np.zeros(x.shape, dtype=jax.dtypes.float0)
+    return zero(q_pos), zero(kv_pos)
+
+
 @functools.lru_cache(maxsize=None)
 def _flash_flat(causal: bool, window: int, block_kv: int, scale: float):
     """custom_vjp'd flat-head attention (H == Hkv), config closed over."""
@@ -105,48 +157,188 @@ def _flash_flat(causal: bool, window: int, block_kv: int, scale: float):
 
     def bwd(res, dout):
         q, k, v, q_pos, kv_pos, out, lse = res
-        B, H, Sq, hd = q.shape
-        Skv = k.shape[2]
-        n_blocks = Skv // block_kv
-        qf = q          # stays bf16: cache-sized dots must be homogeneous
-        do = dout       # (see H1b) — f32 accumulation via preferred_element_type
         delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
                         axis=-1)                                  # (B,H,Sq)
-
-        def step(dq, idx):
-            kb = jax.lax.dynamic_slice_in_dim(k, idx * block_kv, block_kv,
-                                              axis=2)
-            vb = jax.lax.dynamic_slice_in_dim(v, idx * block_kv, block_kv,
-                                              axis=2)
-            pb = jax.lax.dynamic_slice_in_dim(kv_pos, idx * block_kv,
-                                              block_kv, axis=-1)
-            s = jnp.einsum("bhsd,bhtd->bhst", qf, kb,
-                           preferred_element_type=jnp.float32) * scale
-            vis = _mask_block(q_pos[:, None, :], pb[:, None, :],
-                              causal=causal, window=window)
-            p = jnp.where(vis, jnp.exp(s - lse[..., None]), 0.0)  # (B,H,Sq,t)
-            dv_b = jnp.einsum("bhst,bhsd->bhtd", p, do,
-                              preferred_element_type=jnp.float32)
-            dp = jnp.einsum("bhsd,bhtd->bhst", do, vb,
-                            preferred_element_type=jnp.float32)
-            ds = p * (dp - delta[..., None]) * scale
-            dk_b = jnp.einsum("bhst,bhsd->bhtd", ds, qf,
-                              preferred_element_type=jnp.float32)
-            dq = dq + jnp.einsum("bhst,bhtd->bhsd", ds.astype(k.dtype), kb,
-                                 preferred_element_type=jnp.float32)
-            return dq, (dk_b, dv_b)
-
-        dq0 = jnp.zeros((B, H, Sq, hd), jnp.float32)
-        dq, (dk_blocks, dv_blocks) = jax.lax.scan(step, dq0,
-                                                  jnp.arange(n_blocks))
-        dk = dk_blocks.transpose(1, 2, 0, 3, 4).reshape(B, H, Skv, hd)
-        dv = dv_blocks.transpose(1, 2, 0, 3, 4).reshape(B, H, Skv, hd)
-        zero_pos = lambda x: np.zeros(x.shape, dtype=jax.dtypes.float0)
+        dq, dk, dv = _bwd_scan(q, k, v, q_pos, kv_pos, lse, dout, delta,
+                               causal=causal, window=window,
+                               block_kv=block_kv, scale=scale)
         return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
-                zero_pos(q_pos), zero_pos(kv_pos))
+                *_zero_pos_grads(q_pos, kv_pos))
 
     attn.defvjp(fwd, bwd)
     return attn
+
+
+# ---------------------------------------------------------------------------
+# Ring context-parallel attention (per-shard core, runs inside shard_map)
+# ---------------------------------------------------------------------------
+
+def _merge_partials(m, l, acc, m_s, l_s, acc_s):
+    """Online-softmax merge of two unnormalized partials (decode-path math)."""
+    m_new = jnp.maximum(m, m_s)
+    c0 = jnp.exp(m - m_new)
+    c1 = jnp.exp(m_s - m_new)
+    return m_new, l * c0 + l_s * c1, acc * c0[..., None] + acc_s * c1[..., None]
+
+
+def _flash_partial_shard(q, k, v, q_pos, kv_pos, *, causal, window, scale,
+                         block_kv):
+    """One ring step's ``(m, l, acc)`` partial via the Pallas flash kernel.
+
+    A zigzag shard is two contiguous position runs, so the kernel — which
+    only knows scalar offsets, not position arrays — is called once per
+    (q-chunk, kv-chunk) pair with offsets read off the (rotated) position
+    arrays, and the four partials are online-merged. Assumes positions are
+    uniform across the batch (true for the model paths) and contiguous
+    within each half-shard (true for the zigzag layout). GQA repetition is
+    handled by the kernel's KV index map — unrepeated KV goes in.
+    """
+    from repro.kernels.flash.flash import flash_attention
+    interpret = jax.default_backend() != "tpu"
+    Sq, Skv = q.shape[2], k.shape[2]
+    cq, ckv = Sq // 2, Skv // 2
+    halves = []
+    for qs in (0, cq):
+        qc = q[:, :, qs:qs + cq]
+        state = None
+        for ks in (0, ckv):
+            acc_s, m_s, l_s = flash_attention(
+                qc, k[:, :, ks:ks + ckv], v[:, :, ks:ks + ckv],
+                q_offset=q_pos[0, qs], kv_offset=kv_pos[0, ks],
+                causal=causal, window=window, sm_scale=scale,
+                bq=_pick_block(cq, 128), bkv=_pick_block(ckv, block_kv),
+                interpret=interpret, return_partial=True)
+            state = (m_s, l_s, acc_s) if state is None else \
+                _merge_partials(*state, m_s, l_s, acc_s)
+        halves.append(state)
+    return tuple(jnp.concatenate([h[i] for h in halves], axis=2)
+                 for i in range(3))
+
+
+@functools.lru_cache(maxsize=None)
+def _ring_flat(axis_names: Tuple[str, ...], cp: int, rep: int, causal: bool,
+               window: int, block_kv: int, scale: float,
+               use_flash: bool = False):
+    """custom_vjp'd ring-CP attention over the ``axis_names`` atom tuple.
+
+    Per-shard contract (inside ``shard_map``): ``q`` is this rank's query
+    shard (flat heads), ``k``/``v`` the *grouped* KV shard (``Hkv`` heads —
+    only unrepeated KV travels the ring; ``rep`` expansion happens per ring
+    step, and the backward reduces ``dk``/``dv`` over the ``rep`` groups
+    before they board the ring). Positions are absolute, so the causal /
+    window mask is correct for any sequence layout — the zigzag permutation
+    only balances work, never changes results.
+
+    Forward: ``cp − 1`` next-neighbor ``ppermute`` rotations of
+    ``(k, v, kv_pos)``; each visiting shard contributes an unnormalized
+    ``(acc, m, l)`` partial merged by online-softmax rescaling.
+
+    Backward: a second ring pass. ``dq`` accumulates locally; ``dk``/``dv``
+    accumulators travel *with* the KV blocks and arrive back at the owning
+    rank after a full rotation (``cp`` steps ≡ identity).
+    """
+    from repro.compat import ring_permute
+
+    def expand(t):
+        return jnp.repeat(t, rep, axis=1) if rep > 1 else t
+
+    def fwd_math(q, k, v, q_pos, kv_pos):
+        B, H, Sq, hd = q.shape
+        block = _pick_block(k.shape[2], block_kv)
+        m = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, H, Sq), jnp.float32)
+        acc = jnp.zeros((B, H, Sq, hd), jnp.float32)
+        kc, vc, pc = k, v, kv_pos
+        for s in range(cp):
+            if s:
+                kc, vc, pc = (ring_permute(t, axis_names) for t in (kc, vc, pc))
+            if use_flash:
+                m_s, l_s, acc_s = _flash_partial_shard(
+                    q, kc, vc, q_pos, pc, causal=causal, window=window,
+                    scale=scale, block_kv=block)
+            else:
+                _, _, m_s, l_s, acc_s = _fwd_scan(
+                    q, expand(kc), expand(vc), q_pos, pc, causal=causal,
+                    window=window, block_kv=block, scale=scale)
+            m, l, acc = _merge_partials(m, l, acc, m_s, l_s, acc_s)
+        lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)),
+                        jnp.float32(1e30))
+        out = (acc / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype)
+        return out, lse
+
+    @jax.custom_vjp
+    def attn(q, k, v, q_pos, kv_pos):
+        out, _ = fwd_math(q, k, v, q_pos, kv_pos)
+        return out
+
+    def fwd(q, k, v, q_pos, kv_pos):
+        out, lse = fwd_math(q, k, v, q_pos, kv_pos)
+        return out, (q, k, v, q_pos, kv_pos, out, lse)
+
+    def bwd(res, dout):
+        q, k, v, q_pos, kv_pos, out, lse = res
+        B, Hkv = k.shape[:2]
+        block = _pick_block(k.shape[2], block_kv)
+        delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                        axis=-1)
+        dq = jnp.zeros(q.shape, jnp.float32)
+        kc, vc, pc = k, v, kv_pos
+        dkc = jnp.zeros(k.shape, jnp.float32)
+        dvc = jnp.zeros(v.shape, jnp.float32)
+        for s in range(cp):
+            if s:
+                kc, vc, pc, dkc, dvc = (
+                    ring_permute(t, axis_names) for t in (kc, vc, pc, dkc, dvc))
+            dq_s, dk_s, dv_s = _bwd_scan(
+                q, expand(kc), expand(vc), q_pos, pc, lse, dout, delta,
+                causal=causal, window=window, block_kv=block, scale=scale)
+            dq = dq + dq_s
+            if rep > 1:  # fold the repeated-head grads back onto Hkv groups
+                dk_s = dk_s.reshape((B, Hkv, rep) + dk_s.shape[2:]).sum(axis=2)
+                dv_s = dv_s.reshape((B, Hkv, rep) + dv_s.shape[2:]).sum(axis=2)
+            dkc = dkc + dk_s
+            dvc = dvc + dv_s
+        # The accumulators have rotated cp−1 steps: one more completes the
+        # cycle and lands each rank's KV gradient back on its owner.
+        dkc = ring_permute(dkc, axis_names)
+        dvc = ring_permute(dvc, axis_names)
+        return (dq.astype(q.dtype), dkc.astype(k.dtype), dvc.astype(v.dtype),
+                *_zero_pos_grads(q_pos, kv_pos))
+
+    attn.defvjp(fwd, bwd)
+    return attn
+
+
+def ring_attention(
+    q: Array, k: Array, v: Array,
+    q_pos: Array, kv_pos: Array,
+    *,
+    axis_names: Tuple[str, ...],
+    cp: int,
+    causal: bool = True,
+    window: int = 0,
+    block_kv: int = 1024,
+    sm_scale: Optional[float] = None,
+    use_flash: bool = False,
+) -> Array:
+    """Ring context-parallel attention over this rank's sequence shard.
+
+    Must be called inside ``shard_map`` with the sequence dim sharded over
+    ``axis_names`` (the CP atom tuple, flat row-major ring order — multi-atom
+    tuples like the ``pod_role="cp"`` fold included). Shapes per shard:
+    ``q: (B, H, S/cp, hd)``, ``k``/``v``: ``(B, Hkv, S/cp, hd)``,
+    positions absolute ``(B, S/cp)`` int32.
+
+    ``use_flash`` routes each ring step's partial through the Pallas flash
+    kernel (``return_partial``) instead of the jnp blockwise scan — forward
+    only; the backward ring always recomputes via the jnp flash-style scan.
+    """
+    H, hd = q.shape[1], q.shape[3]
+    rep = H // k.shape[1]
+    scale = sm_scale if sm_scale is not None else hd ** -0.5
+    fn = _ring_flat(tuple(axis_names), int(cp), int(rep), bool(causal),
+                    int(window), int(block_kv), float(scale), bool(use_flash))
+    return fn(q, k, v, q_pos.astype(jnp.int32), kv_pos.astype(jnp.int32))
 
 
 def blockwise_attention(

@@ -1,0 +1,293 @@
+"""Ring context parallelism: parity vs allgather-KV and cp=1, load-balanced
+zigzag layout, multi-atom CP rings (pod fold), ppermute shim, and the flash
+kernel's partial-return contract."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import _ring_permute_decomposed, ring_permute, shard_map
+from repro.configs.base import (ModelConfig, ParallelConfig,
+                                ParallelMappingSpec as PM)
+from repro.core.folding import (build_folded_mesh, causal_chunk_work,
+                                contiguous_chunks, cp_ring_axes,
+                                zigzag_chunks, zigzag_inverse_perm,
+                                zigzag_perm)
+from repro.models.attention import attention, cp_kv_stats, init_attention
+
+B, S, D = 2, 64, 64
+
+CFG_FLAT = ModelConfig(name="t-flat", family="dense", n_layers=1, d_model=D,
+                       n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=128,
+                       rope_theta=1e4)
+CFG_GQA = dataclasses.replace(CFG_FLAT, name="t-gqa", n_heads=8, n_kv_heads=2)
+
+
+def _fm(cp, mode, *, tp=1, pods=1, pod_role="dp"):
+    dp = 8 // (cp * tp * pods)
+    pc = ParallelConfig(attn=PM(dp=dp, inner=cp, tp=tp),
+                        moe=PM(dp=dp, inner=cp, tp=tp),
+                        pods=pods, pod_role=pod_role, cp_mode=mode)
+    return build_folded_mesh(pc)
+
+
+def _inputs(cfg, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    p = init_attention(ks[0], cfg)
+    x = jax.random.normal(ks[1], (B, S, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    return p, x, pos
+
+
+def _run(cfg, fm, p, x, pos, causal=True, window=0):
+    f = jax.jit(lambda p, x: attention(p, x, pos, cfg, fm, causal=causal,
+                                       window=window, block_kv=16))
+    return f(p, x)
+
+
+# ---------------------------------------------------------------------------
+# Forward / gradient parity sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg", [CFG_FLAT, CFG_GQA], ids=["flat", "gqa"])
+@pytest.mark.parametrize("causal", [True, False], ids=["causal", "bidir"])
+@pytest.mark.parametrize("cp", [1, 2, 4])
+def test_ring_matches_allgather_and_cp1(cfg, causal, cp):
+    p, x, pos = _inputs(cfg)
+    ref = _run(cfg, _fm(1, "allgather"), p, x, pos, causal=causal)
+    y_ag = _run(cfg, _fm(cp, "allgather"), p, x, pos, causal=causal)
+    y_ring = _run(cfg, _fm(cp, "ring"), p, x, pos, causal=causal)
+    np.testing.assert_allclose(y_ring, y_ag, atol=5e-6)
+    np.testing.assert_allclose(y_ring, ref, atol=5e-6)
+
+
+@pytest.mark.parametrize("cfg", [CFG_FLAT, CFG_GQA], ids=["flat", "gqa"])
+@pytest.mark.parametrize("cp", [2, 4])
+def test_ring_grads_match_allgather(cfg, cp):
+    p, x, pos = _inputs(cfg, seed=1)
+
+    def grads(fm):
+        def loss(p, x):
+            y = attention(p, x, pos, cfg, fm, causal=True, block_kv=16)
+            return jnp.mean(jnp.sin(y)) * 100.0
+        return jax.jit(jax.grad(loss, argnums=(0, 1)))(p, x)
+
+    g_ag = grads(_fm(cp, "allgather"))
+    g_ring = grads(_fm(cp, "ring"))
+    for a, b in zip(jax.tree.leaves(g_ag), jax.tree.leaves(g_ring)):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_ring_with_tp_and_sliding_window():
+    p, x, pos = _inputs(CFG_GQA, seed=2)
+    for window in (0, 32):
+        y_ag = _run(CFG_GQA, _fm(2, "allgather", tp=2), p, x, pos,
+                    window=window)
+        y_ring = _run(CFG_GQA, _fm(2, "ring", tp=2), p, x, pos, window=window)
+        np.testing.assert_allclose(y_ring, y_ag, atol=5e-6)
+
+
+def test_ring_multi_atom_cp_pod_fold():
+    """pod_role="cp" folds the pod atom into the CP tuple — the ring spans
+    ("pod", atom) and must still match allgather."""
+    p, x, pos = _inputs(CFG_GQA, seed=3)
+    fm_ring = _fm(2, "ring", tp=2, pods=2, pod_role="cp")
+    fm_ag = _fm(2, "allgather", tp=2, pods=2, pod_role="cp")
+    assert len(cp_ring_axes(fm_ring)) == 2 and fm_ring.cp == 4
+    y_ring = _run(CFG_GQA, fm_ring, p, x, pos)
+    y_ag = _run(CFG_GQA, fm_ag, p, x, pos)
+    np.testing.assert_allclose(y_ring, y_ag, atol=5e-6)
+
+
+def test_ring_mrope_positions():
+    """(B, S, 3) M-RoPE position streams permute/mask correctly."""
+    cfg = dataclasses.replace(CFG_FLAT, rope_kind="mrope")
+    p, x, pos = _inputs(cfg, seed=4)
+    pos3 = jnp.broadcast_to(pos[..., None], (B, S, 3))
+    f = lambda fm: jax.jit(lambda p, x: attention(p, x, pos3, cfg, fm,
+                                                  block_kv=16))(p, x)
+    np.testing.assert_allclose(f(_fm(2, "ring")), f(_fm(2, "allgather")),
+                               atol=5e-6)
+
+
+# ---------------------------------------------------------------------------
+# Load-balanced layout
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cp", [2, 4, 8])
+def test_zigzag_layout_balances_causal_work(cp):
+    n_chunks = 2 * cp
+    work = [causal_chunk_work(c, n_chunks) for c in zigzag_chunks(cp)]
+    assert len(set(work)) == 1, work            # every rank does equal work
+    assert work[0] == float(n_chunks)
+    naive = [causal_chunk_work(c, n_chunks) for c in contiguous_chunks(cp)]
+    assert len(set(naive)) == cp                # contiguous is imbalanced
+    assert sum(naive) == sum(work)              # same total work
+
+
+@pytest.mark.parametrize("cp", [1, 2, 4])
+def test_zigzag_perm_roundtrip(cp):
+    perm = zigzag_perm(S, cp)
+    inv = zigzag_inverse_perm(S, cp)
+    assert (perm[inv] == np.arange(S)).all()
+    assert (np.sort(perm) == np.arange(S)).all()
+    # rank r's contiguous shard is exactly chunks (r, 2cp-1-r)
+    c = S // (2 * cp)
+    for r, (a, b) in enumerate(zigzag_chunks(cp)):
+        shard = perm[r * 2 * c:(r + 1) * 2 * c]
+        expect = np.concatenate([np.arange(a * c, (a + 1) * c),
+                                 np.arange(b * c, (b + 1) * c)])
+        assert (shard == expect).all()
+
+
+def test_zigzag_perm_rejects_indivisible():
+    with pytest.raises(ValueError, match="2\\*cp"):
+        zigzag_perm(66, 4)
+
+
+def test_ring_rejects_indivisible_seq():
+    p, x, pos = _inputs(CFG_FLAT)
+    fm = _fm(4, "ring")
+    with pytest.raises(ValueError, match="2\\*cp"):   # 52 % (2*4) != 0
+        attention(p, x[:, :52], pos[:, :52], CFG_FLAT, fm, block_kv=16)
+
+
+# ---------------------------------------------------------------------------
+# ppermute shim + accounting
+# ---------------------------------------------------------------------------
+
+def test_ring_permute_decomposed_matches_native():
+    fm = _fm(2, "ring", tp=2, pods=2, pod_role="cp")   # 2-atom CP tuple
+    names = cp_ring_axes(fm)
+    v = jnp.arange(float(fm.cp))
+    run = lambda f: shard_map(f, mesh=fm.mesh, in_specs=P(names),
+                              out_specs=P(names))(v)
+    nat = run(lambda t: ring_permute(t, names))
+    dec = run(lambda t: _ring_permute_decomposed(t, names, 1))
+    np.testing.assert_array_equal(nat, dec)
+    np.testing.assert_array_equal(nat, np.roll(np.arange(4.0), 1))
+    back = run(lambda t: _ring_permute_decomposed(t, names, -1))
+    np.testing.assert_array_equal(back, np.roll(np.arange(4.0), -1))
+
+
+def test_cp_kv_stats_scale():
+    cfg = CFG_GQA
+    for cp in (2, 4, 8):
+        st = cp_kv_stats(cfg, 32768, 1, cp)
+        assert st["kv_bytes_allgather"] == pytest.approx(
+            st["kv_bytes_ring"] * cp)
+        assert st["ring_payload_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Flash kernel partial-return contract (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+def test_flash_partial_matches_blockwise_partial():
+    from repro.kernels.flash.flash import flash_attention
+    from repro.models.attn_core import blockwise_attention
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (1, 4, 64, 32))
+    k = jax.random.normal(ks[1], (1, 2, 64, 32))
+    v = jax.random.normal(ks[2], (1, 2, 64, 32))
+    qp = jnp.broadcast_to(jnp.arange(64, dtype=jnp.int32), (1, 64))
+    kp = jnp.broadcast_to(jnp.arange(64, dtype=jnp.int32), (1, 64))
+    acc, m, l = flash_attention(q, k, v, causal=True, interpret=True,
+                                bq=32, bkv=32, return_partial=True)
+    acc2, m2, l2 = blockwise_attention(q, k, v, qp, kp, causal=True,
+                                       block_kv=32, return_partial=True)
+    np.testing.assert_allclose(acc, acc2, atol=1e-6)
+    np.testing.assert_allclose(m, m2, atol=0)
+    np.testing.assert_allclose(l, l2, atol=1e-6)
+
+
+def test_ring_with_flash_partial_backend():
+    """use_pallas routes ring steps through the flash kernel's partial
+    return (interpret mode on CPU) — must match the jnp blockwise ring."""
+    p, x, pos = _inputs(CFG_GQA, seed=9)
+    pc = ParallelConfig(attn=PM(dp=2, inner=2, tp=2),
+                        moe=PM(dp=2, inner=2, tp=2),
+                        cp_mode="ring", use_pallas=True)
+    y_flash = _run(CFG_GQA, build_folded_mesh(pc), p, x, pos)
+    y_jnp = _run(CFG_GQA, _fm(2, "ring", tp=2), p, x, pos)
+    np.testing.assert_allclose(y_flash, y_jnp, atol=5e-6)
+
+
+def test_flash_partial_kv_offset_merge():
+    """Two half-KV partial flash calls with kv_offset merge to the full
+    result — the ring-step contract."""
+    from repro.kernels.flash.flash import flash_attention
+    from repro.models.attn_core import _merge_partials
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(ks[0], (1, 2, 64, 32))
+    k = jax.random.normal(ks[1], (1, 2, 64, 32))
+    v = jax.random.normal(ks[2], (1, 2, 64, 32))
+    full = flash_attention(q, k, v, causal=True, interpret=True, bq=32, bkv=32)
+    acc, m, l = flash_attention(q, k[:, :, :32], v[:, :, :32], causal=True,
+                                interpret=True, bq=32, bkv=32,
+                                return_partial=True)
+    a2, m2, l2 = flash_attention(q, k[:, :, 32:], v[:, :, 32:], kv_offset=32,
+                                 causal=True, interpret=True, bq=32, bkv=32,
+                                 return_partial=True)
+    m_g, l_g, acc_g = _merge_partials(m, l, acc, m2, l2, a2)
+    merged = acc_g / np.maximum(l_g[..., None], 1e-30)
+    np.testing.assert_allclose(merged, full, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# Config / mapping validation
+# ---------------------------------------------------------------------------
+
+def test_cp_mode_validated():
+    with pytest.raises(ValueError, match="cp_mode"):
+        ParallelConfig(cp_mode="butterfly")
+
+
+def test_mapping_table_validation_names_offender():
+    import repro.launch.mappings as mp
+    key = ("whisper-small", "train_4k")
+    good = mp._TABLE[key]
+    try:
+        mp._TABLE[key] = ((32, 1, 8), (32, 1, 8), 1)   # 12 heads % tp=8
+        with pytest.raises(ValueError) as ei:
+            mp._validate_table()
+        assert "whisper-small" in str(ei.value)
+        assert "n_heads 12" in str(ei.value)
+    finally:
+        mp._TABLE[key] = good
+
+
+# ---------------------------------------------------------------------------
+# CP × MoE interaction: ring CP must leave routing/dispatch unchanged
+# ---------------------------------------------------------------------------
+
+def test_ring_cp_preserves_moe_model_outputs():
+    """End-to-end: a small MoE model under ring vs allgather CP produces the
+    same logits and aux losses — the zigzag permutation is undone before the
+    router, so dispatch order (and deterministic routing) is unchanged."""
+    from repro.configs.base import MoEConfig
+    from repro.models.transformer import apply_lm, init_lm
+
+    cfg = ModelConfig(
+        name="t-moe", family="moe", n_layers=2, d_model=32, n_heads=4,
+        n_kv_heads=4, d_ff=64, vocab_size=64, rope_theta=1e4, dtype="float32",
+        moe=MoEConfig(n_experts=4, top_k=2, d_expert=32,
+                      deterministic_router=True))
+    params = init_lm(jax.random.PRNGKey(7), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(8), (2, S), 0, 64)
+    batch = {"tokens": tokens}
+
+    def run(mode):
+        fm = _fm(2, mode, tp=2)
+        logits, aux = jax.jit(
+            lambda p, b: apply_lm(p, b, cfg, fm, remat=False))(params, batch)
+        return logits, aux
+
+    y_ring, aux_ring = run("ring")
+    y_ag, aux_ag = run("allgather")
+    np.testing.assert_allclose(y_ring, y_ag, atol=2e-4)
+    for k in aux_ag:
+        np.testing.assert_allclose(aux_ring[k], aux_ag[k], atol=1e-5)
