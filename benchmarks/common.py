@@ -8,6 +8,7 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
+import json  # noqa: E402
 import time  # noqa: E402
 from typing import Callable, Optional  # noqa: E402
 
@@ -22,6 +23,23 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
     row = f"{name},{us_per_call:.1f},{derived}"
     _rows.append(row)
     print(row, flush=True)
+
+
+def write_snapshot(path: str, note: str = "") -> None:
+    """Dump every emitted row as a JSON trajectory snapshot.
+
+    ``tools/assert_no_worse.py --bench`` compares a later ``bench.csv``
+    against this file (micro/* wall-time rows, >25% regression budget).
+    """
+    rows = {}
+    for r in _rows:
+        name, us, derived = r.split(",", 2)
+        rows[name] = {"us_per_call": float(us), "derived": derived}
+    with open(path, "w") as f:
+        json.dump({"note": note, "tolerance": 1.25, "abs_floor_us": 250.0,
+                   "rows": rows}, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote benchmark snapshot: {path} ({len(rows)} rows)", flush=True)
 
 
 def timeit(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:

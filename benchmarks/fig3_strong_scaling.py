@@ -5,6 +5,12 @@ Mixtral-8x22B and Qwen2-57B-A14B, MCore (unfolded) vs Folding, worlds
 gradient accumulation; per-device batch shrinks as chips grow, so the
 communication terms climb — the modeled MFU decline mirrors the paper's
 measured decline. Worlds <256 use a sub-mesh; 512 is the 2-pod mesh.
+
+Each flat row is followed by pipeline rows: the same modeled step time
+inflated by the bubble *measured from the real 1F1B / interleaved
+schedule's per-rank timeline* (``core.pipeline.simulate_timeline``),
+reported against the closed form ``(pp-1)/(vpp·m+pp-1)`` — the paper's
+large-scale runs all use pp with interleaved virtual stages.
 """
 import dataclasses
 
@@ -14,12 +20,33 @@ from repro.configs.shapes import InputShape
 from repro.configs.base import ParallelConfig, ParallelMappingSpec as PM
 
 
+def _pp_variants(n_rep: int, nmicro: int):
+    """(pp, vpp) pairs dividing the model's *cycle repeats* (the unit the
+    stage partition actually splits) and the microbatch count."""
+    out = []
+    for pp in (8, 4, 2):
+        if n_rep % pp or nmicro % pp:
+            continue
+        lps = n_rep // pp
+        vpps = [1] + [v for v in range(2, lps + 1) if lps % v == 0][:1]
+        out = [(pp, v) for v in vpps]
+        break  # deepest feasible pp only — 1F1B and one interleaved variant
+    return out
+
+
 def main() -> None:
+    from repro.configs import get_config
+    from repro.core.pipeline import (bubble_fraction, simulate_timeline,
+                                     stage_partition_for)
     from repro.launch.dryrun import run_pair
+    from repro.models.transformer import model_cycle
 
     worlds = [64, 256] if QUICK else [64, 128, 256, 512]
     models = ["mixtral-8x22b"] if QUICK else ["mixtral-8x22b", "qwen2-57b-a14b"]
     for model in models:
+        cfg = get_config(model)
+        blocks, cycle = model_cycle(cfg)
+        n_rep = len(blocks) // len(cycle)
         for folded in (False, True):
             for world in worlds:
                 pods = 2 if world == 512 else 1
@@ -39,10 +66,24 @@ def main() -> None:
                          f"{world}", 0.0, f"error={type(e).__name__}:{e}"[:80])
                     continue
                 t = max(rec["compute_s"], rec["memory_s"], rec["collective_s"])
-                emit(f"fig3/{model}/{'folding' if folded else 'mcore'}/{world}",
-                     t * 1e6,
+                name = f"fig3/{model}/{'folding' if folded else 'mcore'}/{world}"
+                emit(name, t * 1e6,
                      f"mfu_bound={rec['mfu_bound'] or 0:.3f};"
                      f"dominant={rec['dominant']}")
+                for pp, vpp in _pp_variants(n_rep, nmicro):
+                    try:
+                        part = stage_partition_for(cfg, pp, vpp)
+                        tl = simulate_timeline(part, nmicro)
+                    except (ValueError, RuntimeError) as e:  # keep the sweep
+                        emit(f"{name}/pp{pp}v{vpp}", 0.0,
+                             f"error={type(e).__name__}:{e}"[:80])
+                        continue
+                    mfu = (rec["mfu_bound"] or 0) * (1 - tl.bubble)
+                    emit(f"{name}/pp{pp}v{vpp}", t * 1e6 / (1 - tl.bubble),
+                         f"bubble_sched={tl.bubble:.4f};"
+                         f"bubble_formula="
+                         f"{bubble_fraction(pp, nmicro, vpp):.4f};"
+                         f"m={nmicro};mfu_bound_pp={mfu:.3f}")
 
 
 if __name__ == "__main__":

@@ -4,7 +4,12 @@ Prints ``name,us_per_call,derived`` CSV. Set ``BENCH_QUICK=1`` for a
 reduced sweep. Dry-run-based rows report *modeled* step time (roofline
 max-term) since this container is CPU-only; micro/loss_parity rows are
 real executions.
+
+Set ``BENCH_SNAPSHOT=<path>`` to additionally write the rows as a JSON
+trajectory snapshot (e.g. ``BENCH_PR4.json``) for the
+``tools/assert_no_worse.py --bench`` regression gate.
 """
+import os
 import traceback
 
 from benchmarks import common  # noqa: F401  (sets XLA_FLAGS first)
@@ -23,6 +28,12 @@ def main() -> None:
         except Exception:  # noqa: BLE001 — keep the harness going
             traceback.print_exc()
             print(f"{mod.__name__},0.0,harness_error")
+
+    snap = os.environ.get("BENCH_SNAPSHOT")
+    if snap:
+        common.write_snapshot(
+            snap, note="BENCH_QUICK trajectory snapshot "
+                       f"(quick={int(common.QUICK)})")
 
 
 if __name__ == "__main__":

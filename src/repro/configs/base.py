@@ -226,6 +226,11 @@ class ParallelConfig:
     attn: ParallelMappingSpec = ParallelMappingSpec()
     moe: ParallelMappingSpec = ParallelMappingSpec()
     pp: int = 1
+    # Interleaved virtual pipeline stages per physical stage (Megatron's
+    # ``virtual_pipeline_model_parallel_size``): each stage owns ``vpp``
+    # non-contiguous layer chunks, shrinking the 1F1B bubble from
+    # (pp-1)/(m+pp-1) to (pp-1)/(vpp*m+pp-1) — see core/pipeline.py.
+    vpp: int = 1
     pods: int = 1                      # outer pod axis (multi-pod dry-run)
     pod_role: str = "dp"               # "dp": pods extend data parallelism; "pp": pipeline over pods
     microbatch: int = 0                # 0 = no gradient accumulation
@@ -249,6 +254,19 @@ class ParallelConfig:
         if self.cp_mode not in ("allgather", "ring"):
             raise ValueError(f"unknown cp_mode {self.cp_mode!r} "
                              "(options: 'allgather', 'ring')")
+        if self.vpp < 1:
+            raise ValueError(f"vpp must be >= 1, got {self.vpp}")
+        if self.vpp > 1 and self.pipeline_stages < 2:
+            raise ValueError(
+                f"interleaved virtual stages (vpp={self.vpp}) need a "
+                f"pipeline of >= 2 stages (pp={self.pp}, pods={self.pods}, "
+                f"pod_role={self.pod_role!r})")
+
+    @property
+    def pipeline_stages(self) -> int:
+        """Physical pipeline depth: ``pp``, extended by pods when
+        ``pod_role == "pp"`` folds the pod axis into the pipeline."""
+        return self.pp * (self.pods if self.pod_role == "pp" else 1)
 
     @property
     def world_size(self) -> int:

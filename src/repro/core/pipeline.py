@@ -1,0 +1,543 @@
+"""Pipeline parallelism over the folded mesh (the fifth dimension).
+
+Three pieces, layered so each is independently testable:
+
+* **Stage partitioning** (:class:`StagePartition`): the scan-stacked cycle
+  repeats of :mod:`repro.models.transformer` are split into ``pp·vpp``
+  contiguous *model chunks*; chunk ``c`` lives on pipeline stage
+  ``c % pp`` at virtual position ``c // pp`` (Megatron's interleaved
+  assignment — with ``vpp == 1`` this is the classic one-chunk-per-stage
+  layout).
+
+* **Schedules**: :func:`schedule_1f1b` (warmup / steady 1F1B / cooldown)
+  and :func:`schedule_interleaved` (Megatron's virtual-stage order)
+  produce per-stage instruction lists of :class:`Op`;
+  :func:`simulate_timeline` places them on a per-rank timeline respecting
+  cross-stage dependencies — deadlock is an error, and the measured bubble
+  fraction falls out of the makespan (vs. the closed form
+  :func:`bubble_fraction`).
+
+* **Executor** (:func:`make_pipeline_grads`): runs the merged schedule at
+  trace time with chunk-level ``jax.vjp``.  Forward activations travel
+  stage→stage through :func:`pipeline_send` — a microbatch-indexed
+  ``lax.ppermute`` over the folded mesh's ``pp`` atom tuple (including the
+  ``pod`` atom under ``pod_role="pp"``); its transpose is the backward
+  send.  Because activations are replicated over the ``pp`` mesh axis in
+  the SPMD program, the permute is numerically the identity — the grads
+  and loss are bitwise-comparable to the ``pp=1`` path — while the
+  collective structure (sends, per-stage op order, in-flight residency)
+  is exactly the 1F1B schedule's.
+
+See docs/folding.md §5 for the timeline diagrams.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat import ring_permute, shard_map
+from repro.configs.base import ModelConfig
+from repro.core.folding import FoldedMesh
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Stage partitioning
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StagePartition:
+    """Partition of ``n_rep`` stacked cycle repeats into pp·vpp chunks.
+
+    >>> p = StagePartition(pp=2, vpp=2, n_rep=8)
+    >>> p.n_chunks, p.rep_per_chunk
+    (4, 2)
+    >>> [p.owner(c) for c in range(4)]      # interleaved: chunk c on stage c%pp
+    [0, 1, 0, 1]
+    >>> p.chunks_of(0)                      # stage 0 owns virtual chunks 0 and 2
+    [0, 2]
+    >>> p.bounds(2)                         # chunk 2 = repeats [4, 6)
+    (4, 2)
+    """
+
+    pp: int
+    vpp: int
+    n_rep: int
+
+    def __post_init__(self):
+        if self.pp < 1 or self.vpp < 1:
+            raise ValueError(f"pp={self.pp}, vpp={self.vpp} must be >= 1")
+        if self.vpp > 1 and self.pp < 2:
+            raise ValueError(
+                f"interleaved virtual stages (vpp={self.vpp}) require pp >= 2")
+        if self.n_rep % (self.pp * self.vpp):
+            raise ValueError(
+                f"cannot partition {self.n_rep} layer-cycle repeats into "
+                f"pp*vpp = {self.pp}*{self.vpp} = {self.pp * self.vpp} equal "
+                f"stage chunks (layers % (pp*vpp) != 0)")
+
+    @property
+    def n_chunks(self) -> int:
+        return self.pp * self.vpp
+
+    @property
+    def rep_per_chunk(self) -> int:
+        return self.n_rep // self.n_chunks
+
+    def owner(self, chunk: int) -> int:
+        return chunk % self.pp
+
+    def virtual(self, chunk: int) -> int:
+        return chunk // self.pp
+
+    def bounds(self, chunk: int) -> Tuple[int, int]:
+        """(start, size) of ``chunk`` in stacked-repeat coordinates."""
+        return chunk * self.rep_per_chunk, self.rep_per_chunk
+
+    def chunks_of(self, stage: int) -> List[int]:
+        return [v * self.pp + stage for v in range(self.vpp)]
+
+
+def stage_partition_for(cfg: ModelConfig, pp: int, vpp: int) -> StagePartition:
+    """Build the partition for a model, rejecting unsupported families."""
+    from repro.models.transformer import model_cycle
+    if cfg.shared_attention_every:
+        raise ValueError(
+            "pipeline parallelism does not support shared-attention models "
+            f"(shared block would need replication on every stage): {cfg.name}")
+    if cfg.is_encoder_decoder:
+        raise ValueError(
+            f"pipeline parallelism does not support encoder-decoder models "
+            f"yet: {cfg.name}")
+    blocks, cycle = model_cycle(cfg)
+    n_rep = len(blocks) // len(cycle)
+    try:
+        return StagePartition(pp=pp, vpp=vpp, n_rep=n_rep)
+    except ValueError as e:
+        raise ValueError(
+            f"{cfg.name}: {e} (n_layers={cfg.n_layers}, cycle={cycle})"
+        ) from None
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+class Op(NamedTuple):
+    """One schedule instruction: kind 'F' or 'B' of ``mb`` on model ``chunk``."""
+    kind: str
+    mb: int
+    chunk: int
+
+
+def schedule_1f1b(pp: int, n_micro: int) -> List[List[Op]]:
+    """Classic 1F1B: per-stage op lists (warmup / steady / cooldown).
+
+    Stage ``s`` runs ``pp - s - 1`` warmup forwards, then alternates
+    F/B (steady 1F1B), then drains the remaining backwards. At most
+    ``pp - s`` microbatches are ever in flight on stage ``s``.
+
+    >>> [''.join(op.kind for op in ops) for ops in schedule_1f1b(2, 4)]
+    ['FFBFBFBB', 'FBFBFBFB']
+    >>> max_in_flight(schedule_1f1b(4, 8))
+    4
+    """
+    out: List[List[Op]] = []
+    for s in range(pp):
+        warmup = min(pp - s - 1, n_micro)
+        ops = [Op("F", i, s) for i in range(warmup)]
+        for i in range(n_micro - warmup):
+            ops.append(Op("F", warmup + i, s))
+            ops.append(Op("B", i, s))
+        for i in range(n_micro - warmup, n_micro):
+            ops.append(Op("B", i, s))
+        out.append(ops)
+    return out
+
+
+def schedule_interleaved(pp: int, vpp: int, n_micro: int) -> List[List[Op]]:
+    """Megatron's interleaved virtual-stage schedule.
+
+    Each stage owns ``vpp`` model chunks and iterates microbatches in
+    groups of ``pp``; iteration ``i`` of the forward sequence touches
+    virtual chunk ``(i % (pp·vpp)) // pp`` with microbatch
+    ``(i // (pp·vpp))·pp + i % pp``. Warmup length is
+    ``2·(pp - s - 1) + (vpp - 1)·pp`` (all-forward when ``n_micro == pp``),
+    then steady 1F1B over iteration indices, then cooldown.
+
+    Requires ``n_micro % pp == 0`` (Megatron's constraint).
+
+    >>> ops = schedule_interleaved(2, 2, 2)
+    >>> [''.join(op.kind for op in s) for s in ops]
+    ['FFFFBBBB', 'FFFFBBBB']
+    >>> ops[0][:2]                # stage 0 warms up chunk 0, mbs 0..1
+    [Op(kind='F', mb=0, chunk=0), Op(kind='F', mb=1, chunk=0)]
+    >>> ops[0][2].chunk           # ... then its second virtual chunk (2)
+    2
+    """
+    if vpp == 1:
+        return schedule_1f1b(pp, n_micro)
+    if n_micro % pp:
+        raise ValueError(
+            f"interleaved schedule requires microbatches % pp == 0, got "
+            f"n_micro={n_micro}, pp={pp}")
+    group = pp * vpp
+    total = n_micro * vpp
+
+    def fwd_chunk(s: int, it: int) -> int:
+        return ((it % group) // pp) * pp + s
+
+    def bwd_chunk(s: int, it: int) -> int:
+        return (vpp - 1 - (it % group) // pp) * pp + s
+
+    def mb_of(it: int) -> int:
+        return (it // group) * pp + it % pp
+
+    out: List[List[Op]] = []
+    for s in range(pp):
+        if n_micro == pp:
+            warmup = total
+        else:
+            warmup = min(total, 2 * (pp - s - 1) + (vpp - 1) * pp)
+        ops = [Op("F", mb_of(i), fwd_chunk(s, i)) for i in range(warmup)]
+        for j in range(total - warmup):
+            ops.append(Op("F", mb_of(warmup + j), fwd_chunk(s, warmup + j)))
+            ops.append(Op("B", mb_of(j), bwd_chunk(s, j)))
+        for j in range(total - warmup, total):
+            ops.append(Op("B", mb_of(j), bwd_chunk(s, j)))
+        out.append(ops)
+    return out
+
+
+def schedule(part: StagePartition, n_micro: int) -> List[List[Op]]:
+    """Per-stage schedule for a partition (1F1B, interleaved when vpp>1).
+
+    The ``chunk`` fields are *model* chunk ids (``virtual·pp + stage``) —
+    for vpp == 1 the model chunk id equals the stage id, which is exactly
+    how :func:`schedule_1f1b` labels its ops.
+    """
+    if part.vpp == 1:
+        return schedule_1f1b(part.pp, n_micro)
+    return schedule_interleaved(part.pp, part.vpp, n_micro)
+
+
+def max_in_flight(schedules: Sequence[Sequence[Op]]) -> int:
+    """Max per-stage count of microbatch-chunks forwarded but not yet
+    backwarded — the activation-stash residency bound (≤ pp for 1F1B)."""
+    worst = 0
+    for ops in schedules:
+        live, peak = 0, 0
+        for op in ops:
+            live += 1 if op.kind == "F" else -1
+            peak = max(peak, live)
+        worst = max(worst, peak)
+    return worst
+
+
+# ---------------------------------------------------------------------------
+# Timeline simulation (per-rank schedule placement + bubble accounting)
+# ---------------------------------------------------------------------------
+
+class Placed(NamedTuple):
+    op: Op
+    stage: int
+    start: float
+    end: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Timeline:
+    """Simulated per-rank timeline of a schedule."""
+    placed: Tuple[Placed, ...]        # sorted by (start, stage)
+    makespan: float
+    bubble: float                     # measured bubble fraction
+    per_stage_busy: Tuple[float, ...]
+    max_in_flight: int
+
+
+def bubble_fraction(pp: int, n_micro: int, vpp: int = 1) -> float:
+    """Closed-form pipeline bubble fraction.
+
+    Classic 1F1B wastes ``pp - 1`` slots of warmup+cooldown against
+    ``n_micro`` slots of work; interleaving divides the bubble by ``vpp``:
+
+    >>> bubble_fraction(4, 12)
+    0.2
+    >>> bubble_fraction(3, 3, vpp=2)         # (pp-1)/(vpp*m + pp-1)
+    0.25
+    >>> bubble_fraction(1, 8)
+    0.0
+    """
+    if pp <= 1:
+        return 0.0
+    return (pp - 1) / (vpp * n_micro + pp - 1)
+
+
+def simulate_timeline(part: StagePartition, n_micro: int,
+                      f_cost: float = 1.0, b_cost: float = 2.0,
+                      send_cost: float = 0.0) -> Timeline:
+    """Place the schedule on a per-rank timeline, respecting dependencies.
+
+    Per-stage op order is fixed by the schedule; an op starts when its
+    stage is free AND its producer finished (+``send_cost``):
+
+    * ``F(mb, c)`` needs ``F(mb, c-1)`` (on chunk ``c-1``'s owner stage);
+    * ``B(mb, c)`` needs ``B(mb, c+1)``, or ``F(mb, last)`` for the last
+      chunk (loss is computed on the final stage).
+
+    Chunk costs are ``f_cost/vpp`` / ``b_cost/vpp`` (each chunk holds
+    ``1/vpp`` of the stage's layers). A schedule whose order cannot
+    satisfy its dependencies deadlocks → ``RuntimeError``.
+
+    The measured 1F1B bubble equals the closed form:
+
+    >>> part = StagePartition(pp=4, vpp=1, n_rep=4)
+    >>> t = simulate_timeline(part, n_micro=12)
+    >>> abs(t.bubble - bubble_fraction(4, 12)) < 1e-12
+    True
+    >>> t.max_in_flight
+    4
+    """
+    scheds = schedule(part, n_micro)
+    fc, bc = f_cost / part.vpp, b_cost / part.vpp
+    done: Dict[Tuple[str, int, int], float] = {}
+    heads = [0] * part.pp
+    free = [0.0] * part.pp
+    placed: List[Placed] = []
+    last = part.n_chunks - 1
+    n_total = sum(len(s) for s in scheds)
+
+    while len(placed) < n_total:
+        progressed = False
+        for s in range(part.pp):
+            while heads[s] < len(scheds[s]):
+                op = scheds[s][heads[s]]
+                if op.kind == "F":
+                    dep = None if op.chunk == 0 else ("F", op.mb, op.chunk - 1)
+                else:
+                    dep = (("F", op.mb, last) if op.chunk == last
+                           else ("B", op.mb, op.chunk + 1))
+                if dep is not None and dep not in done:
+                    break
+                t0 = free[s]
+                if dep is not None:
+                    t0 = max(t0, done[dep] + send_cost)
+                t1 = t0 + (fc if op.kind == "F" else bc)
+                done[(op.kind, op.mb, op.chunk)] = t1
+                placed.append(Placed(op, s, t0, t1))
+                free[s] = t1
+                heads[s] += 1
+                progressed = True
+        if not progressed:
+            stuck = [(s, scheds[s][heads[s]]) for s in range(part.pp)
+                     if heads[s] < len(scheds[s])]
+            raise RuntimeError(f"schedule deadlock; blocked heads: {stuck}")
+
+    makespan = max(p.end for p in placed)
+    busy = [0.0] * part.pp
+    for p in placed:
+        busy[p.stage] += p.end - p.start
+    ideal = n_micro * (f_cost + b_cost)          # per-stage useful work
+    placed.sort(key=lambda p: (p.start, p.stage))
+    return Timeline(placed=tuple(placed), makespan=makespan,
+                    bubble=(makespan - ideal) / makespan if makespan else 0.0,
+                    per_stage_busy=tuple(busy),
+                    max_in_flight=max_in_flight(scheds))
+
+
+def merged_order(part: StagePartition, n_micro: int) -> List[Op]:
+    """Single dependency-respecting trace order of all ops.
+
+    The executor unrolls this order at trace time; sorting by simulated
+    start tick guarantees every producer precedes its consumers.
+    """
+    return [p.op for p in simulate_timeline(part, n_micro).placed]
+
+
+# ---------------------------------------------------------------------------
+# Activation sends over the pp mesh axis
+# ---------------------------------------------------------------------------
+
+def pipeline_axes(fm: FoldedMesh) -> Tuple[str, ...]:
+    """Atom tuple forming the pipeline ring — ``("pp",)``, or
+    ``("pod",)`` / ``("pod", "pp")`` when ``pod_role == "pp"`` folds the
+    pod axis into the pipeline (stages spanning pods)."""
+    return fm.axis("attn", "pp")
+
+
+def pipeline_degree(fm: FoldedMesh) -> int:
+    """Number of pipeline stages realized by the folded mesh."""
+    return fm.size("attn", "pp")
+
+
+def pipeline_send(x: Array, fm: FoldedMesh, shift: int = 1) -> Array:
+    """Send an activation one stage forward around the pp ring.
+
+    A ``lax.ppermute`` over the (possibly multi-atom) pipeline tuple via
+    ``compat.ring_permute`` — its transpose (the backward send) is emitted
+    automatically by AD. The activation is replicated over the pp axis in
+    the SPMD program, so the permute is numerically the identity; what it
+    carries is the *structure* of the stage-to-stage transfer (and, on a
+    stage-partitioned runtime, the real P2P).
+    """
+    axes = pipeline_axes(fm)
+    if not axes:
+        return x
+    spec = fm.spec("attn", "dp", ("cp", "tp"), None)
+    fn = shard_map(lambda t: ring_permute(t, axes if len(axes) > 1 else axes[0],
+                                          shift),
+                   mesh=fm.mesh, in_specs=(spec,), out_specs=spec)
+    return fn(x)
+
+
+# ---------------------------------------------------------------------------
+# Executor: 1F1B / interleaved at trace time with chunk-level vjp
+# ---------------------------------------------------------------------------
+
+def _acc(acc, g):
+    """fp32 accumulate in completion order (matches the pp=1 scan)."""
+    cast = jax.tree.map(lambda a: a.astype(jnp.float32), g)
+    return cast if acc is None else jax.tree.map(jnp.add, acc, cast)
+
+
+def make_pipeline_grads(cfg: ModelConfig, fm: FoldedMesh, part: StagePartition,
+                        n_micro: int, *, remat: bool = True):
+    """Build ``pipeline_grads(cparams, batch) -> (grad_sum, metric_sum)``.
+
+    Executes the merged 1F1B/interleaved schedule at trace time:
+    forwards stash chunk-level ``jax.vjp`` residuals (at most the
+    schedule's in-flight bound per stage), backwards pop them in schedule
+    order, accumulating fp32 grads per chunk. The caller divides both
+    sums by ``n_micro`` — identical post-processing to the pp=1
+    microbatch scan, so losses and grads are directly comparable.
+    """
+    from repro.models.common import softmax_cross_entropy
+    from repro.models.transformer import (_run_stack, lm_embed, lm_head_logits,
+                                          lm_positions, model_cycle)
+    from repro.train.loop import assemble_loss_metrics, aux_loss_coefs
+
+    _, cycle = model_cycle(cfg)
+    order = merged_order(part, n_micro)
+    n_chunks, last = part.n_chunks, part.n_chunks - 1
+    n_moe = sum(1 for b in cfg.blocks() if b == "moe")
+
+    # Cotangents for the aux outputs of every chunk: the total loss is
+    # linear in them (loss = ce + Σ_k coef_k · aux_k / n_moe), so their
+    # pullback coefficient is a constant per key — derived from the same
+    # ``aux_loss_coefs`` the pp=1 loss_fn uses, so a new aux term reaches
+    # both paths.
+    aux_cot = {k: jnp.float32(c / n_moe if n_moe else 0.0)
+               for k, c in aux_loss_coefs(cfg).items()}
+
+    def chunk_slice(tree, c):
+        lo, sz = part.bounds(c)
+        return jax.tree.map(
+            lambda a: jax.lax.slice_in_dim(a, lo, lo + sz, axis=0), tree)
+
+    def chunk_fwd(c, p_c, h, pos, ctx):
+        if c > 0:
+            h = pipeline_send(h, fm)  # recv from the previous stage
+        return _run_stack(p_c, cycle, h, pos, cfg, fm, ctx, remat=remat)
+
+    def head_loss(hp, h, labels):
+        logits = lm_head_logits(hp, h, cfg, fm)
+        ce, n_tok = softmax_cross_entropy(logits, labels)
+        return ce, n_tok.astype(jnp.float32)
+
+    def head_subset(cparams):
+        sub = {"final_norm": cparams["final_norm"]}
+        if "lm_head" in cparams:
+            sub["lm_head"] = cparams["lm_head"]
+        else:
+            sub["embed"] = cparams["embed"]
+        return sub
+
+    def pipeline_grads(cparams, batch):
+        B = batch["tokens"].shape[0]
+        assert B % n_micro == 0, (B, n_micro)
+        mb = B // n_micro
+
+        def slice_mb(i):
+            return jax.tree.map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, i * mb, mb, axis=0),
+                batch)
+
+        mbs = [slice_mb(i) for i in range(n_micro)]
+        poss = [lm_positions(m, cfg) for m in mbs]
+        ctx: Dict[str, Any] = {}
+
+        stash: Dict[Tuple[int, int], Any] = {}    # (mb, chunk) -> chunk vjp
+        h_out: Dict[Tuple[int, int], Array] = {}  # forward wire
+        d_wire: Dict[Tuple[int, int], Array] = {} # backward wire
+        emb_vjps: Dict[int, Any] = {}
+        head_vjps: Dict[int, Any] = {}
+        aux_sum: Dict[int, Dict[str, Array]] = {}
+        g_chunks: List[Any] = [None] * n_chunks
+        g_embed = g_head = None
+        m_sum: Optional[Dict[str, Array]] = None
+
+        emb_sub = {"embed": cparams["embed"]}
+
+        for op in order:
+            i, c = op.mb, op.chunk
+            if op.kind == "F":
+                if c == 0:
+                    x0, vjp_e = jax.vjp(
+                        lambda p, _i=i: lm_embed(p, mbs[_i], poss[_i], cfg, fm),
+                        emb_sub)
+                    emb_vjps[i] = vjp_e
+                    h_in = x0
+                else:
+                    h_in = h_out.pop((i, c - 1))
+                (h, aux), vjp_c = jax.vjp(
+                    lambda p, t, _c=c, _i=i: chunk_fwd(_c, p, t, poss[_i], ctx),
+                    chunk_slice(cparams["cycle"], c), h_in)
+                stash[(i, c)] = vjp_c
+                h_out[(i, c)] = h
+                aux_sum[i] = (aux if i not in aux_sum else
+                              {k: aux_sum[i][k] + aux[k] for k in aux})
+                if c == last:
+                    (ce, n_tok), vjp_h = jax.vjp(
+                        lambda hp, t, _i=i: head_loss(hp, t, mbs[_i]["labels"]),
+                        head_subset(cparams), h_out.pop((i, c)))
+                    head_vjps[i] = vjp_h
+                    a = {k: (v / n_moe if n_moe else v)
+                         for k, v in aux_sum.pop(i).items()}
+                    _, metrics = assemble_loss_metrics(ce, n_tok, a, cfg)
+                    m_sum = metrics if m_sum is None else \
+                        {k: m_sum[k] + metrics[k] for k in m_sum}
+            else:  # backward
+                if c == last:
+                    dhp, dh = head_vjps.pop(i)((jnp.float32(1.0),
+                                                jnp.float32(0.0)))
+                    g_head = _acc(g_head, dhp)
+                else:
+                    dh = d_wire.pop((i, c))
+                dp_c, dh_prev = stash.pop((i, c))((dh, dict(aux_cot)))
+                g_chunks[c] = _acc(g_chunks[c], dp_c)
+                if c == 0:
+                    (demb,) = emb_vjps.pop(i)(dh_prev)
+                    g_embed = _acc(g_embed, demb)
+                else:
+                    d_wire[(i, c - 1)] = dh_prev
+
+        assert not stash and not d_wire and not head_vjps and not emb_vjps, \
+            "schedule left dangling residuals (incomplete backward)"
+
+        g_cycle = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                               *g_chunks)
+        grads: Dict[str, Any] = {"cycle": g_cycle}
+        grads["embed"] = g_embed["embed"]
+        grads["final_norm"] = g_head["final_norm"]
+        if "lm_head" in cparams:
+            grads["lm_head"] = g_head["lm_head"]
+        else:  # tied embeddings: prologue + head contributions add
+            grads["embed"] = jax.tree.map(jnp.add, grads["embed"],
+                                          g_head["embed"])
+        return grads, m_sum
+
+    return pipeline_grads

@@ -81,9 +81,17 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
                     for k, v in batch_sds.items()}
         step = make_train_step(cfg, fm, donate=True)
         lowered = step.lower(params_in, opt_in, batch_in)
-        # microbatch outer scan (nmicro-1 trips; first is unrolled), layers inner
-        depth_factors = [max(nmicro - 1, 1), float(n_rep)] if nmicro > 1 \
-            else [float(n_rep)]
+        if pcfg.pipeline_stages > 1 or pcfg.vpp > 1:
+            # The 1F1B executor unrolls every (microbatch × chunk) op in
+            # the HLO; only the per-chunk repeat scan needs a depth factor.
+            from repro.core.pipeline import stage_partition_for
+            part = stage_partition_for(cfg, pcfg.pipeline_stages, pcfg.vpp)
+            depth_factors = [float(part.rep_per_chunk)]
+        elif nmicro > 1:
+            # microbatch outer scan (nmicro-1 trips; first unrolled), layers inner
+            depth_factors = [max(nmicro - 1, 1), float(n_rep)]
+        else:
+            depth_factors = [float(n_rep)]
     elif shape.kind == "prefill":
         batch_sds = make_batch_specs(cfg, shape.seq_len, shape.global_batch)
         batch_sds.pop("labels")
@@ -116,10 +124,36 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
                 pcfg=dict(attn=(pcfg.attn.dp, pcfg.attn.inner, pcfg.attn.tp),
                           moe=(pcfg.moe.dp, pcfg.moe.inner, pcfg.moe.tp),
                           pods=pcfg.pods, pod_role=pcfg.pod_role,
-                          microbatch=pcfg.microbatch),
+                          microbatch=pcfg.microbatch,
+                          pp=pcfg.pp, vpp=pcfg.vpp,
+                          pipeline_stages=pcfg.pipeline_stages),
                 depth_factors=depth_factors,
                 mesh=fm.describe())
     return lowered, meta, cfg, shape
+
+
+def pipeline_report(cfg, stages: int, vpp: int, microbatch: int) -> Dict:
+    """Bubble accounting from the *real* schedule's per-rank timeline.
+
+    Not an analytic estimate: the 1F1B/interleaved instruction lists are
+    placed on a simulated per-rank timeline (``core.pipeline``), and the
+    bubble is measured from the resulting makespan; the closed form
+    ``(pp-1)/(vpp·m+pp-1)`` is reported alongside for comparison.
+    """
+    from repro.core.pipeline import (bubble_fraction, simulate_timeline,
+                                     stage_partition_for)
+    if stages <= 1 and vpp <= 1:
+        return {}
+    m = max(microbatch, 1)
+    part = stage_partition_for(cfg, stages, vpp)
+    t = simulate_timeline(part, m)
+    return dict(
+        pp_stages=stages, vpp=vpp, pp_microbatches=m,
+        pp_bubble_sched=round(t.bubble, 4),
+        pp_bubble_formula=round(bubble_fraction(stages, m, vpp), 4),
+        pp_max_in_flight=t.max_in_flight,
+        pp_makespan_ticks=t.makespan,
+    )
 
 
 def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
@@ -165,6 +199,15 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
                             if r.flops_per_device else None),
         mfu_bound=r.mfu_bound,
     )
+    if shape.kind == "train":
+        pc = meta["pcfg"]
+        pipe = pipeline_report(cfg, pc["pipeline_stages"], pc["vpp"],
+                               pc["microbatch"])
+        if pipe:
+            pipe["mfu_bound_pp"] = (round(r.mfu_bound *
+                                          (1 - pipe["pp_bubble_sched"]), 4)
+                                    if r.mfu_bound else None)
+            rec.update(pipe)
     if verbose:
         print(f"[{arch} × {shape_name} × "
               f"{'2x16x16' if multi_pod else '16x16'}] "

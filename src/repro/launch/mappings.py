@@ -129,10 +129,39 @@ def model_for(arch: str, shape_name: str) -> ModelConfig:
     return cfg
 
 
+def validate_pipeline(arch: str, pcfg: ParallelConfig) -> ParallelConfig:
+    """Check the pp/vpp stage partition divides the arch's layer stack.
+
+    ``n_layers`` must split into ``pp·vpp`` equal chunks of whole
+    layer-cycle repeats (``layers % (pp·vpp) == 0`` for cycle length 1);
+    the 1F1B schedule additionally needs ``microbatch % pipeline_stages``
+    for the interleaved variant — both raise here naming the arch instead
+    of deep inside lowering.
+    """
+    if pcfg.pipeline_stages > 1 or pcfg.vpp > 1:
+        from repro.core.pipeline import stage_partition_for
+        try:
+            stage_partition_for(get_config(arch),
+                                pcfg.pipeline_stages, pcfg.vpp)
+        except ValueError as e:
+            raise ValueError(f"invalid pipeline mapping for {arch!r}: {e}") \
+                from None
+        # microbatch=0 means no accumulation → the schedule runs m=1,
+        # which the interleaved variant rejects; validate that here too.
+        m = max(pcfg.microbatch, 1)
+        if pcfg.vpp > 1 and m % pcfg.pipeline_stages:
+            raise ValueError(
+                f"invalid pipeline mapping for {arch!r}: interleaved "
+                f"schedule needs microbatch % pp == 0 "
+                f"(microbatch={m}, pp={pcfg.pipeline_stages})")
+    return pcfg
+
+
 def pcfg_for(arch: str, shape_name: str, *, multi_pod: bool = False,
              ep_override: Optional[Tuple[int, int, int]] = None,
              attn_override: Optional[Tuple[int, int, int]] = None,
-             microbatch: Optional[int] = None) -> ParallelConfig:
+             microbatch: Optional[int] = None,
+             pp: int = 1, vpp: int = 1) -> ParallelConfig:
     key = (arch, shape_name)
     if key not in _TABLE:
         raise KeyError(f"no mapping for {key}")
@@ -154,14 +183,25 @@ def pcfg_for(arch: str, shape_name: str, *, multi_pod: bool = False,
             acp *= 2
         else:
             pod_role = "cp"
-    return ParallelConfig(
+    if pp > 1:
+        # Pipeline stages subdivide the per-stage device block: keep the
+        # world fixed by pulling the pp factor out of DP on both sides.
+        if adp % pp or edp % pp:
+            raise ValueError(
+                f"({arch!r}, {shape_name!r}): cannot carve pp={pp} out of "
+                f"dp={adp}/edp={edp}")
+        adp //= pp
+        edp //= pp
+    return validate_pipeline(arch, ParallelConfig(
         attn=PM(dp=adp, inner=acp, tp=atp),
         moe=PM(dp=edp, inner=ep, tp=etp),
+        pp=pp,
+        vpp=vpp,
         pods=2 if multi_pod else 1,
         pod_role=pod_role,
         microbatch=nmicro,
         fsdp=True,
-    )
+    ))
 
 
 def unfolded_pcfg_for(arch: str, shape_name: str, **kw) -> ParallelConfig:

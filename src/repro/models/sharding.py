@@ -108,18 +108,71 @@ def _safe_spec(spec: P, shape, fm: FoldedMesh) -> P:
     return P(*out)
 
 
+def _stack_pp_spec(spec: P, shape, path: str, fm: FoldedMesh) -> P:
+    """Shard the layer-stacked leading dim of decoder cycle params over the
+    pipeline atoms: each pp stage stores only its own chunk of layers (the
+    pipeline's parameter-memory win). Chunk ``c`` of the partition is the
+    contiguous repeat block ``[c·rpc, (c+1)·rpc)``, so a contiguous shard
+    over the pp atoms is exactly the vpp=1 stage assignment (with vpp>1 the
+    storage is block-contiguous while ownership interleaves — GSPMD routes
+    the gather; see docs/folding.md §5). Encoder stacks are not pipeline
+    stages and stay unsharded."""
+    import math
+    pp_atoms = fm.axis("attn", "pp")
+    if not pp_atoms or "cycle/" not in path or path.startswith("encoder"):
+        return spec
+    entries = list(tuple(spec) + (None,) * (len(shape) - len(spec)))
+    if not entries or entries[0] is not None:
+        return spec
+    pp_size = math.prod(fm.mesh.shape[a] for a in pp_atoms)
+    if shape[0] % pp_size:
+        return spec
+    entries[0] = pp_atoms
+    return P(*entries)
+
+
 def param_specs(params, fm: FoldedMesh, mode: str = "store"):
     """Pytree of PartitionSpec mirroring ``params`` (arrays or ShapeDtypeStruct)."""
     def one(path, leaf):
         p = _path_str(path)
         spec = spec_for_path(p, len(_shape_of(leaf)), fm, mode)
-        return _safe_spec(spec, _shape_of(leaf), fm)
+        spec = _safe_spec(spec, _shape_of(leaf), fm)
+        return _stack_pp_spec(spec, _shape_of(leaf), p, fm)
     return jax.tree_util.tree_map_with_path(one, params)
 
 
 def param_shardings(params, fm: FoldedMesh, mode: str = "store"):
     return jax.tree.map(lambda s: NamedSharding(fm.mesh, s),
                         param_specs(params, fm, mode))
+
+
+def strip_stack_pp(shardings, fm: FoldedMesh):
+    """Store shardings with the pipeline atoms dropped from dim 0.
+
+    Initialization must run against these and *then* reshard to the true
+    store shardings: on the pinned JAX generation, XLA's partitioner does
+    not produce position-pure values for a ``jnp.stack`` of per-layer RNG
+    draws when the stack dim itself is sharded — the same
+    mapping-dependent-init bug class that partitionable threefry fixed for
+    the expert dim (see ``repro/__init__``), which threefry alone does not
+    cover here.
+    """
+    pp_atoms = set(fm.axis("attn", "pp"))
+    if not pp_atoms:
+        return shardings
+
+    def strip(sh: NamedSharding) -> NamedSharding:
+        entries = list(sh.spec)
+        if not entries or entries[0] is None:
+            return sh
+        head = entries[0] if isinstance(entries[0], tuple) else (entries[0],)
+        kept = tuple(a for a in head if a not in pp_atoms)
+        if len(kept) == len(head):
+            return sh
+        entries[0] = kept or None
+        return NamedSharding(fm.mesh, P(*entries))
+
+    return jax.tree.map(strip, shardings)
 
 
 def constrain(x, fm: FoldedMesh, side: str, *dims):

@@ -275,6 +275,60 @@ def _run_stack(params_cycle, cycle, x, pos, cfg, fm, ctx, *, remat=True):
     return x, aux
 
 
+def lm_positions(batch: Dict[str, Array], cfg: ModelConfig) -> Array:
+    """Token positions for a batch — explicit, or the default arange.
+
+    Split out of :func:`apply_lm` so the pipeline executor can compute
+    positions once per microbatch *outside* the differentiated chunk
+    functions (they are integer-valued, hence not a vjp output).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    pos = batch.get("positions")
+    if pos is None:
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        if cfg.rope_kind == "mrope":
+            pos = jnp.broadcast_to(pos[..., None], (B, S, 3))
+    return pos
+
+
+def lm_embed(params: Dict, batch: Dict[str, Array], pos: Array,
+             cfg: ModelConfig, fm: FoldedMesh) -> Array:
+    """Embedding prologue (pipeline stage 0): tokens → sharded activations.
+
+    Only reads ``params["embed"]`` — the pipeline executor differentiates
+    it with exactly that param subset.
+    """
+    tokens = batch["tokens"]
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    emb = constrain(params["embed"], fm, "attn", "tp", None)
+    x = emb[tokens].astype(dt)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dt)
+    if cfg.rope_kind == "none" and not cfg.is_encoder_decoder:
+        pos1 = pos if pos.ndim == 2 else pos[..., 0]
+        x = x + _sinusoid(pos1, cfg.d_model).astype(dt)
+    if cfg.n_vision_tokens and "vision_embeds" in batch:
+        ve = batch["vision_embeds"].astype(dt)
+        x = jax.lax.dynamic_update_slice(x, ve, (0, 0, 0))
+    return constrain(x, fm, "attn", "dp", ("cp", "tp"), None)
+
+
+def lm_head_logits(params: Dict, x: Array, cfg: ModelConfig,
+                   fm: FoldedMesh) -> Array:
+    """LM-head epilogue (final pipeline stage): activations → logits.
+
+    Reads ``params["final_norm"]`` plus ``params["lm_head"]`` (or
+    ``params["embed"]`` when embeddings are tied).
+    """
+    x = norm_apply(cfg.norm, x, params["final_norm"])
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    return constrain(logits, fm, "attn", "dp", "cp", "tp")
+
+
 def apply_lm(params: Dict, batch: Dict[str, Array], cfg: ModelConfig,
              fm: FoldedMesh, *, remat: bool = True) -> Tuple[Array, AuxDict]:
     """Forward pass → (logits, aux). ``batch``:
@@ -286,27 +340,10 @@ def apply_lm(params: Dict, batch: Dict[str, Array], cfg: ModelConfig,
     """
     import repro.models.ssm_blocks  # noqa: F401
 
-    tokens = batch["tokens"]
-    B, S = tokens.shape
+    B = batch["tokens"].shape[0]
     dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
-
-    pos = batch.get("positions")
-    if pos is None:
-        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
-        if cfg.rope_kind == "mrope":
-            pos = jnp.broadcast_to(pos[..., None], (B, S, 3))
-
-    emb = constrain(params["embed"], fm, "attn", "tp", None)
-    x = emb[tokens].astype(dt)
-    if cfg.name.startswith("gemma"):
-        x = x * jnp.asarray(math.sqrt(cfg.d_model), dt)
-    if cfg.rope_kind == "none" and not cfg.is_encoder_decoder:
-        pos1 = pos if pos.ndim == 2 else pos[..., 0]
-        x = x + _sinusoid(pos1, cfg.d_model).astype(dt)
-    if cfg.n_vision_tokens and "vision_embeds" in batch:
-        ve = batch["vision_embeds"].astype(dt)
-        x = jax.lax.dynamic_update_slice(x, ve, (0, 0, 0))
-    x = constrain(x, fm, "attn", "dp", ("cp", "tp"), None)
+    pos = lm_positions(batch, cfg)
+    x = lm_embed(params, batch, pos, cfg, fm)
 
     ctx: Dict[str, Any] = {}
     if cfg.shared_attention_every:
@@ -330,12 +367,7 @@ def apply_lm(params: Dict, batch: Dict[str, Array], cfg: ModelConfig,
     _, cycle = model_cycle(cfg)
     x, aux = _run_stack(params["cycle"], cycle, x, pos, cfg, fm, ctx, remat=remat)
 
-    x = norm_apply(cfg.norm, x, params["final_norm"])
-    head = params.get("lm_head")
-    if head is None:
-        head = params["embed"].T
-    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
-    logits = constrain(logits, fm, "attn", "dp", "cp", "tp")
+    logits = lm_head_logits(params, x, cfg, fm)
     n_moe = sum(1 for b in cfg.blocks() if b == "moe")
     if n_moe:
         aux = {k: v / n_moe for k, v in aux.items()}

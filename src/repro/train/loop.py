@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ParallelConfig
+from repro.core import pipeline as pl
 from repro.core.folding import FoldedMesh
 from repro.models.common import softmax_cross_entropy
 from repro.models.sharding import param_shardings
@@ -52,21 +53,45 @@ def cast_params(params, cfg: ModelConfig):
         params)
 
 
+def aux_loss_coefs(cfg: ModelConfig) -> Dict[str, float]:
+    """Coefficient of each aux output in the loss (0 for metrics-only keys).
+
+    The single source of truth for how aux terms enter the objective:
+    :func:`assemble_loss_metrics` consumes it on the pp=1 path, and the
+    pipeline executor turns it into the constant vjp cotangent it injects
+    per chunk — a new aux term added here automatically reaches both.
+    """
+    coefs = {"moe_aux_loss": 0.0, "moe_z_loss": 0.0, "moe_drop_fraction": 0.0}
+    if cfg.moe is not None:
+        coefs["moe_aux_loss"] = cfg.moe.aux_loss_coef
+        coefs["moe_z_loss"] = cfg.moe.z_loss_coef
+    return coefs
+
+
+def assemble_loss_metrics(ce: Array, n_tok: Array, aux: Dict[str, Array],
+                          cfg: ModelConfig) -> Tuple[Array, Dict[str, Array]]:
+    """(ce, aux) → (total loss, metric dict) — shared by the pp=1 path and
+    the pipeline executor so loss/metric semantics cannot drift apart.
+    ``aux`` is already layer-normalized (divided by n_moe)."""
+    loss = ce
+    metrics = {"ce_loss": ce, "tokens": n_tok}
+    if cfg.moe is not None:
+        coefs = aux_loss_coefs(cfg)
+        for k, c in coefs.items():     # ((ce + aux) + z): fixed fp order
+            if c:
+                loss = loss + c * aux[k]
+        metrics.update({k: aux[k] for k in coefs})
+    metrics["loss"] = loss
+    return loss, metrics
+
+
 def loss_fn(params, batch, cfg: ModelConfig, fm: FoldedMesh, *,
             remat: bool = True, pre_cast: bool = False
             ) -> Tuple[Array, Dict[str, Array]]:
     cparams = params if pre_cast else cast_params(params, cfg)
     logits, aux = apply_lm(cparams, batch, cfg, fm, remat=remat)
     ce, n_tok = softmax_cross_entropy(logits, batch["labels"])
-    loss = ce
-    metrics = {"ce_loss": ce, "tokens": n_tok}
-    if cfg.moe is not None:
-        loss = loss + cfg.moe.aux_loss_coef * aux["moe_aux_loss"] \
-                    + cfg.moe.z_loss_coef * aux["moe_z_loss"]
-        metrics.update({k: aux[k] for k in
-                        ("moe_aux_loss", "moe_z_loss", "moe_drop_fraction")})
-    metrics["loss"] = loss
-    return loss, metrics
+    return assemble_loss_metrics(ce, n_tok, aux, cfg)
 
 
 def make_train_step(cfg: ModelConfig, fm: FoldedMesh,
@@ -80,6 +105,40 @@ def make_train_step(cfg: ModelConfig, fm: FoldedMesh,
 
     from repro import flags
     hoist = not flags.NO_HOIST_CAST
+
+    # Pipeline parallelism: with pp stages (or interleaved virtual stages)
+    # the microbatch loop is driven by the 1F1B schedule instead of the
+    # plain accumulation scan. Grads/metrics get the same /nmicro
+    # post-processing, so losses are directly comparable to pp=1.
+    pp_stages = pl.pipeline_degree(fm)
+    if pp_stages > 1 or pcfg.vpp > 1:
+        part = pl.stage_partition_for(cfg, pp_stages, pcfg.vpp)
+        n_micro = max(nmicro, 1)
+        pgrads = pl.make_pipeline_grads(cfg, fm, part, n_micro, remat=remat)
+
+        def pp_step(params, opt_state, batch):
+            # The pipeline path always hoists the fp32→bf16 cast out of
+            # the schedule (flags.NO_HOIST_CAST does not apply here: the
+            # chunk vjps differentiate the compute copies directly, and
+            # the cast's unit derivative makes the grads identical).
+            cparams = cast_params(params, cfg)
+            g_sum, m_sum = pgrads(cparams, batch)
+            grads = jax.tree.map(lambda g: g / n_micro, g_sum)
+            metrics = jax.tree.map(lambda m: m / n_micro, m_sum)
+            new_params, new_opt, opt_m = adamw.update(
+                opt_cfg, grads, opt_state, params)
+            metrics.update(opt_m)
+            return new_params, new_opt, metrics
+
+        pshard = param_shardings_fp32(cfg, fm)
+        oshard = adamw.AdamWState(
+            step=NamedSharding(fm.mesh, P()), mu=pshard, nu=pshard)
+        return jax.jit(
+            pp_step,
+            in_shardings=(pshard, oshard, batch_shardings(cfg, fm)),
+            out_shardings=(pshard, oshard, None),
+            donate_argnums=(0, 1) if donate else (),
+        )
 
     def grads_of(cparams, batch):
         # Grads are taken wrt the bf16 compute copies: the cast is linear
@@ -147,9 +206,17 @@ def param_shardings_fp32(cfg: ModelConfig, fm: FoldedMesh):
 
 
 def init_train_state(key, cfg: ModelConfig, fm: FoldedMesh):
-    """Initialize (params, opt_state) directly with store shardings."""
+    """Initialize (params, opt_state) directly with store shardings.
+
+    With pipeline stages the layer-stack dim is initialized pp-replicated
+    and then resharded (see ``sharding.strip_stack_pp`` for why).
+    """
+    from repro.models.sharding import strip_stack_pp
     pshard = param_shardings_fp32(cfg, fm)
-    params = jax.jit(lambda k: init_lm(k, cfg), out_shardings=pshard)(key)
+    init_shard = strip_stack_pp(pshard, fm)
+    params = jax.jit(lambda k: init_lm(k, cfg), out_shardings=init_shard)(key)
+    if init_shard is not pshard:
+        params = jax.device_put(params, pshard)
     opt = jax.jit(adamw.init, out_shardings=adamw.AdamWState(
         step=NamedSharding(fm.mesh, P()), mu=pshard, nu=pshard))(params)
     return params, opt

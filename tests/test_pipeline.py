@@ -1,0 +1,313 @@
+"""Pipeline parallelism: schedules, partitioning, and pp=1 parity.
+
+Three layers of coverage, mirroring core/pipeline.py:
+
+* pure-Python schedule properties (1F1B order, in-flight bounds, deadlock
+  freedom, measured-vs-closed-form bubble) — cheap, exhaustive sweeps;
+* executor parity: the 1F1B / interleaved train step must reproduce the
+  pp=1 microbatch-scan losses (≤1e-6 fp32 over 5 steps) and grads on an
+  8-fake-device mesh, including the combined pp×EP×CP fold and
+  ``pod_role="pp"`` (pipeline stages spanning pods);
+* validation: divisibility and schedule-constraint errors raise with
+  useful messages (configs/base, launch/mappings).
+"""
+import dataclasses
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ParallelConfig, ParallelMappingSpec as PM
+from repro.core import pipeline as pl
+from repro.core.folding import build_folded_mesh
+from repro.optim import adamw
+from repro.train.loop import batch_shardings, init_train_state, make_train_step
+
+SWEEP = [(pp, vpp, m)
+         for pp in (1, 2, 4)
+         for vpp in (1, 2)
+         for m in (pp, 2 * pp)
+         if vpp == 1 or pp > 1]
+
+# The two deepest unrolls (pp4 × m8) compile for minutes on CPU — nightly
+# full-suite only; the fast gate still covers every (pp, vpp) pair.
+_HEAVY = {(4, 1, 8), (4, 2, 8)}
+
+
+# ---------------------------------------------------------------------------
+# Schedule properties (pure Python)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pp,vpp,m", SWEEP)
+def test_schedule_wellformed(pp, vpp, m):
+    part = pl.StagePartition(pp=pp, vpp=vpp, n_rep=8)
+    scheds = pl.schedule(part, m)
+    assert len(scheds) == pp
+    for s, ops in enumerate(scheds):
+        fwd = [op for op in ops if op.kind == "F"]
+        bwd = [op for op in ops if op.kind == "B"]
+        # every (mb, chunk) of this stage exactly once, F before its B
+        want = {(i, c) for i in range(m) for c in part.chunks_of(s)}
+        assert {(op.mb, op.chunk) for op in fwd} == want
+        assert {(op.mb, op.chunk) for op in bwd} == want
+        seen_f = set()
+        for op in ops:
+            if op.kind == "F":
+                seen_f.add((op.mb, op.chunk))
+            else:
+                assert (op.mb, op.chunk) in seen_f, "B before its F"
+        # backwards of one chunk complete in microbatch order (grad-sum
+        # order must match the pp=1 accumulation scan)
+        for c in part.chunks_of(s):
+            mbs = [op.mb for op in bwd if op.chunk == c]
+            assert mbs == sorted(mbs)
+
+
+@pytest.mark.parametrize("pp,vpp,m", SWEEP)
+def test_schedule_in_flight_bound(pp, vpp, m):
+    """1F1B keeps ≤ pp microbatches in flight per stage; interleaving pays
+    at most the Megatron warmup bound 2(pp-1) + (vpp-1)·pp + 1."""
+    part = pl.StagePartition(pp=pp, vpp=vpp, n_rep=8)
+    peak = pl.max_in_flight(pl.schedule(part, m))
+    if vpp == 1:
+        assert peak <= pp
+    else:
+        assert peak <= min(2 * (pp - 1) + (vpp - 1) * pp + 1, m * vpp)
+
+
+@pytest.mark.parametrize("pp,vpp,m", SWEEP)
+def test_timeline_no_deadlock_and_bubble_matches_formula(pp, vpp, m):
+    part = pl.StagePartition(pp=pp, vpp=vpp, n_rep=8)
+    t = pl.simulate_timeline(part, m)     # deadlock would raise
+    assert len(t.placed) == 2 * m * vpp * pp
+    assert abs(t.bubble - pl.bubble_fraction(pp, m, vpp)) < 1e-9
+    # interleaving shrinks the bubble, never grows it
+    if vpp > 1:
+        assert t.bubble < pl.bubble_fraction(pp, m, 1) + 1e-9
+
+
+def test_merged_order_respects_dependencies():
+    part = pl.StagePartition(pp=4, vpp=2, n_rep=8)
+    order = pl.merged_order(part, 8)
+    done = set()
+    last = part.n_chunks - 1
+    for op in order:
+        if op.kind == "F":
+            assert op.chunk == 0 or ("F", op.mb, op.chunk - 1) in done
+        else:
+            assert (("F", op.mb, last) if op.chunk == last
+                    else ("B", op.mb, op.chunk + 1)) in done
+        done.add((op.kind, op.mb, op.chunk))
+
+
+def test_partition_layout():
+    part = pl.StagePartition(pp=2, vpp=2, n_rep=8)
+    assert [part.owner(c) for c in range(4)] == [0, 1, 0, 1]
+    assert part.bounds(3) == (6, 2)
+    assert part.chunks_of(1) == [1, 3]
+
+
+def test_partition_validation_errors():
+    with pytest.raises(ValueError, match="pp\\*vpp"):
+        pl.StagePartition(pp=4, vpp=2, n_rep=12)   # 12 % 8
+    with pytest.raises(ValueError, match="pp >= 2"):
+        pl.StagePartition(pp=1, vpp=2, n_rep=8)
+    with pytest.raises(ValueError, match="microbatches % pp"):
+        pl.schedule_interleaved(4, 2, 6)
+    cfg = reduced(get_config("zamba2-2.7b"))
+    with pytest.raises(ValueError, match="shared-attention"):
+        pl.stage_partition_for(cfg, 2, 1)
+    with pytest.raises(ValueError, match="vpp"):
+        ParallelConfig(attn=PM(2, 1, 2), moe=PM(2, 1, 2), vpp=2)
+
+
+def test_mappings_pipeline_validation():
+    from repro.launch.mappings import pcfg_for
+    p = pcfg_for("mixtral-8x22b", "train_4k", pp=2, vpp=2)
+    assert p.pp == 2 and p.vpp == 2 and p.attn.dp == 8
+    assert p.world_size == pcfg_for("mixtral-8x22b", "train_4k").world_size
+    with pytest.raises(ValueError, match="mixtral-8x22b"):
+        pcfg_for("mixtral-8x22b", "train_4k", pp=2, vpp=5)  # 56 % 10 != 0
+    with pytest.raises(ValueError, match="microbatch % pp"):
+        pcfg_for("mixtral-8x22b", "train_4k", pp=4, vpp=2, microbatch=6)
+    with pytest.raises(ValueError, match="microbatch % pp"):
+        # microbatch=0 (no accumulation) runs the schedule with m=1 —
+        # must be rejected for interleaved, not blow up in make_train_step
+        pcfg_for("mixtral-8x22b", "train_4k", pp=4, vpp=2, microbatch=0)
+
+
+def test_dryrun_pipeline_report_uses_schedule_timeline():
+    from repro.launch.dryrun import pipeline_report
+    cfg = reduced(get_config("llama3.2-1b"), n_layers=8)
+    rep = pipeline_report(cfg, 4, 1, 8)
+    assert rep["pp_bubble_sched"] == pytest.approx(
+        pl.bubble_fraction(4, 8), abs=1e-4)
+    assert rep["pp_max_in_flight"] == 4
+    assert pipeline_report(cfg, 1, 1, 8) == {}
+
+
+# ---------------------------------------------------------------------------
+# Executor parity with pp=1
+# ---------------------------------------------------------------------------
+
+def _dense_cfg():
+    return reduced(get_config("llama3.2-1b"), n_layers=8, d_model=64,
+                   n_heads=2, n_kv_heads=2, d_ff=128, vocab_size=256,
+                   dtype="float32")
+
+
+def _moe_cfg(n_layers=4):
+    cfg = reduced(get_config("mixtral-8x22b"), n_layers=n_layers, d_model=64,
+                  n_heads=2, n_kv_heads=2, d_ff=128, vocab_size=256,
+                  dtype="float32")
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, d_expert=64,
+                                     deterministic_router=True))
+
+
+def _batch(cfg, B=16, S=16):
+    toks = jax.random.randint(jax.random.PRNGKey(7), (B, S + 1), 0,
+                              cfg.vocab_size)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def _run_steps(cfg, pcfg, batch, steps=5):
+    fm = build_folded_mesh(pcfg)
+    key = jax.random.PRNGKey(0)
+    params, opt = init_train_state(key, cfg, fm)
+    step = make_train_step(cfg, fm, adamw.AdamWConfig(lr=1e-3), donate=False)
+    bs = batch_shardings(cfg, fm)
+    sb = {k: jax.device_put(v, bs[k]) for k, v in batch.items()}
+    losses = []
+    for _ in range(steps):
+        params, opt, m = step(params, opt, sb)
+        losses.append(float(m["loss"]))
+    return losses, jax.tree.map(np.asarray, params)
+
+
+@lru_cache(maxsize=None)
+def _dense_baseline(m):
+    cfg = _dense_cfg()
+    pcfg = ParallelConfig(attn=PM(1, 1, 2), moe=PM(1, 1, 2), microbatch=m,
+                          remat="none")
+    return _run_steps(cfg, pcfg, _batch(cfg))
+
+
+@pytest.mark.parametrize(
+    "pp,vpp,m",
+    [pytest.param(pp, vpp, m,
+                  marks=[pytest.mark.slow] if (pp, vpp, m) in _HEAVY else [])
+     for pp, vpp, m in SWEEP if pp > 1])
+def test_pipeline_loss_and_param_parity_with_pp1(pp, vpp, m):
+    """5-step fp32 loss parity ≤ 1e-6 vs the pp=1 microbatch scan."""
+    cfg = _dense_cfg()
+    pcfg = ParallelConfig(attn=PM(1, 1, 2), moe=PM(1, 1, 2), pp=pp, vpp=vpp,
+                          microbatch=m, remat="none")
+    losses, params = _run_steps(cfg, pcfg, _batch(cfg))
+    ref_losses, ref_params = _dense_baseline(m)
+    assert max(abs(a - b) for a, b in zip(losses, ref_losses)) <= 1e-6
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(ref_params)):
+        np.testing.assert_allclose(a, b, atol=2e-6, rtol=1e-5)
+
+
+def test_pipeline_moe_ep_cp_fold_parity():
+    """pp × EP × CP: pipeline over a folded mesh where MoE EP4 spans the
+    attention CP×TP atoms — 1F1B must compose with the EP dispatch and CP
+    sequence sharding without touching either."""
+    cfg = _moe_cfg(n_layers=4)
+    batch = _batch(cfg, B=8, S=16)
+    base = ParallelConfig(attn=PM(1, 2, 2), moe=PM(1, 4, 1), microbatch=4)
+    pipe = ParallelConfig(attn=PM(1, 2, 2), moe=PM(1, 4, 1), pp=2, vpp=2,
+                          microbatch=4)
+    l_ref, p_ref = _run_steps(cfg, base, batch)
+    l_pp, p_pp = _run_steps(cfg, pipe, batch)
+    assert max(abs(a - b) for a, b in zip(l_ref, l_pp)) <= 1e-6
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_pp)):
+        np.testing.assert_allclose(a, b, atol=2e-6, rtol=1e-5)
+
+
+def test_pipeline_pod_role_pp_fold_parity():
+    """pod_role="pp": the pod atom extends the pipeline (stages span pods,
+    degree pods·pp = 4) while MoE keeps EP2 — loss parity with pp=1."""
+    cfg = _moe_cfg(n_layers=8)
+    batch = _batch(cfg, B=8, S=16)
+    base = ParallelConfig(attn=PM(1, 2, 1), moe=PM(1, 2, 1), microbatch=4)
+    pipe = ParallelConfig(attn=PM(1, 2, 1), moe=PM(1, 2, 1), pp=2, pods=2,
+                          pod_role="pp", microbatch=4)
+    fm = build_folded_mesh(pipe)
+    assert pl.pipeline_degree(fm) == 4
+    assert pl.pipeline_axes(fm) == ("pod", "pp")
+    l_ref, _ = _run_steps(cfg, base, batch, steps=3)
+    l_pp, _ = _run_steps(cfg, pipe, batch, steps=3)
+    assert max(abs(a - b) for a, b in zip(l_ref, l_pp)) <= 1e-6
+
+
+def test_pipeline_grads_match_direct_grads():
+    """Chunk-level vjp accumulation == one whole-model grad (same mesh)."""
+    from repro.train.loop import cast_params, loss_fn
+    cfg = _moe_cfg(n_layers=4)
+    batch = _batch(cfg, B=8, S=16)
+    m = 4
+    pipe = ParallelConfig(attn=PM(2, 1, 2), moe=PM(2, 1, 2), pp=2,
+                          microbatch=m)
+    fm = build_folded_mesh(pipe)
+    params, _ = init_train_state(jax.random.PRNGKey(0), cfg, fm)
+    bs = batch_shardings(cfg, fm)
+    sb = {k: jax.device_put(v, bs[k]) for k, v in batch.items()}
+
+    part = pl.stage_partition_for(cfg, 2, 1)
+    pgrads = pl.make_pipeline_grads(cfg, fm, part, m, remat=True)
+
+    @jax.jit
+    def pipeline_g(p, b):
+        g, _ = pgrads(cast_params(p, cfg), b)
+        return jax.tree.map(lambda x: x / m, g)
+
+    @jax.jit
+    def direct_g(p, b):
+        def mean_loss(cp):
+            mb = b["tokens"].shape[0] // m
+            losses = []
+            for i in range(m):
+                sl = jax.tree.map(
+                    lambda a: jax.lax.dynamic_slice_in_dim(a, i * mb, mb, 0), b)
+                losses.append(loss_fn(cp, sl, cfg, fm, pre_cast=True)[0])
+            return sum(losses) / m
+        return jax.grad(mean_loss)(cast_params(p, cfg))
+
+    g1, g2 = pipeline_g(params, sb), direct_g(params, sb)
+    for a, b_ in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   atol=1e-6, rtol=1e-5)
+
+
+def test_pipeline_send_is_identity_on_replicated_activations():
+    pcfg = ParallelConfig(attn=PM(2, 1, 2), moe=PM(2, 1, 2), pp=2)
+    fm = build_folded_mesh(pcfg)
+    x = jnp.arange(2 * 4 * 8, dtype=jnp.float32).reshape(2, 4, 8)
+    y = jax.jit(lambda t: pl.pipeline_send(t, fm))(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+def test_pipeline_params_sharded_over_stages():
+    """The layer-stack dim of cycle params stores pp-sharded (the pipeline
+    parameter-memory win); embed/head stay replicated over pp."""
+    from repro.models.sharding import param_shardings, strip_stack_pp
+    cfg = _dense_cfg()
+    pcfg = ParallelConfig(attn=PM(1, 1, 2), moe=PM(1, 1, 2), pp=4)
+    fm = build_folded_mesh(pcfg)
+    from repro.models.transformer import init_lm
+    shapes = jax.eval_shape(lambda k: init_lm(k, cfg), jax.random.PRNGKey(0))
+    sh = param_shardings(shapes, fm, mode="store")
+    wq = sh["cycle"]["b0"]["attn"]["wq"]
+    assert wq.spec[0] == ("pp",)
+    emb_atoms = [a for e in sh["embed"].spec if e
+                 for a in ((e,) if isinstance(e, str) else e)]
+    assert "pp" not in emb_atoms
+    # init-time shardings strip the stack dim (RNG purity — see
+    # sharding.strip_stack_pp)
+    init_sh = strip_stack_pp(sh, fm)
+    assert init_sh["cycle"]["b0"]["attn"]["wq"].spec[0] is None

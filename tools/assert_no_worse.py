@@ -1,12 +1,24 @@
 #!/usr/bin/env python
-"""CI gate: the full suite may not regress past the recorded seed baseline.
+"""CI gate: the full suite may not regress past the recorded seed baseline,
+and micro-benchmarks may not regress >25% past the recorded snapshot.
 
-Usage: python tools/assert_no_worse.py <pytest-log>
+Usage:
+    python tools/assert_no_worse.py <pytest-log>
+    python tools/assert_no_worse.py <pytest-log> --bench bench.csv \
+        [--snapshot benchmarks/BENCH_PR4.json]
 
-Parses the pytest summary line out of a ``pytest -q`` log and compares the
-failure + error count against ``tests/seed_baseline.json``. The repo's seed
-state has known failures; this gate enforces "no worse than seed" until the
-suite is green, at which point the recorded budget should be ratcheted to 0.
+Test gate: parses the pytest summary line out of a ``pytest -q`` log and
+compares the failure + error count against ``tests/seed_baseline.json``
+(failure budget + passed-count floor).
+
+Benchmark gate: compares ``micro/*`` wall-time rows of a fresh
+``bench.csv`` against the recorded trajectory snapshot
+(``BENCH_SNAPSHOT=... python -m benchmarks.run``): a row slower than
+``tolerance``× the snapshot (default 1.25 — the >25% budget) *and* more
+than ``abs_floor_us`` slower fails, as does a snapshot row that vanished
+from the CSV. Modeled rows (fig*/table*) are recorded in the snapshot for
+trajectory history but not time-gated — they change legitimately with the
+model.
 """
 from __future__ import annotations
 
@@ -15,7 +27,9 @@ import pathlib
 import re
 import sys
 
-BASELINE = pathlib.Path(__file__).resolve().parent.parent / "tests" / "seed_baseline.json"
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+BASELINE = ROOT / "tests" / "seed_baseline.json"
+DEFAULT_SNAPSHOT = ROOT / "benchmarks" / "BENCH_PR4.json"
 
 
 def parse_summary(text: str) -> dict:
@@ -40,11 +54,94 @@ def parse_summary(text: str) -> dict:
     return counts
 
 
+def parse_bench_csv(text: str) -> dict:
+    rows = {}
+    for line in text.splitlines():
+        parts = line.split(",", 2)
+        if len(parts) != 3 or parts[0] == "name":
+            continue
+        try:
+            rows[parts[0]] = float(parts[1])
+        except ValueError:
+            continue
+    return rows
+
+
+def check_bench(csv_path: str, snapshot_path: str) -> int:
+    snap = json.loads(pathlib.Path(snapshot_path).read_text())
+    rows = parse_bench_csv(pathlib.Path(csv_path).read_text())
+    tol = float(snap.get("tolerance", 1.25))
+    floor = float(snap.get("abs_floor_us", 250.0))
+
+    max_scale = float(snap.get("max_scale", 4.0))
+
+    def gated(name, rec):
+        return name.startswith("micro/") and rec["us_per_call"] > 0 \
+            and "error" not in rec.get("derived", "")
+
+    # The snapshot is recorded on one machine and compared on another:
+    # divide out the machine-speed factor via the *median* now/base ratio
+    # across all gated rows. A median is robust to a few genuinely
+    # regressed rows (they sit above it and still get flagged), but a
+    # regression correlated across >half the rows shifts the median and
+    # would self-mask — so a scale beyond ``tolerance`` is warned about
+    # loudly, and beyond ``max_scale`` (larger than any plausible runner
+    # speed difference) the gate fails outright.
+    ratios = sorted(rows[n] / r["us_per_call"] for n, r in snap["rows"].items()
+                    if gated(n, r) and rows.get(n, 0.0) > 0)
+    scale = ratios[len(ratios) // 2] if ratios else 1.0
+    problems = []
+    if scale > max_scale:
+        problems.append(
+            f"machine scale {scale:.2f} exceeds max_scale {max_scale} — "
+            f"either a correlated regression across most rows, or the "
+            f"snapshot machine is no longer comparable (re-record it)")
+    elif scale > tol:
+        print(f"assert_no_worse[bench]: WARNING — machine scale "
+              f"{scale:.2f} > tolerance {tol}; a regression correlated "
+              f"across most rows would be masked by the normalization")
+    compared = 0
+    for name, rec in sorted(snap["rows"].items()):
+        base = rec["us_per_call"]
+        if not gated(name, rec):
+            continue
+        if name not in rows:
+            problems.append(f"{name}: row missing from {csv_path} "
+                            f"(benchmark coverage collapsed?)")
+            continue
+        compared += 1
+        now = rows[name] / scale
+        if now > base * tol and now - base > floor:
+            problems.append(
+                f"{name}: {now:.1f}us (machine-normalized /{scale:.2f}) vs "
+                f"snapshot {base:.1f}us "
+                f"(+{(now / base - 1) * 100:.0f}% > {(tol - 1) * 100:.0f}%)")
+    print(f"assert_no_worse[bench]: compared {compared} micro rows against "
+          f"{snapshot_path} (tolerance {tol}x, floor {floor}us, "
+          f"machine scale {scale:.2f})")
+    if problems:
+        print("assert_no_worse[bench]: FAIL")
+        for p in problems:
+            print("  " + p)
+        return 1
+    print("assert_no_worse[bench]: OK")
+    return 0
+
+
 def main(argv: list[str]) -> int:
-    if len(argv) != 2:
-        print(__doc__)
-        return 2
-    text = pathlib.Path(argv[1]).read_text()
+    import argparse
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("log", help="pytest -q log with a summary line")
+    ap.add_argument("--bench", metavar="CSV",
+                    help="bench.csv to gate against the recorded snapshot")
+    ap.add_argument("--snapshot", metavar="JSON", default=None,
+                    help=f"snapshot path (default {DEFAULT_SNAPSHOT})")
+    ns = ap.parse_args(argv[1:])
+    if ns.snapshot and not ns.bench:
+        ap.error("--snapshot requires --bench")
+    bench, snapshot = ns.bench, ns.snapshot
+    text = pathlib.Path(ns.log).read_text()
     counts = parse_summary(text)
     budget = json.loads(BASELINE.read_text())
     bad = counts["failed"] + counts["error"]
@@ -61,6 +158,11 @@ def main(argv: list[str]) -> int:
               "baseline (did some stop being collected?)")
         return 1
     print("assert_no_worse: OK")
+    if bench is not None:
+        snapshot = snapshot or str(DEFAULT_SNAPSHOT)
+        if pathlib.Path(snapshot).exists():
+            return check_bench(bench, snapshot)
+        print(f"assert_no_worse[bench]: no snapshot at {snapshot}, skipping")
     return 0
 
 
