@@ -12,11 +12,15 @@ column shrinks by ~cp× relative to ``kv_ag_mb``, plus the P2P ring payload
 each rank sends per layer forward.
 
 The ``fig4/.../ring/...`` rows *lower and compile the ring schedule for
-real* on a small fake-device world (shard_map + ppermute compile cost on
-256 fake hosts is still untested — ROADMAP); above ``RING_LOWER_MAX_WORLD``
-the ring numbers stay analytic. Every row logs which path produced it
-(``cp_path=lowered|analytic``).
+real* on a small fake-device world; above ``RING_LOWER_MAX_WORLD``
+(env-overridable) the ring numbers stay analytic. Every row logs which
+path produced it (``cp_path=lowered|analytic``). The nightly CI job raises
+``RING_LOWER_MAX_WORLD=256`` and runs :func:`ring_world_row`, which
+lowers + compiles a (2, 64, 2) ring schedule on a 256-fake-device world —
+closing ROADMAP's "256-fake-host ring compiles remain untested".
 """
+import os
+
 from benchmarks.common import QUICK, emit
 
 from repro.configs.base import ParallelConfig, ParallelMappingSpec as PM
@@ -24,7 +28,30 @@ from repro.configs.shapes import InputShape
 
 # Ring lowerings use a (2, cp, 2) sub-world; above this many fake devices
 # the ring row falls back to the analytic KV/payload accounting.
-RING_LOWER_MAX_WORLD = 32
+RING_LOWER_MAX_WORLD = int(os.environ.get("RING_LOWER_MAX_WORLD", "32"))
+
+
+def ring_world_row(world: int = 256, seq: int = 4096) -> dict:
+    """Lower + compile the ring-CP train schedule on a ``world``-fake-device
+    (2, world/4, 2) mesh and emit its row. Raises on failure (the nightly
+    CI step calls this directly and must gate red on a broken compile)."""
+    from repro.launch.dryrun import run_pair
+    cp = world // 4
+    tp = 2
+    # Same two constraints launch.mappings._validate_table enforces:
+    # zigzag ring chunking (2*cp) and the CP×TP sequence-parallel layout.
+    if seq % (2 * cp) or seq % (cp * tp):
+        raise ValueError(f"seq {seq} incompatible with cp={cp}, tp={tp}")
+    pcfg = ParallelConfig(attn=PM(2, cp, tp), moe=PM(world // 8, 8, 1),
+                          microbatch=1, fsdp=True, cp_mode="ring")
+    shape = InputShape(f"ring_world{world}", seq, 2, "train")
+    rec = run_pair("mixtral-8x22b", "train_4k", pcfg=pcfg, verbose=False,
+                   shape=shape)
+    t = max(rec["compute_s"], rec["memory_s"], rec["collective_s"])
+    emit(f"fig4/mixtral-8x22b/ring/world{world}", t * 1e6,
+         f"cp={cp};cp_path=lowered(ring,world={world});"
+         f"compile_s={rec['t_compile_s']}")
+    return rec
 
 
 def main() -> None:
@@ -90,6 +117,14 @@ def main() -> None:
             emit(f"fig4/mixtral-8x22b/ring/{seq}", 0.0,
                  f"cp={cp};cp_path=analytic(world={ring_world}>"
                  f"{RING_LOWER_MAX_WORLD});{kv_note}")
+
+    # Big-world ring compile (nightly: RING_LOWER_MAX_WORLD=256).
+    if RING_LOWER_MAX_WORLD >= 256:
+        try:
+            ring_world_row(256)
+        except Exception as e:  # noqa: BLE001 — keep the harness going
+            emit("fig4/mixtral-8x22b/ring/world256", 0.0,
+                 f"error={type(e).__name__}"[:60])
 
 
 if __name__ == "__main__":

@@ -17,7 +17,32 @@ from benchmarks.common import QUICK, emit
 from repro.configs import get_config
 from repro.configs.base import ParallelConfig, ParallelMappingSpec as PM
 from repro.core.folding import build_folded_mesh
+from repro.core.overlap import overlap_adjusted_time, overlap_gain
 from repro.roofline.analysis import DCI_BW, ICI_BW, PEAK_FLOPS
+
+# Chunk counts for the overlapped-vs-serial dispatch rows (the chunked
+# A2A↔GMM ladder of core/overlap.py; 2 is the production default the
+# mixtral configs ship with).
+OVERLAP_CHUNKS = (2, 4)
+
+
+def emit_overlap_rows(prefix: str, t: dict) -> None:
+    """Overlapped-vs-serial dispatch timing for one mapping's breakdown.
+
+    The ladder hides the EP A2A + ETP AG/RS-V comm chain under the expert
+    GEMM (and vice versa), leaving the serial permute plus
+    ``max(comm, gemm) + ramp`` (``core.overlap.overlap_adjusted_time``).
+    """
+    comm = t["a2a"] + t["ag_v"] + t["rs_v"]
+    serial = sum(t.values())
+    emit(f"{prefix}/serial", serial * 1e6,
+         f"comm={comm*1e6:.0f}us;gemm={t['gemm']*1e6:.0f}us;chunks=1")
+    for c in OVERLAP_CHUNKS:
+        over = t["permute"] + overlap_adjusted_time(comm, t["gemm"], c)
+        gain = overlap_gain(t.values(), comm, t["gemm"], c)
+        emit(f"{prefix}/overlapC{c}", over * 1e6,
+             f"chunks={c};gain={gain*100:.0f}%;"
+             f"bound=max(comm,gemm)+ramp")
 
 
 def moe_layer_terms(model: str, attn, moe, *, seq=4096, batch=256, pods=1,
@@ -82,6 +107,7 @@ def main() -> None:
             total = sum(t.values())
             emit(f"fig5/{model}/{name}", total * 1e6,
                  ";".join(f"{k}={v*1e6:.0f}us" for k, v in t.items()))
+            emit_overlap_rows(f"fig5/{model}/{name}", t)
 
     # Fig 6: CP×EP folding across the pod boundary (multi-pod): folded keeps
     # EP intra-pod; unfolded EP group spans pods → DCI.

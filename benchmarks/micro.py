@@ -40,6 +40,15 @@ def main() -> None:
     emit("micro/dispatcher_ragged_einsum_ep8_T512_D64",
          timeit(f, x, wg, w1, w2, w3),
          "folded EP8; ragged A2A-V (count exchange + packed streams)")
+    # Chunked overlap ladder (core/overlap.py). On CPU the async-collective
+    # win doesn't exist — this row tracks the ladder's op-count overhead
+    # (2x smaller exchanges + merge); the latency win is a TPU quantity,
+    # bounded analytically by the fig5 overlapC rows.
+    f = jax.jit(lambda *a: moe_ffn(*a, mcfg, fm, permute_mode="sort",
+                                   overlap_chunks=2)[0])
+    emit("micro/dispatcher_sort_overlap2_ep8_T512_D64",
+         timeit(f, x, wg, w1, w2, w3),
+         "folded EP8; chunked A2A<->GMM ladder, C=2")
 
     # Ragged-vs-padded EP A2A communication volume, dropless, on a routing
     # skewed onto one hot expert (the regime where uniform capacity padding

@@ -72,6 +72,9 @@ def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
             n_experts=min(cfg.moe.n_experts, 4),
             top_k=min(cfg.moe.top_k, 2),
             d_expert=min(cfg.moe.d_expert, 256),
+            d_shared_expert=(min(cfg.moe.shared_expert_width, 256)
+                             if cfg.moe.n_shared_experts else 0),
+            n_shared_experts=min(cfg.moe.n_shared_experts, 1),
         )
     changes.update(overrides)
     return dataclasses.replace(cfg, **changes)

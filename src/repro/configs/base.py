@@ -51,6 +51,25 @@ class MoEConfig:
     # still use the full-precision softmax.
     deterministic_router: bool = False
     router_quantum: float = 2.0 ** -10
+    # Chunked A2A↔GMM software pipelining (core/overlap.py): split the
+    # per-rank token stream into this many contiguous chunks and
+    # double-buffer them through dispatch-A2A → expert GMM → combine-A2A,
+    # so one chunk's EP exchange is in flight while the previous chunk's
+    # expert compute runs. 1 = today's monolithic exchange. Routing, drop
+    # priority, and aux losses are computed on the unchunked stream, so any
+    # chunk count is numerically identical (tests/test_overlap.py).
+    overlap_chunks: int = 1
+    # Shared experts (DeepSeek/Qwen2-MoE style): dense expert(s) applied to
+    # every token alongside the routed ones. Scheduled *concurrently* with
+    # the routed dispatch inside the overlap ladder — dense FLOPs with no
+    # dependency on any EP collective. 0 = none.
+    n_shared_experts: int = 0
+    # Per-shared-expert FFN hidden size; 0 = d_expert.
+    d_shared_expert: int = 0
+    # Qwen2-MoE gates the shared-expert output per token with
+    # sigmoid(x @ w_gate) before adding it to the routed output; DeepSeek's
+    # variant adds it ungated. False = ungated.
+    shared_expert_gate: bool = False
 
     def __post_init__(self):
         if self.permute_mode not in ("scatter", "sort"):
@@ -61,6 +80,25 @@ class MoEConfig:
                              "ragged exchange ships)")
         if self.router_quantum <= 0:
             raise ValueError("router_quantum must be > 0")
+        if self.overlap_chunks < 1:
+            raise ValueError(
+                f"overlap_chunks must be >= 1, got {self.overlap_chunks}")
+        if self.overlap_chunks > 1 and self.drop_policy == "full_sequence":
+            raise ValueError(
+                "overlap_chunks > 1 is not supported with "
+                "drop_policy='full_sequence' — the gathered-logit drop "
+                "decision is whole-sequence, so there is no per-chunk "
+                "exchange to pipeline; use sub_sequence dropping")
+        if self.n_shared_experts < 0 or self.d_shared_expert < 0:
+            raise ValueError("n_shared_experts/d_shared_expert must be >= 0")
+        if self.shared_expert_gate and not self.n_shared_experts:
+            raise ValueError("shared_expert_gate requires n_shared_experts "
+                             ">= 1")
+
+    @property
+    def shared_expert_width(self) -> int:
+        """Total shared-expert FFN hidden size (0 = no shared experts)."""
+        return self.n_shared_experts * (self.d_shared_expert or self.d_expert)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,6 +194,7 @@ class ModelConfig:
                 assert self.moe is not None
                 e = self.moe
                 total += attn + e.n_experts * (n_act * d * e.d_expert) + d * e.n_experts
+                total += n_act * d * e.shared_expert_width
             elif kind == "dense":
                 total += attn + dense_ffn
             elif kind == "mamba2":

@@ -12,6 +12,9 @@ CONFIG = ModelConfig(
     vocab_size=32768,
     activation="swiglu",
     rope_theta=1_000_000.0,
-    moe=MoEConfig(n_experts=8, top_k=2, d_expert=16384),
+    # overlap_chunks=2: chunked A2A↔GMM software pipelining (core/overlap.py)
+    # — the paper's MFU target assumes the EP exchange is not serialized
+    # against expert compute.
+    moe=MoEConfig(n_experts=8, top_k=2, d_expert=16384, overlap_chunks=2),
     citation="mistral.ai/news/mixtral-8x22b (paper Table 1)",
 )

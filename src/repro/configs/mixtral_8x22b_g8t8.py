@@ -16,6 +16,6 @@ CONFIG = ModelConfig(
     vocab_size=32768,
     activation="swiglu",
     rope_theta=1_000_000.0,
-    moe=MoEConfig(n_experts=64, top_k=8, d_expert=2048),
+    moe=MoEConfig(n_experts=64, top_k=8, d_expert=2048, overlap_chunks=2),
     citation="paper §4.1 (fine-grained upcycling of Mixtral 8x22B)",
 )

@@ -13,6 +13,13 @@ CONFIG = ModelConfig(
     qkv_bias=True,
     activation="swiglu",
     rope_theta=1_000_000.0,
-    moe=MoEConfig(n_experts=64, top_k=8, d_expert=2560),
+    # Qwen2-MoE pairs the routed experts with one always-on shared expert
+    # (shared_expert_intermediate_size = 20480 = 8 x 2560) whose output is
+    # gated per token by sigmoid(x @ shared_expert_gate); scheduled
+    # concurrently with the EP dispatch by the overlap ladder
+    # (core/overlap.py, overlap_chunks=2).
+    moe=MoEConfig(n_experts=64, top_k=8, d_expert=2560,
+                  n_shared_experts=1, d_shared_expert=20480,
+                  shared_expert_gate=True, overlap_chunks=2),
     citation="arXiv:2407.10671 (paper Table 1)",
 )

@@ -50,6 +50,20 @@ via ``repro.compat`` otherwise), the ETP AllGather-V/ReduceScatter-V move
 the packed streams plus their size matrices, and the return All-to-All-V
 lands rows back at each source's packed offsets. Combine outputs are
 bitwise-identical to the padded sort path (tests/test_dispatcher_ragged.py).
+
+**Chunked overlap** (``MoEConfig.overlap_chunks`` / ``overlap_chunks=``,
+docs/dispatcher.md 'Overlap pipeline'): steps 1b–7a run per contiguous
+*token chunk* through the double-buffered ladder of
+:func:`repro.core.overlap.software_pipeline` — chunk ``i+1``'s dispatch
+All-to-All-V is issued before chunk ``i``'s expert GMM in program order, so
+the EP exchange of one chunk overlaps the expert compute of the previous
+one, for *both* exchange protocols (padded and ragged) and both permute
+layouts. Routing, drop decisions, and aux losses are computed once on the
+unchunked stream (step 1 is chunk-invisible), per-chunk results are merged
+back in natural token order, and outputs are bitwise-identical to the
+monolithic exchange (tests/test_overlap.py). Shared experts
+(``MoEConfig.n_shared_experts``) are dense-FFN'd on the full local stream
+concurrently with the first chunk's dispatch rather than after the combine.
 """
 from __future__ import annotations
 
@@ -64,8 +78,11 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import ragged_all_to_all, shard_map
 from repro.configs.base import MoEConfig
 from repro.core.folding import FoldedMesh
-from repro.core.router import (capacity_per_expert, dropless_bucket_capacity,
-                               resolved_capacity, route, sorted_dispatch)
+from repro.core.overlap import chunk_spans, resolve_chunks, software_pipeline
+from repro.core.router import (capacity_per_expert, chunk_expert_offsets,
+                               chunked_sorted_dispatch,
+                               dropless_bucket_capacity, resolved_capacity,
+                               route)
 from repro.models.common import activation as act_fn
 
 Array = jax.Array
@@ -82,6 +99,50 @@ def _expert_ffn_einsum(xe: Array, w1: Array, w2: Array, w3: Array,
 
 def _round_up(n: int, m: int) -> int:
     return -(-n // m) * m
+
+
+def _shared_expert_ffn(x_l: Array, shared_l: Tuple[Array, ...],
+                       edp_axes: Tuple[str, ...], etp_axes: Tuple[str, ...],
+                       activation: str) -> Array:
+    """Dense shared-expert FFN over the full local token stream → fp32 (t, D).
+
+    ``shared_l`` is ``(ws1, ws2, ws3)`` plus an optional fourth ``(D, 1)``
+    gate: with it, the output is scaled per token by
+    ``sigmoid(x @ gate)`` (Qwen2-MoE); without, it is added ungated
+    (DeepSeek variant). Weights arrive ETP-sharded on the FFN dim and
+    EDP(FSDP)-sharded on d_model; the EDP gather mirrors the routed
+    experts' (bf16 AG forward / bf16 RS of grads backward) and the ETP
+    partial sums reduce with one psum. No data dependency on any routed
+    collective — the overlap ladder issues this right after the first
+    chunk's dispatch, so it runs under the EP All-to-All instead of after
+    the combine.
+    """
+    ws1, ws2, ws3 = shared_l[:3]
+    wsg = shared_l[3] if len(shared_l) > 3 else None
+    if edp_axes:
+        ws1 = jax.lax.all_gather(ws1, edp_axes, axis=0, tiled=True)
+        ws3 = jax.lax.all_gather(ws3, edp_axes, axis=0, tiled=True)
+        ws2 = jax.lax.all_gather(ws2, edp_axes, axis=1, tiled=True)
+    # ETP members hold different tokens AND different FFN columns (the
+    # token dim is sharded over EDP×EP×ETP): AllGather the group's tokens,
+    # compute the local column block, ReduceScatter the partial sums back —
+    # the dense mirror of the routed path's AllGather-V/ReduceScatter-V.
+    xg = x_l
+    if etp_axes:
+        xg = jax.lax.all_gather(x_l, etp_axes, axis=0, tiled=True)
+    gate = jnp.einsum("td,df->tf", xg, ws1.astype(x_l.dtype))
+    up = jnp.einsum("td,df->tf", xg, ws3.astype(x_l.dtype))
+    h = act_fn(activation, gate, up)
+    y = jnp.einsum("tf,fd->td", h, ws2.astype(x_l.dtype)).astype(jnp.float32)
+    if wsg is not None:
+        # Per-token scalar gate distributes over the ETP partial sums, so
+        # it can apply before the reduce-scatter.
+        g = jax.nn.sigmoid(jnp.einsum("td,dg->tg", xg.astype(jnp.float32),
+                                      wsg.astype(jnp.float32)))
+        y = y * g
+    if etp_axes:
+        y = jax.lax.psum_scatter(y, etp_axes, scatter_dimension=0, tiled=True)
+    return y
 
 
 def _token_shards(x: Array, fm: FoldedMesh, *, token_pad_ok: bool = True
@@ -256,6 +317,8 @@ def moe_ffn(
     permute_mode: Optional[str] = None,
     capacity_hint: Optional[int] = None,
     ragged: Optional[bool] = None,
+    overlap_chunks: Optional[int] = None,
+    shared_weights: Optional[Tuple[Array, ...]] = None,
     token_pad_ok: bool = True,
 ) -> Tuple[Array, Dict[str, Array]]:
     """Apply the MoE FFN to a flat batch of tokens.
@@ -282,12 +345,31 @@ def moe_ffn(
     All-to-All-V instead of the uniform padded buffer (docs/dispatcher.md,
     'Ragged EP exchange'). Combine outputs are bitwise-identical to the
     padded sort path.
+    ``overlap_chunks`` overrides ``mcfg.overlap_chunks``: software-pipeline
+    the exchange in that many token chunks (docs/dispatcher.md, 'Overlap
+    pipeline'); clamped to the local stream length, 1 = monolithic.
+    ``shared_weights``: optional ``(ws1, ws2, ws3[, gate])`` shared-expert
+    dense FFN weights — ``(D, Fs)/(Fs, D)/(D, Fs)``, ETP-sharded on Fs,
+    EDP-sharded on D like the routed experts, plus an optional replicated
+    ``(D, 1)`` per-token sigmoid gate (Qwen2-MoE). Applied to every token,
+    scheduled concurrently with the routed dispatch, summed into the
+    combine output.
     """
     mode = permute_mode if permute_mode is not None else mcfg.permute_mode
     if mode not in ("scatter", "sort"):
         raise ValueError(f"unknown permute_mode {mode!r}")
     use_sort = mode == "sort"
     use_ragged = bool(mcfg.ragged_a2a if ragged is None else ragged)
+    n_chunks = int(mcfg.overlap_chunks if overlap_chunks is None
+                   else overlap_chunks)
+    if n_chunks < 1:
+        raise ValueError(f"overlap_chunks must be >= 1, got {n_chunks}")
+    if n_chunks > 1 and mcfg.drop_policy == "full_sequence":
+        raise ValueError(
+            "overlap_chunks > 1 is not supported with "
+            "drop_policy='full_sequence' — the gathered-logit drop decision "
+            "is whole-sequence, so there is no per-chunk exchange to "
+            "pipeline; use sub_sequence dropping")
     if use_ragged and not use_sort:
         raise ValueError("ragged A2A requires permute_mode='sort' — the "
                          "packed expert-major stream is what it ships")
@@ -334,7 +416,9 @@ def moe_ffn(
     if expert_fn is None and not use_sort:
         expert_fn = _expert_ffn_einsum
 
-    def local_fn(x_l, wg_l, w1_l, w2_l, w3_l, tmask_l):
+    def local_fn(x_l, wg_l, w1_l, w2_l, w3_l, *rest):
+        tmask_l = rest[-1]
+        shared_l = rest[:-1] or None
         # ------------------------------------------------ 0. FSDP gather (EDP)
         # Expert weights arrive EDP-sharded on the d_model dim; gather here
         # so the backward becomes a bf16 reduce-scatter of expert grads
@@ -373,18 +457,43 @@ def moe_ffn(
             capacity = cap
 
         K = mcfg.top_k
-        cap_pad = _round_up(capacity, span_block)
-        flat_e = r.expert_idx.reshape(-1)                                   # (t*K,)
         keep_flat = r.keep.reshape(-1)
-        sd = (sorted_dispatch(r.expert_idx, r.keep, E, ep=ep)
-              if use_sort else None)
+        t_l = x_l.shape[0]
+        # ---------------------------------- 1b. static chunk partition
+        # Routing (step 1) saw the whole stream; the exchange below is
+        # pipelined over contiguous token chunks (core/overlap.py). A chunk
+        # of n_c tokens can contribute at most n_c rows to one expert
+        # (top-k experts are distinct) and never more than the unchunked
+        # capacity, so min(capacity, n_c) holds every kept assignment;
+        # C == 1 keeps the unchunked capacity verbatim.
+        C = resolve_chunks(t_l, n_chunks)
+        spans = chunk_spans(t_l, C)
+        caps = tuple(capacity if C == 1 else min(capacity, s)
+                     for _, s in spans)
+        cap_pads = tuple(_round_up(cc, span_block) for cc in caps)
+        sds = (chunked_sorted_dispatch(r.expert_idx, r.keep, E, spans, ep=ep)
+               if use_sort else None)
+        # Scatter layout: rebase each assignment's global arrival rank to
+        # its chunk (arrivals in earlier chunks subtracted).
+        rebase = (chunk_expert_offsets(r.expert_idx, E, spans, tmask_l)
+                  if (not use_sort and C > 1) else None)
+
+        def chunk_inputs(c):
+            off, n_c = spans[c]
+            x_c = jax.lax.slice_in_dim(x_l, off, off + n_c, axis=0)
+            flat_e_c = jax.lax.slice_in_dim(
+                r.expert_idx, off, off + n_c, axis=0).reshape(-1)
+            keep_c = jax.lax.slice_in_dim(
+                r.keep, off, off + n_c, axis=0).reshape(-1)
+            return x_c, flat_e_c, keep_c, n_c * K
 
         def expert_compute(xe):
             # ------------------------------------------ 4. expert compute
             # Shared by both exchange layouts: xe is (e_local, n_src·cap_pad,
             # D) with every bm-row block owned by one expert, so the grouped
             # matmul grid — and each row's output — is identical whether
-            # rows arrive capacity-strided (padded) or packed (ragged).
+            # rows arrive capacity-strided (padded) or packed (ragged), and
+            # whether the buffer holds one chunk or the whole stream.
             if default_gmm:
                 from repro.kernels.gmm.ops import (expert_ffn_gmm,
                                                    uniform_block_expert)
@@ -395,17 +504,18 @@ def moe_ffn(
                 return expert_ffn_gmm(xe, w1_l, w2_l, w3_l, activation)
             return expert_fn(xe, w1_l, w2_l, w3_l, activation)
 
-        def ragged_exchange():
-            # Steps 2–6 on *packed* ragged streams: ship only the routed
-            # rows, not the (E, capacity) padded buffer. Protocol in
+        def ragged_dispatch(c):
+            # Steps 1c–3b on chunk c's *packed* ragged stream: ship only the
+            # routed rows, not the (E, capacity) padded buffer. Protocol in
             # docs/dispatcher.md ('Ragged EP exchange').
-            L = flat_e.shape[0]
+            x_c, flat_e_c, keep_c, L = chunk_inputs(c)
+            sd, cap_pad = sds[c], cap_pads[c]
             n_kept = jnp.sum(sd.group_sizes)
             lane = jnp.arange(L, dtype=jnp.int32)
-            # 1b. packed send stream: kept assignments, expert-major — and
+            # 1c. packed send stream: kept assignments, expert-major — and
             # experts are EP-rank-major, so per-destination slices are
             # contiguous at (sd.rank_offsets, sd.rank_counts).
-            send = jnp.where((lane < n_kept)[:, None], x_l[sd.perm // K],
+            send = jnp.where((lane < n_kept)[:, None], x_c[sd.perm // K],
                              0).astype(x_l.dtype)
             # 2a. count exchange over the EP atom tuple: every rank's
             # per-expert routed sizes (E int32 each — the "-V" metadata).
@@ -421,9 +531,10 @@ def moe_ffn(
             # at dst d after every source before me: Σ_{s<my} to_rank[s, d].
             out_off = (jnp.cumsum(to_rank, axis=0) - to_rank)[my]  # (ep,)
             # 2b. ragged All-to-All-V. Static recv bucket per source: a
-            # source cannot send me more than its whole stream (L) nor more
-            # than cap_pad per expert — the same bucket set the padded
-            # buffer uses (dropless_bucket_capacity via capacity_hint).
+            # source cannot send me more than its whole chunk stream (L)
+            # nor more than cap_pad per expert — the same bucket set the
+            # padded buffer uses (dropless_bucket_capacity via
+            # capacity_hint).
             r_src = min(L, e_local * cap_pad)
             recv = jnp.zeros((ep * r_src, D), x_l.dtype)
             recv = ragged_all_to_all(send, recv, sd.rank_offsets,
@@ -466,56 +577,70 @@ def moe_ffn(
             valid = j[None, :] < tot_e[:, None]
             xe = jnp.where(valid[..., None],
                            recv[jnp.clip(src_row, 0, n_rows - 1)], 0)
-            ye = expert_compute(xe)
+            return dict(xe=xe, sd=sd, L=L, r_src=r_src, my=my,
+                        valid=valid, src_row=src_row, n_rows=n_rows,
+                        recv_off=recv_off, recv_sizes=recv_sizes,
+                        to_rank=to_rank)
+
+        def ragged_combine(c, st, ye):
             # 5. ReduceScatter-V (ETP): scatter partial sums back into the
             # per-member packed streams, then reduce-scatter my block.
-            pos = jnp.where(valid, src_row, n_rows)               # OOB = pad row
-            y_rows = jnp.zeros((n_rows, D), ye.dtype)
+            sd = st["sd"]
+            pos = jnp.where(st["valid"], st["src_row"], st["n_rows"])
+            y_rows = jnp.zeros((st["n_rows"], D), ye.dtype)
             y_rows = y_rows.at[pos.reshape(-1)].set(
-                ye.reshape(e_local * span, D), mode="drop")
+                ye.reshape(-1, D), mode="drop")
             if etp > 1:
                 y_rows = jax.lax.psum_scatter(
-                    y_rows.reshape(etp, ep * r_src, D), etp_axes,
+                    y_rows.reshape(etp, ep * st["r_src"], D), etp_axes,
                     scatter_dimension=0, tiled=False)             # (ep·r_src, D)
             # 6. return All-to-All-V: roles swap — my received spans go back
             # to their sources, landing at each source's original packed
             # offset for me (its rank_offsets[my], known from the counts).
-            back_off = (jnp.cumsum(to_rank, axis=1) - to_rank)[:, my]
-            y_stream = jnp.zeros((L, D), ye.dtype)
-            y_stream = ragged_all_to_all(y_rows, y_stream, recv_off,
-                                         recv_sizes, back_off, sd.rank_counts,
-                                         axis_name=ep_axes, max_send=r_src)
+            back_off = (jnp.cumsum(st["to_rank"], axis=1)
+                        - st["to_rank"])[:, st["my"]]
+            y_stream = jnp.zeros((st["L"], D), ye.dtype)
+            y_stream = ragged_all_to_all(y_rows, y_stream, st["recv_off"],
+                                         st["recv_sizes"], back_off,
+                                         sd.rank_counts,
+                                         axis_name=ep_axes,
+                                         max_send=st["r_src"])
             # 7a. un-permute: assignment a sits at packed position
             # inv_perm[a]; dropped assignments point past n_kept where the
             # stream is zero (and their combine weight is zero anyway).
-            return y_stream[jnp.minimum(sd.inv_perm, L - 1)]      # (t·K, D)
+            return y_stream[jnp.minimum(sd.inv_perm, st["L"] - 1)]  # (t_c·K, D)
 
-        if use_ragged and ep > 1:
-            gath = ragged_exchange()
-        else:
+        def padded_dispatch(c):
+            x_c, flat_e_c, keep_c, L = chunk_inputs(c)
+            cap_pad = cap_pads[c]
             if use_sort:
                 # Stable sort by expert id → group-contiguous rows, drops
                 # last. Buffer rows are gathered (not scatter-added): row
                 # e*cap_pad + p holds the p-th kept assignment of expert e
                 # in token order.
-                L = flat_e.shape[0]
+                sd = sds[c]
                 row = jnp.arange(E * cap_pad, dtype=jnp.int32)
                 e_of = row // cap_pad
                 p_of = row % cap_pad
                 valid = p_of < sd.group_sizes[e_of]
                 src_sorted = jnp.minimum(sd.group_offsets[e_of] + p_of, L - 1)
                 src_tok = sd.perm[src_sorted] // K
-                buf = jnp.where(valid[:, None], x_l[src_tok], 0).astype(x_l.dtype)
+                buf = jnp.where(valid[:, None], x_c[src_tok], 0).astype(x_l.dtype)
                 # Combine index: each kept assignment's span position is its
                 # sorted-stream position minus its expert's group offset.
-                span_pos = sd.inv_perm - sd.group_offsets[flat_e]
-                idx_flat = flat_e * cap_pad + span_pos
+                span_pos = sd.inv_perm - sd.group_offsets[flat_e_c]
+                idx_flat = flat_e_c * cap_pad + span_pos
             else:
-                idx_flat = flat_e * cap_pad + r.pos_in_expert.reshape(-1)
-            idx_flat = jnp.where(keep_flat, idx_flat, E * cap_pad)         # OOB = drop
+                off, n_c = spans[c]
+                pos_c = jax.lax.slice_in_dim(
+                    r.pos_in_expert, off, off + n_c, axis=0).reshape(-1)
+                if rebase is not None:
+                    pos_c = pos_c - rebase[c][flat_e_c]
+                idx_flat = flat_e_c * cap_pad + pos_c
+            idx_flat = jnp.where(keep_c, idx_flat, E * cap_pad)            # OOB = drop
             if not use_sort:
                 buf = jnp.zeros((E * cap_pad, D), x_l.dtype)
-                src = jnp.repeat(x_l, K, axis=0)                           # (t*K, D)
+                src = jnp.repeat(x_c, K, axis=0)                           # (t_c*K, D)
                 buf = buf.at[idx_flat].add(src, mode="drop")
             buf = buf.reshape(ep, e_local, cap_pad, D)
 
@@ -533,10 +658,12 @@ def moe_ffn(
 
             n_src = buf.shape[0]
             xe = buf.transpose(1, 0, 2, 3).reshape(e_local, n_src * cap_pad, D)
+            return dict(xe=xe, idx=idx_flat, n_src=n_src)
 
-            ye = expert_compute(xe)
-
-            yb = ye.reshape(e_local, n_src, cap_pad, D).transpose(1, 0, 2, 3)
+        def padded_combine(c, st, ye):
+            cap_pad = cap_pads[c]
+            yb = ye.reshape(e_local, st["n_src"], cap_pad,
+                            D).transpose(1, 0, 2, 3)
 
             # -------------------------------------------- 5. ReduceScatter-V (ETP)
             if etp > 1:
@@ -553,12 +680,38 @@ def moe_ffn(
 
             # -------------------------------------------- 7a. un-permute
             out_flat = yb.reshape(E * cap_pad, D)
-            safe_idx = jnp.minimum(idx_flat, E * cap_pad - 1)
-            gath = out_flat[safe_idx]                                       # (t*K, D)
+            safe_idx = jnp.minimum(st["idx"], E * cap_pad - 1)
+            return out_flat[safe_idx]                             # (t_c*K, D)
+
+        # ------------------------------------- the double-buffered ladder
+        ragged_path = use_ragged and ep > 1
+        dispatch = ragged_dispatch if ragged_path else padded_dispatch
+        combiner = ragged_combine if ragged_path else padded_combine
+
+        def compute_fn(c, st):
+            return st, expert_compute(st["xe"])
+
+        def combine_fn(c, st_ye):
+            return combiner(c, st_ye[0], st_ye[1])
+
+        shared_fn = None
+        if shared_l is not None:
+            def shared_fn():
+                return _shared_expert_ffn(x_l, shared_l, edp_axes, etp_axes,
+                                          activation)
+
+        gath_chunks, y_shared = software_pipeline(
+            C, dispatch, compute_fn, combine_fn, concurrent=shared_fn)
+        # Chunks are contiguous token spans, so chunk-order concatenation
+        # IS the natural assignment order (t·K rows).
+        gath = gath_chunks[0] if C == 1 else jnp.concatenate(gath_chunks,
+                                                             axis=0)
 
         # ------------------------------------------------ 7b. top-k combine
         w = (r.combine_w.reshape(-1) * keep_flat).astype(jnp.float32)
         y = (gath.astype(jnp.float32) * w[:, None]).reshape(-1, K, D).sum(axis=1)
+        if y_shared is not None:
+            y = y + y_shared
         y = y.astype(x_l.dtype)
 
         # ------------------------------------------------ aux statistics
@@ -579,20 +732,38 @@ def moe_ffn(
     tok_spec = P(token_axes or None, None)
     mask = jnp.arange(T_pad) < T                                            # padding mask
     edp_or = edp_axes or None
+    args = [x, wg, w1, w2, w3]
+    in_specs = [
+        tok_spec,                                       # x
+        P(None, None),                                  # wg replicated
+        P(ep_axes or None, edp_or, etp_axes or None),   # w1 (E, D/edp, F)
+        P(ep_axes or None, etp_axes or None, edp_or),   # w2 (E, F, D/edp)
+        P(ep_axes or None, edp_or, etp_axes or None),   # w3
+    ]
+    if shared_weights is not None:
+        ws1, ws2, ws3 = shared_weights[:3]
+        if etp > 1 and ws1.shape[1] % etp:
+            raise ValueError(
+                f"shared-expert width {ws1.shape[1]} not divisible by "
+                f"ETP {etp}")
+        args += [ws1, ws2, ws3]
+        in_specs += [
+            P(edp_or, etp_axes or None),                # ws1 (D/edp, Fs/etp)
+            P(etp_axes or None, edp_or),                # ws2 (Fs/etp, D/edp)
+            P(edp_or, etp_axes or None),                # ws3
+        ]
+        if len(shared_weights) > 3:
+            args.append(shared_weights[3])              # sigmoid gate (D, 1)
+            in_specs.append(P(None, None))
+    args.append(mask)
+    in_specs.append(P(token_axes or None))              # token mask
     fn = shard_map(
         local_fn,
         mesh=mesh,
-        in_specs=(
-            tok_spec,                                   # x
-            P(None, None),                              # wg replicated
-            P(ep_axes or None, edp_or, etp_axes or None),   # w1 (E, D/edp, F)
-            P(ep_axes or None, etp_axes or None, edp_or),   # w2 (E, F, D/edp)
-            P(ep_axes or None, edp_or, etp_axes or None),   # w3
-            P(token_axes or None),                      # token mask
-        ),
+        in_specs=tuple(in_specs),
         out_specs=(tok_spec, P(), P(), P()),
     )
-    y, aux, zl, dropf = fn(x, wg, w1, w2, w3, mask)
+    y, aux, zl, dropf = fn(*args)
     if pad:
         y = y[:T]
     return y, {"moe_aux_loss": aux, "moe_z_loss": zl, "moe_drop_fraction": dropf}

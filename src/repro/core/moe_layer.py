@@ -25,7 +25,7 @@ def init_moe(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
     assert cfg.moe is not None
     e = cfg.moe
     ks = jax.random.split(key, 4)
-    return {
+    p = {
         "router": dense_init(ks[0], cfg.d_model, e.n_experts, scale=0.02, dtype=jnp.float32),
         "experts": {
             "w1": dense_init(ks[1], cfg.d_model, e.n_experts * e.d_expert,
@@ -40,18 +40,36 @@ def init_moe(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
                   .transpose(1, 0, 2),
         },
     }
+    if e.shared_expert_width:
+        fs = e.shared_expert_width
+        # fold_in (not a wider split) so models without shared experts
+        # initialize bitwise-identically to before this feature existed.
+        kss = jax.random.split(jax.random.fold_in(key, 101), 4)
+        p["shared"] = {
+            "w1": dense_init(kss[0], cfg.d_model, fs, dtype=dtype),
+            "w3": dense_init(kss[1], cfg.d_model, fs, dtype=dtype),
+            "w2": dense_init(kss[2], fs, cfg.d_model, scale=fs ** -0.5,
+                             dtype=dtype),
+        }
+        if e.shared_expert_gate:
+            # Qwen2-MoE per-token sigmoid gate on the shared output.
+            p["shared"]["gate"] = dense_init(kss[3], cfg.d_model, 1,
+                                             scale=0.02, dtype=jnp.float32)
+    return p
 
 
 def moe_block(p: Dict, x: Array, cfg: ModelConfig, fm: FoldedMesh, *,
               permute_mode: Optional[str] = None,
               capacity_hint: Optional[int] = None,
               ragged: Optional[bool] = None,
+              overlap_chunks: Optional[int] = None,
               ) -> Tuple[Array, Dict[str, Array]]:
     """x: (B, S, D) sharded (dp, cp×tp, -) → same, plus aux losses.
 
-    ``permute_mode``/``capacity_hint``/``ragged`` override
-    ``cfg.moe.permute_mode``, (sort + dropless) the static bucketed
-    capacity, and ``cfg.moe.ragged_a2a`` — see
+    ``permute_mode``/``capacity_hint``/``ragged``/``overlap_chunks``
+    override ``cfg.moe.permute_mode``, (sort + dropless) the static
+    bucketed capacity, ``cfg.moe.ragged_a2a``, and
+    ``cfg.moe.overlap_chunks`` — see
     :func:`repro.core.dispatcher.moe_ffn`.
     """
     assert cfg.moe is not None
@@ -66,8 +84,20 @@ def moe_block(p: Dict, x: Array, cfg: ModelConfig, fm: FoldedMesh, *,
     w3 = constrain(p["experts"]["w3"], fm, "moe", "ep", "edp", "etp")
     w2 = constrain(p["experts"]["w2"], fm, "moe", "ep", "etp", "edp")
 
+    shared = None
+    if "shared" in p:
+        # Same at-rest layout as the routed experts: FSDP on d_model
+        # (gathered inside the dispatcher's shard_map), ETP on the FFN dim.
+        # The (D, 1) sigmoid gate is tiny and stays replicated.
+        shared = (constrain(p["shared"]["w1"], fm, "moe", "edp", "etp"),
+                  constrain(p["shared"]["w2"], fm, "moe", "etp", "edp"),
+                  constrain(p["shared"]["w3"], fm, "moe", "edp", "etp"))
+        if "gate" in p["shared"]:
+            shared = shared + (p["shared"]["gate"],)
+
     y, aux = moe_ffn(xt, p["router"], w1, w2, w3, cfg.moe, fm,
                      activation=cfg.activation, permute_mode=permute_mode,
-                     capacity_hint=capacity_hint, ragged=ragged)
+                     capacity_hint=capacity_hint, ragged=ragged,
+                     overlap_chunks=overlap_chunks, shared_weights=shared)
     y = y.reshape(B, S, D)
     return constrain(y, fm, "attn", "dp", ("cp", "tp"), None), aux

@@ -8,7 +8,7 @@ implemented in the dispatcher by gathering logits first.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -223,6 +223,52 @@ def sorted_dispatch(expert_idx: Array, keep: Array, n_experts: int,
                           group_sizes=group_sizes.astype(jnp.int32),
                           group_offsets=group_offsets.astype(jnp.int32),
                           rank_counts=rank_counts, rank_offsets=rank_offsets)
+
+
+def chunked_sorted_dispatch(expert_idx: Array, keep: Array, n_experts: int,
+                            spans: Sequence[Tuple[int, int]],
+                            *, ep: Optional[int] = None
+                            ) -> Tuple["SortedDispatch", ...]:
+    """Per-chunk :func:`sorted_dispatch` metadata for the overlap ladder.
+
+    ``spans``: static ``(offset, size)`` token spans from
+    :func:`repro.core.overlap.chunk_spans`. Each chunk's assignments are
+    the token slice's rows of ``expert_idx``/``keep`` — routing (and hence
+    ``keep``/drop priority) was decided on the *unchunked* stream, so the
+    chunking only partitions the already-kept assignments:
+
+    * per-chunk ``group_sizes`` (and, with ``ep``, ``rank_counts``) sum
+      over chunks to the unchunked values;
+    * concatenating the chunks' packed streams in chunk order enumerates
+      exactly the unchunked kept assignments (token order within each
+      expert is preserved per chunk).
+
+    Verified by the hypothesis sweep in ``tests/test_property_hypothesis.py``.
+    """
+    return tuple(
+        sorted_dispatch(expert_idx[o:o + s], keep[o:o + s], n_experts, ep=ep)
+        for o, s in spans)
+
+
+def chunk_expert_offsets(expert_idx: Array, n_experts: int,
+                         spans: Sequence[Tuple[int, int]],
+                         token_mask: Optional[Array] = None) -> Array:
+    """Routed arrivals per expert strictly *before* each chunk: (C, E) int32.
+
+    The scatter permute layout places each assignment at its global arrival
+    rank (:attr:`RouterOutput.pos_in_expert`, which counts every routed
+    arrival, masked tokens excluded). A chunk's local buffer position is
+    that global rank minus the arrivals in earlier chunks — this is the
+    per-chunk rebasing that keeps the chunked scatter layout bitwise
+    identical to the monolithic one.
+    """
+    oh = jax.nn.one_hot(expert_idx, n_experts, dtype=jnp.int32)   # (t, K, E)
+    if token_mask is not None:
+        oh = oh * token_mask.astype(jnp.int32)[:, None, None]
+    per_tok = jnp.sum(oh, axis=1)                                 # (t, E)
+    cum = jnp.cumsum(per_tok, axis=0)
+    zero = jnp.zeros((n_experts,), jnp.int32)
+    return jnp.stack([zero if o == 0 else cum[o - 1] for o, _ in spans])
 
 
 def padded_group_spans(group_sizes: Array, bm: int) -> Tuple[Array, Array]:

@@ -17,11 +17,27 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--pp", type=int, default=1)
+    ap.add_argument("--vpp", type=int, default=1)
     args = ap.parse_args()
 
     if not args.reduced:
         from repro.launch.dryrun import run_pair
-        run_pair(args.arch, args.shape, multi_pod=args.multi_pod)
+        from repro.launch.mappings import pcfg_for
+        pcfg = pcfg_for(args.arch, args.shape, multi_pod=args.multi_pod,
+                        pp=args.pp, vpp=args.vpp)
+        if pcfg.pipeline_stages > 1 or pcfg.vpp > 1:
+            # Reject before lowering: serve/decode has no pipeline executor
+            # (repro.serve.engine.reject_pipelined_mapping has the full
+            # story); without this check the mapping used to mis-shard the
+            # decode scan silently.
+            raise SystemExit(
+                f"serve: mapping for ({args.arch!r}, {args.shape!r}) has "
+                f"pp={pcfg.pp}, vpp={pcfg.vpp} "
+                f"(pipeline_stages={pcfg.pipeline_stages}) — the "
+                "serve/decode path supports pp=1/vpp=1 only; drop "
+                "--pp/--vpp or pick a pp=1 mapping")
+        run_pair(args.arch, args.shape, multi_pod=args.multi_pod, pcfg=pcfg)
         return
 
     import os

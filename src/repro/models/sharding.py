@@ -36,6 +36,11 @@ RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
     (r"router$",                (None, None)),         # (D, E) tiny, replicated
     (r"experts/w[13]$",         ("ep", "efsdp", "etp")),  # (E, D, F)
     (r"experts/w2$",            ("ep", "etp", "efsdp")),  # (E, F, D)
+    # Shared experts (dense, every token): FSDP on d_model like the routed
+    # experts, ETP on the FFN dim. The `moe/` prefix keeps Zamba2's shared
+    # *attention* block (`shared/attn/...`, `shared/mlp/...`) unaffected.
+    (r"moe/shared/w[13]$",      ("efsdp", "etp")),        # (D, Fs)
+    (r"moe/shared/w2$",         ("etp", "efsdp")),        # (Fs, D)
     (r"lm_head$",               ("fsdp", "tp")),       # (D, V)
     # SSM / xLSTM weights: input-dim FSDP, inner-dim TP.
     (r"(w_in|w_x|w_z|w_bc|w_dt|wi|wf|wo_gate|w_qkv_lstm)$", ("fsdp", "tp")),

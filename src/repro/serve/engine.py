@@ -30,6 +30,28 @@ from repro.models.transformer import (apply_lm, decode_step, init_decode_state,
 Array = jax.Array
 
 
+def reject_pipelined_mapping(fm: FoldedMesh, what: str) -> None:
+    """Serve/decode paths are pp=1/vpp=1 only (ROADMAP item (c)).
+
+    The trace-time 1F1B executor exists for training only; under pp>1 the
+    decoder cycle params are stored pp-sharded on the layer-stack dim, so
+    the decode scan would silently mis-shard (every rank gathering other
+    stages' layers through GSPMD instead of a pipeline schedule). Fail
+    loudly, naming the constraint, instead of producing a wrong-but-running
+    program.
+    """
+    pc = fm.pcfg
+    if pc.pipeline_stages > 1 or pc.vpp > 1:
+        raise ValueError(
+            f"{what} supports pp=1/vpp=1 mappings only, got pp={pc.pp}, "
+            f"vpp={pc.vpp}, pods={pc.pods} (pod_role={pc.pod_role!r} → "
+            f"{pc.pipeline_stages} pipeline stages). The serve/decode path "
+            "has no pipeline executor: cycle params are stored pp-sharded "
+            "on the layer-stack dim and would mis-shard the decode scan. "
+            "Use a pp=1 mapping for serving (fold the freed factor into "
+            "DP/CP), or train-side entry points for pipelined mappings.")
+
+
 def cache_len_for(cfg: ModelConfig, seq_len: int) -> int:
     """KV slots needed to serve ``seq_len`` context.
 
@@ -42,6 +64,8 @@ def cache_len_for(cfg: ModelConfig, seq_len: int) -> int:
 
 
 def make_prefill_step(cfg: ModelConfig, fm: FoldedMesh):
+    reject_pipelined_mapping(fm, "make_prefill_step")
+
     def prefill(params, batch):
         cparams = jax.tree.map(
             lambda p: p.astype(jnp.bfloat16)
@@ -52,6 +76,8 @@ def make_prefill_step(cfg: ModelConfig, fm: FoldedMesh):
 
 
 def make_serve_step(cfg: ModelConfig, fm: FoldedMesh):
+    reject_pipelined_mapping(fm, "make_serve_step")
+
     def serve(params, state, tokens):
         cparams = jax.tree.map(
             lambda p: p.astype(jnp.bfloat16)
@@ -113,6 +139,7 @@ class ServeSession:
     _step_fn: object = None
 
     def __post_init__(self):
+        reject_pipelined_mapping(self.fm, "ServeSession")
         if self.state is None:
             self.state = init_decode_state(self.cfg, self.fm, self.batch,
                                            self.s_max)

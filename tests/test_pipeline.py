@@ -311,3 +311,85 @@ def test_pipeline_params_sharded_over_stages():
     # sharding.strip_stack_pp)
     init_sh = strip_stack_pp(sh, fm)
     assert init_sh["cycle"]["b0"]["attn"]["wq"].spec[0] is None
+
+
+# ---------------------------------------------------------------------------
+# ROADMAP (e): auto-detect when the strip_stack_pp init workaround can retire
+# ---------------------------------------------------------------------------
+
+def test_strip_stack_pp_workaround_still_needed():
+    """Version-gated retirement detector for ``sharding.strip_stack_pp``.
+
+    On jax 0.4.37, jit-initializing a model whose layer-stack dim is
+    pp-sharded is not position-pure: the MoE router leaf (replicated per
+    layer, stacked over repeats) initializes differently under the sharded
+    ``out_shardings`` than under the stripped-then-reshard workaround.
+    This test re-runs that exact experiment:
+
+    * impure (the pinned generation): the workaround is still needed —
+      the test PASSES, documenting the bug is live;
+    * pure (a future jax): the init-then-reshard detour in
+      ``train.loop.init_train_state`` can be deleted — the test XFAILS on
+      that CI leg, which is the retirement signal (ROADMAP item (e)).
+    """
+    from repro.models.sharding import param_shardings, strip_stack_pp
+    from repro.models.transformer import init_lm
+    cfg = reduced(get_config("mixtral-8x22b"), n_layers=4)
+    pcfg = ParallelConfig(attn=PM(2, 1, 2), moe=PM(1, 2, 2), pp=2)
+    fm = build_folded_mesh(pcfg)
+    shapes = jax.eval_shape(lambda k: init_lm(k, cfg), jax.random.PRNGKey(0))
+    pshard = param_shardings(shapes, fm, mode="store")
+    # Sanity: the pp fold actually shards the stack dim (else the detector
+    # would trivially report "pure").
+    assert pshard["cycle"]["b0"]["moe"]["router"].spec[0] == ("pp",)
+    key = jax.random.PRNGKey(0)
+    direct = jax.jit(lambda k: init_lm(k, cfg), out_shardings=pshard)(key)
+    stripped = jax.jit(lambda k: init_lm(k, cfg),
+                       out_shardings=strip_stack_pp(pshard, fm))(key)
+    stripped = jax.device_put(stripped, pshard)
+    diffs = [float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32))))
+             for a, b in zip(jax.tree.leaves(direct),
+                             jax.tree.leaves(stripped))]
+    if max(diffs) == 0.0:
+        pytest.xfail(
+            f"jit init with a pp-sharded layer-stack dim is position-pure "
+            f"on jax {jax.__version__} — the strip_stack_pp init-then-"
+            f"reshard workaround in train.loop.init_train_state can be "
+            f"retired (ROADMAP item (e))")
+    # The bug is live: the workaround must stay.
+    assert max(diffs) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# ROADMAP (c): pipelined mappings must not reach the serve/decode path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pcfg", [
+    ParallelConfig(attn=PM(2, 1, 2), moe=PM(2, 1, 2), pp=2),
+    ParallelConfig(attn=PM(1, 1, 2), moe=PM(1, 1, 2), pp=2, vpp=2,
+                   microbatch=2),
+    ParallelConfig(attn=PM(2, 1, 2), moe=PM(2, 1, 2), pods=2,
+                   pod_role="pp"),
+], ids=["pp2", "pp2vpp2", "pod-pp"])
+def test_serve_rejects_pipelined_mappings(pcfg):
+    """pp>1 / vpp>1 used to mis-shard the decode scan silently (cycle
+    params are stored pp-sharded); every serve entry point must raise a
+    ValueError naming the constraint instead."""
+    from repro.serve.engine import (ServeSession, make_prefill_step,
+                                    make_serve_step)
+    fm = build_folded_mesh(pcfg)
+    cfg = reduced(get_config("llama3.2-1b"))
+    with pytest.raises(ValueError, match="pp=1/vpp=1"):
+        make_serve_step(cfg, fm)
+    with pytest.raises(ValueError, match="serve/decode"):
+        make_prefill_step(cfg, fm)
+    with pytest.raises(ValueError, match="pipeline"):
+        ServeSession(cfg=cfg, fm=fm, params={}, s_max=8, batch=1)
+
+
+def test_serve_accepts_pp1_mappings():
+    """The guard must not reject plain mappings (incl. pods extending DP)."""
+    from repro.serve.engine import make_serve_step
+    fm = build_folded_mesh(ParallelConfig(attn=PM(2, 1, 2), moe=PM(2, 1, 2)))
+    make_serve_step(reduced(get_config("llama3.2-1b")), fm)

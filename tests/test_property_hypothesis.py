@@ -17,9 +17,11 @@ from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import MoEConfig
 from repro.core.folding import common_refinement
+from repro.core.overlap import chunk_spans
 from repro.core.router import (block_expert_from_group_sizes,
-                               capacity_per_expert, padded_group_spans, route,
-                               sorted_dispatch)
+                               capacity_per_expert, chunk_expert_offsets,
+                               chunked_sorted_dispatch, padded_group_spans,
+                               route, sorted_dispatch)
 from repro.roofline.analysis import _shape_bytes
 
 pow2 = st.integers(0, 4).map(lambda e: 2 ** e)
@@ -133,6 +135,81 @@ def test_sorted_permutation_metadata_invariants(t, e, k, cf, bm, seed):
             break
         ee = be[b]
         assert po[ee] <= start and start + bm <= po[ee] + ps[ee]
+
+
+@given(st.integers(4, 64), st.integers(1, 4).map(lambda e: 2 ** e),
+       st.integers(1, 4), st.integers(1, 4), st.sampled_from([None, 2, 4]),
+       st.floats(0.25, 4.0), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_overlap_chunk_partition_exact(t, e, k, n_chunks, ep, cf, seed):
+    """Chunk partitioning for the overlap ladder (ISSUE 5): for every
+    overlap_chunks ∈ {1..4} × {padded (ep=None), ragged (ep given)}:
+
+    * the static chunk spans partition the token stream exactly;
+    * per-chunk group sizes — and, on the ragged path, per-destination-rank
+      counts — sum over chunks to the unchunked dispatch's counts;
+    * concatenating the chunks' packed streams (chunk-major, each offset by
+      its span start) enumerates exactly the unchunked kept assignments, so
+      the dispatcher's chunk-order merge restores natural token order.
+    """
+    k = min(k, e)
+    if ep is not None and e % ep:
+        ep = None
+    n_chunks = min(n_chunks, t)
+    mcfg = MoEConfig(n_experts=e, top_k=k, d_expert=8, capacity_factor=cf)
+    cap = capacity_per_expert(t, mcfg)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((t, 8)), jnp.float32)
+    wg = jnp.asarray(rng.standard_normal((8, e)), jnp.float32)
+    r = route(x, wg, mcfg, capacity=cap)
+    sd = sorted_dispatch(r.expert_idx, r.keep, e, ep=ep)
+
+    spans = chunk_spans(t, n_chunks)
+    # spans partition [0, t) exactly, in order
+    covered = [i for o, s in spans for i in range(o, o + s)]
+    assert covered == list(range(t))
+
+    sds = chunked_sorted_dispatch(r.expert_idx, r.keep, e, spans, ep=ep)
+    assert len(sds) == n_chunks
+    # per-chunk counts sum to the unchunked counts
+    np.testing.assert_array_equal(
+        sum(np.asarray(c.group_sizes) for c in sds), np.asarray(sd.group_sizes))
+    if ep is not None:
+        np.testing.assert_array_equal(
+            sum(np.asarray(c.rank_counts) for c in sds),
+            np.asarray(sd.rank_counts))
+        for c in sds:
+            np.testing.assert_array_equal(
+                np.asarray(c.rank_offsets),
+                np.cumsum(np.asarray(c.rank_counts)) - np.asarray(c.rank_counts))
+    # chunk-major merge of kept assignments == per-expert partition of the
+    # unchunked kept stream, token order preserved within each expert
+    keep = np.asarray(r.keep).reshape(-1)
+    idx = np.asarray(r.expert_idx).reshape(-1)
+    for ee in range(e):
+        merged = []
+        for (o, _), c in zip(spans, sds):
+            gs = np.asarray(c.group_sizes)
+            go = np.asarray(c.group_offsets)
+            kept_c = np.asarray(c.perm)[go[ee]:go[ee] + gs[ee]] + o * k
+            merged.extend(kept_c.tolist())
+        expect = np.nonzero(keep & (idx == ee))[0]
+        np.testing.assert_array_equal(np.asarray(merged), expect)
+
+    # scatter-layout rebase: chunk offsets + per-chunk arrival ranks
+    # reconstruct the global pos_in_expert for every assignment
+    offs = np.asarray(chunk_expert_offsets(r.expert_idx, e, spans))
+    pos = np.asarray(r.pos_in_expert)
+    for ci, (o, s) in enumerate(spans):
+        pos_c = pos[o:o + s] - offs[ci][np.asarray(r.expert_idx)[o:o + s]]
+        assert (pos_c >= 0).all()
+        assert (pos_c <= pos[o:o + s]).all()
+        # rebased ranks are unique per (chunk, expert)
+        ii = np.asarray(r.expert_idx)[o:o + s].reshape(-1)
+        pc = pos_c.reshape(-1)
+        for ee in set(ii.tolist()):
+            vals = pc[ii == ee]
+            assert len(set(vals.tolist())) == len(vals)
 
 
 @given(st.sampled_from(["bf16", "f32", "s32", "u8", "f16"]),

@@ -5,7 +5,7 @@ and micro-benchmarks may not regress >25% past the recorded snapshot.
 Usage:
     python tools/assert_no_worse.py <pytest-log>
     python tools/assert_no_worse.py <pytest-log> --bench bench.csv \
-        [--snapshot benchmarks/BENCH_PR4.json]
+        [--snapshot benchmarks/BENCH_PR5.json]
 
 Test gate: parses the pytest summary line out of a ``pytest -q`` log and
 compares the failure + error count against ``tests/seed_baseline.json``
@@ -29,7 +29,7 @@ import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 BASELINE = ROOT / "tests" / "seed_baseline.json"
-DEFAULT_SNAPSHOT = ROOT / "benchmarks" / "BENCH_PR4.json"
+DEFAULT_SNAPSHOT = ROOT / "benchmarks" / "BENCH_PR5.json"
 
 
 def parse_summary(text: str) -> dict:
