@@ -1,0 +1,55 @@
+"""Ranked-mapping table from the 5-D autotuner (launch/autotune.py).
+
+Emits one ``autotune/<arch>/<shape>`` row per searched pair — wall time is
+the *search* time (pure-Python cost model, a real measurement even on
+CPU), ``derived`` carries the winner and the committed row's rank — and
+writes the human-readable ranked table to ``results/autotune_table.md``
+(appended to the GitHub step summary and uploaded as a nightly artifact
+by CI). ``BENCH_QUICK=1`` sweeps the two paper MoE archs only.
+"""
+import os
+import time
+
+from benchmarks import common  # noqa: F401  (sets XLA_FLAGS first)
+from benchmarks.common import QUICK, emit
+
+QUICK_PAIRS = [("mixtral-8x22b", "train_4k"),
+               ("qwen2-57b-a14b", "train_4k")]
+OUT_MD = os.path.join("results", "autotune_table.md")
+
+
+def main() -> None:
+    from repro.launch.autotune import (format_markdown, search_mappings,
+                                       table_report)
+    from repro.launch.mappings import _TABLE
+
+    pairs = QUICK_PAIRS if QUICK else sorted(_TABLE)
+    sections = []
+    for arch, shape_name in pairs:
+        attn, _, _ = _TABLE[(arch, shape_name)]
+        world = attn[0] * attn[1] * attn[2]
+        t0 = time.perf_counter()
+        scored = search_mappings(arch, shape_name, world, pp=1, vpp=1)
+        dt_us = (time.perf_counter() - t0) * 1e6
+        rep = table_report(arch, shape_name, world)
+        best = scored[0]
+        emit(f"autotune/{arch}/{shape_name}", dt_us,
+             f"n={len(scored)};rank={rep['rank']};"
+             f"winner={best.candidate.label()};"
+             f"step_ms={best.total_s * 1e3:.2f};mfu={best.mfu:.3f}")
+        sections.append(format_markdown(
+            scored, 5, title=f"{arch} × {shape_name} × {world} chips "
+                             f"(committed rank #{rep['rank']} "
+                             f"of {len(scored)})"))
+    os.makedirs(os.path.dirname(OUT_MD), exist_ok=True)
+    with open(OUT_MD, "w") as f:
+        f.write("# Autotuned mapping rankings\n\n"
+                "Cost-model search over all divisibility-valid folded "
+                "mappings (`launch/autotune.py`); committed `_TABLE` rows "
+                "must rank top-3 (CI `autotune-regression`).\n\n")
+        f.write("\n".join(sections))
+    print(f"# wrote {OUT_MD} ({len(sections)} tables)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

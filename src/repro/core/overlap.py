@@ -38,7 +38,7 @@ from __future__ import annotations
 from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 __all__ = ["chunk_spans", "software_pipeline", "overlap_adjusted_time",
-           "overlap_gain", "resolve_chunks"]
+           "overlap_cost", "overlap_gain", "resolve_chunks"]
 
 
 def chunk_spans(n_tokens: int, n_chunks: int) -> Tuple[Tuple[int, int], ...]:
@@ -159,6 +159,28 @@ def overlap_adjusted_time(t_comm: float, t_compute: float,
     if n_chunks <= 1:
         return t_comm + t_compute
     return max(t_comm, t_compute) + min(t_comm, t_compute) / n_chunks
+
+
+def overlap_cost(t_comm: float, t_compute: float, n_chunks: int) -> dict:
+    """Stable cost-model entry point: the chunked ladder's time breakdown.
+
+    Returns ``serial_s`` (no overlap), ``overlap_s`` (the
+    :func:`overlap_adjusted_time` bound), ``ramp_s`` (the fill/drain cost
+    that overlapping cannot hide) and ``hidden_s`` (what it does hide).
+    Used by the mapping autotuner (``launch/autotune.py``) to score the
+    MoE term of every candidate mapping.
+
+    >>> c = overlap_cost(4.0, 8.0, 4)
+    >>> c["serial_s"], c["overlap_s"], c["ramp_s"], c["hidden_s"]
+    (12.0, 9.0, 1.0, 3.0)
+    >>> overlap_cost(4.0, 8.0, 1)["overlap_s"]   # C=1: no overlap
+    12.0
+    """
+    serial = t_comm + t_compute
+    over = overlap_adjusted_time(t_comm, t_compute, n_chunks)
+    ramp = over - max(t_comm, t_compute) if n_chunks > 1 else min(t_comm, t_compute)
+    return {"serial_s": serial, "overlap_s": over, "ramp_s": ramp,
+            "hidden_s": serial - over}
 
 
 def overlap_gain(terms: Sequence[float], t_comm: float, t_compute: float,

@@ -33,6 +33,7 @@ See docs/folding.md §5 for the timeline diagrams.
 from __future__ import annotations
 
 import dataclasses
+import functools as _functools
 from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -347,6 +348,59 @@ def simulate_timeline(part: StagePartition, n_micro: int,
                     bubble=(makespan - ideal) / makespan if makespan else 0.0,
                     per_stage_busy=tuple(busy),
                     max_in_flight=max_in_flight(scheds))
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineCost:
+    """Cost-model view of one (pp, vpp, microbatch) pipeline choice."""
+    bubble: float                 # measured bubble fraction of the schedule
+    bubble_formula: float         # closed form (pp-1)/(vpp·m+pp-1)
+    makespan_ticks: float         # simulated makespan in f_cost units
+    max_in_flight: int            # activation-stash residency bound
+
+
+@_functools.lru_cache(maxsize=4096)
+def _timeline_stats(pp: int, vpp: int, n_rep: int,
+                    n_micro: int) -> Tuple[float, float, int]:
+    part = StagePartition(pp=pp, vpp=vpp, n_rep=n_rep)
+    t = simulate_timeline(part, n_micro)
+    return t.bubble, t.makespan, t.max_in_flight
+
+
+def pipeline_cost(cfg: ModelConfig, pp: int, vpp: int,
+                  microbatch: int) -> PipelineCost:
+    """Stable cost-model entry point: measured bubble of the *real*
+    1F1B/interleaved schedule for ``cfg`` at (pp, vpp, microbatch).
+
+    The bubble comes from placing the schedule's instruction lists on the
+    dependency-checked per-rank timeline (:func:`simulate_timeline`), not
+    from the closed form — which is reported alongside. ``pp == 1`` is the
+    degenerate zero-bubble case; invalid partitions (layers not divisible
+    by pp·vpp, microbatch % pp for interleaved) raise ``ValueError``
+    naming the model. Results are cached: the mapping autotuner calls this
+    for every candidate.
+
+    >>> from repro.configs import get_config, reduced
+    >>> cfg = reduced(get_config("llama3.2-1b"), n_layers=8)
+    >>> pc = pipeline_cost(cfg, pp=4, vpp=1, microbatch=12)
+    >>> abs(pc.bubble - bubble_fraction(4, 12)) < 1e-12
+    True
+    >>> pipeline_cost(cfg, pp=1, vpp=1, microbatch=4).bubble
+    0.0
+    """
+    m = max(microbatch, 1)
+    if pp <= 1 and vpp <= 1:
+        return PipelineCost(bubble=0.0, bubble_formula=0.0,
+                            makespan_ticks=float(3 * m), max_in_flight=1)
+    part = stage_partition_for(cfg, pp, vpp)   # validates divisibility
+    if vpp > 1 and m % pp:
+        raise ValueError(
+            f"{cfg.name}: interleaved schedule needs microbatch % pp == 0 "
+            f"(microbatch={m}, pp={pp})")
+    bubble, makespan, in_flight = _timeline_stats(pp, vpp, part.n_rep, m)
+    return PipelineCost(bubble=bubble,
+                        bubble_formula=bubble_fraction(pp, m, vpp),
+                        makespan_ticks=makespan, max_in_flight=in_flight)
 
 
 def merged_order(part: StagePartition, n_micro: int) -> List[Op]:

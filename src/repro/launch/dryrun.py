@@ -260,6 +260,38 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
     return rec
 
 
+def run_autotune(arch: str, shape_name: str, world: int, top: int,
+                 lower_top: int) -> None:
+    """``--autotune`` mode: ranked cost-model search + top-k lowering.
+
+    Prints the ranked mapping table with the per-term cost breakdown,
+    then validates the top ``lower_top`` candidates by lowering the real
+    step on fake devices (the same path ``run_pair`` compiles through).
+    Exits nonzero if any top candidate fails to lower.
+    """
+    from repro.launch.autotune import (format_markdown, search_mappings,
+                                       validate_by_lowering)
+    t0 = time.time()
+    scored = search_mappings(arch, shape_name, world)
+    print(f"searched {len(scored)} valid mappings for {arch} × {shape_name} "
+          f"× {world} chips in {time.time() - t0:.1f}s\n")
+    print(format_markdown(scored, top,
+                          title=f"{arch} × {shape_name} × {world} chips"))
+    if lower_top <= 0:
+        return
+    print(f"lowering top-{lower_top} candidates on fake devices ...")
+    bad = 0
+    for rec in validate_by_lowering(arch, shape_name, scored, lower_top):
+        if rec["ok"]:
+            print(f"  OK   {rec['mapping']}")
+        else:
+            bad += 1
+            print(f"  FAIL {rec['mapping']}: {rec['error']}")
+    if bad:
+        raise SystemExit(1)
+    print("all top candidates lower cleanly")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -269,7 +301,22 @@ def main() -> None:
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--autotune", nargs=2, metavar=("ARCH", "SHAPE"),
+                    default=None,
+                    help="rank all valid mappings for (ARCH, SHAPE) with "
+                         "the cost model, then lower the top candidates")
+    ap.add_argument("--world", type=int, default=256,
+                    help="world size for --autotune (default 256)")
+    ap.add_argument("--top", type=int, default=10,
+                    help="rows to print in the --autotune table")
+    ap.add_argument("--lower-top", type=int, default=3,
+                    help="candidates to validate by lowering (0 = skip)")
     args = ap.parse_args()
+
+    if args.autotune:
+        run_autotune(args.autotune[0], args.autotune[1], args.world,
+                     args.top, args.lower_top)
+        return
 
     archs = [args.arch] if args.arch else sorted(ASSIGNED)
     shapes = [args.shape] if args.shape else list(SHAPES)

@@ -32,6 +32,46 @@ ICI_BW = 50e9
 # Inter-pod (multislice) bandwidth per chip over DCN — much slower than ICI.
 # The folding win on TPU is keeping EP/ETP collectives inside the pod.
 DCI_BW = 10e9
+# Per-hop launch/propagation latency of a ring collective step. The α term
+# of the α-β model: a g-way ring collective pays (g-1) hops of latency on
+# top of its wire time, which is what makes many tiny collectives (large
+# groups, many microbatches) lose to fewer larger ones even at equal bytes.
+LINK_LATENCY = 1e-6
+
+def collective_time(kind: str, nbytes: float, group: int, *,
+                    bw: float = ICI_BW, latency: float = LINK_LATENCY) -> float:
+    """α-β ring time of one collective: ``(g-1)·latency + wire_bytes/bw``.
+
+    ``nbytes`` follows the same convention as :func:`parse_collectives`
+    (the op's *result* bytes as written in HLO): an all-gather's result is
+    the full gathered buffer, a reduce-scatter's the small scattered shard.
+    Stable entry point for the mapping autotuner's analytic cost model
+    (``launch/autotune.py``).
+
+    >>> collective_time("all-gather", 8e9, 4, bw=50e9, latency=0.0)
+    0.12
+    >>> collective_time("all-reduce", 1e9, 2, bw=50e9, latency=0.0)
+    0.02
+    >>> collective_time("all-to-all", 1.0, 1)
+    0.0
+    """
+    if group <= 1:
+        return 0.0
+    g = group
+    if kind == "all-gather":
+        wire = nbytes * (g - 1) / g
+    elif kind == "reduce-scatter":
+        wire = nbytes * (g - 1)          # nbytes is the (small) output
+    elif kind == "all-reduce":
+        wire = 2 * nbytes * (g - 1) / g
+    elif kind == "all-to-all":
+        wire = nbytes * (g - 1) / g
+    elif kind == "collective-permute":
+        return latency + nbytes / bw     # one hop, full payload
+    else:
+        raise ValueError(f"unknown collective kind {kind!r}")
+    return (g - 1) * latency + wire / bw
+
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,

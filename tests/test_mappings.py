@@ -1,0 +1,131 @@
+"""Error-path coverage for the mapping table and pcfg_for validation.
+
+Every invalid-input path must fail *naming the offending (arch, shape)*
+and the violated constraint — these used to surface as opaque reshape or
+sharding failures deep inside lowering (or, for ``pcfg_for``, as a bare
+``KeyError``).
+"""
+import pytest
+
+import repro.launch.mappings as mp
+from repro.configs import get_config
+from repro.launch.mappings import mapping_problems, pcfg_for
+
+
+# ---------------------------------------------------------------------------
+# pcfg_for lookup errors (ValueError listing options, not bare KeyError)
+# ---------------------------------------------------------------------------
+
+def test_pcfg_for_unknown_shape_lists_known_shapes():
+    with pytest.raises(ValueError) as ei:
+        pcfg_for("mixtral-8x22b", "train_8k")
+    msg = str(ei.value)
+    assert "mixtral-8x22b" in msg and "train_8k" in msg
+    assert "train_4k" in msg          # the known shapes are listed
+
+
+def test_pcfg_for_unknown_arch_lists_known_archs():
+    with pytest.raises(ValueError) as ei:
+        pcfg_for("mixtral-9x99b", "train_4k")
+    msg = str(ei.value)
+    assert "mixtral-9x99b" in msg and "mixtral-8x22b" in msg
+
+
+def test_pcfg_for_lookup_is_not_a_keyerror():
+    # The regression this guards: dict lookup raised KeyError with just
+    # the key tuple and no guidance.
+    with pytest.raises(ValueError):
+        pcfg_for("nope", "train_4k")
+
+
+# ---------------------------------------------------------------------------
+# validate_pipeline error paths name the arch
+# ---------------------------------------------------------------------------
+
+def test_pipeline_layers_not_divisible_names_arch():
+    # dbrx-132b has 40 layers: pp*vpp = 6 does not divide.
+    with pytest.raises(ValueError, match="dbrx-132b"):
+        pcfg_for("dbrx-132b", "train_4k", pp=2, vpp=3)
+
+
+def test_pipeline_microbatch_not_divisible_names_constraint():
+    # Interleaved schedule needs microbatch % pp == 0.
+    with pytest.raises(ValueError, match="microbatch % pp"):
+        pcfg_for("dbrx-132b", "train_4k", pp=4, vpp=2, microbatch=6)
+    with pytest.raises(ValueError, match="microbatch % pp"):
+        pcfg_for("dbrx-132b", "train_4k", pp=4, vpp=2, microbatch=0)
+
+
+def test_pp_carve_not_divisible_names_row():
+    # The pp factor is carved out of the row's DP; a pp that does not
+    # divide both sides must say so, naming the row.
+    with pytest.raises(ValueError, match="cannot carve"):
+        pcfg_for("mixtral-8x22b", "train_4k", pp=3)
+
+
+# ---------------------------------------------------------------------------
+# _validate_table offender naming (via monkeypatched rows)
+# ---------------------------------------------------------------------------
+
+def _with_bad_row(monkeypatch, key, row):
+    monkeypatch.setitem(mp._TABLE, key, row)
+    with pytest.raises(ValueError) as ei:
+        mp._validate_table()
+    return str(ei.value)
+
+
+def test_table_seq_not_divisible_by_2cp_names_arch(monkeypatch):
+    # seq 4096 % (2*cp) with cp=512 → 4096 % 1024 == 0; use a cp the
+    # zigzag chunking rejects: train seq 4096 with cp=4096 → 2*cp=8192.
+    key = ("llama3.2-1b", "train_4k")
+    msg = _with_bad_row(monkeypatch, key,
+                        ((1, 4096, 1), (1, 4096, 1), 1))
+    assert "llama3.2-1b" in msg and "2*cp" in msg
+
+
+def test_table_experts_not_divisible_by_ep_names_arch(monkeypatch):
+    key = ("mixtral-8x22b", "train_4k")
+    # ep=3 does not divide mixtral's 8 experts (sizes mismatch too).
+    msg = _with_bad_row(monkeypatch, key, ((128, 2, 1), (32, 3, 1), 2))
+    assert "mixtral-8x22b" in msg and "n_experts" in msg
+
+
+def test_table_moe_size_mismatch_names_arch(monkeypatch):
+    key = ("mixtral-8x22b", "train_4k")
+    msg = _with_bad_row(monkeypatch, key, ((128, 2, 1), (16, 8, 1), 2))
+    assert "mixtral-8x22b" in msg and "must cover the same devices" in msg
+
+
+# ---------------------------------------------------------------------------
+# mapping_problems unit coverage (shared by table check and autotuner)
+# ---------------------------------------------------------------------------
+
+def test_mapping_problems_clean_row_is_empty():
+    cfg = get_config("mixtral-8x22b")
+    assert mapping_problems(cfg, 4096, (128, 2, 1), (16, 8, 2)) == []
+
+
+def test_mapping_problems_heads_and_seq():
+    cfg = get_config("whisper-small")      # 12 heads
+    probs = "\n".join(mapping_problems(cfg, 4096, (32, 1, 8)))
+    assert "n_heads 12" in probs
+    probs = "\n".join(mapping_problems(cfg, 4096, (1, 4096, 1)))
+    assert "2*cp" in probs
+
+
+def test_mapping_problems_unfoldable_factorizations():
+    # [3,2,1] vs [2,1,3]: prefix boundaries {3} vs {2} cannot be merged
+    # into one integer refinement — the folding check must say so.
+    cfg = get_config("qwen3-moe-30b-a3b")  # d_expert 768 % 3 == 0
+    probs = mapping_problems(cfg, 4096, (3, 2, 1), (2, 1, 3))
+    assert probs, "expected a foldability violation"
+
+
+def test_mapping_problems_etp_hidden_divisibility():
+    cfg = get_config("qwen3-moe-30b-a3b")  # d_expert 768
+    probs = "\n".join(
+        mapping_problems(cfg, 4096, (256, 1, 1), (2, 128, 1)))
+    assert probs == ""                     # committed-style row: valid
+    probs = "\n".join(
+        mapping_problems(cfg, 4096, (5, 1, 1), (1, 1, 5)))
+    assert "d_expert" in probs             # 768 % 5 != 0

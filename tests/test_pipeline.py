@@ -126,9 +126,12 @@ def test_partition_validation_errors():
 
 def test_mappings_pipeline_validation():
     from repro.launch.mappings import pcfg_for
+    base = pcfg_for("mixtral-8x22b", "train_4k")
     p = pcfg_for("mixtral-8x22b", "train_4k", pp=2, vpp=2)
-    assert p.pp == 2 and p.vpp == 2 and p.attn.dp == 8
-    assert p.world_size == pcfg_for("mixtral-8x22b", "train_4k").world_size
+    # pp is carved out of the table row's DP on both sides, world fixed.
+    assert p.pp == 2 and p.vpp == 2 and p.attn.dp == base.attn.dp // 2
+    assert p.moe.dp == base.moe.dp // 2
+    assert p.world_size == base.world_size
     with pytest.raises(ValueError, match="mixtral-8x22b"):
         pcfg_for("mixtral-8x22b", "train_4k", pp=2, vpp=5)  # 56 % 10 != 0
     with pytest.raises(ValueError, match="microbatch % pp"):
