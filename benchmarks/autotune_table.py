@@ -36,7 +36,8 @@ def main() -> None:
         emit(f"autotune/{arch}/{shape_name}", dt_us,
              f"n={len(scored)};rank={rep['rank']};"
              f"winner={best.candidate.label()};"
-             f"step_ms={best.total_s * 1e3:.2f};mfu={best.mfu:.3f}")
+             f"step_ms={best.total_s * 1e3:.2f};mfu={best.mfu:.3f};"
+             f"fits_memory={str(rep['fits_memory']).lower()}")
         sections.append(format_markdown(
             scored, 5, title=f"{arch} × {shape_name} × {world} chips "
                              f"(committed rank #{rep['rank']} "

@@ -1,0 +1,48 @@
+"""Per-mapping collective-audit table (analysis/hlo_audit.py).
+
+Runs the structure-preserving probes for a representative mapping subset
+(the CI fast set; every ``_TABLE`` row when ``BENCH_QUICK=0``), emits one
+``audit/<arch>/<shape>`` row per probe — wall time is the lower+compile
++classify time, ``derived`` carries the row count, the heaviest
+collective family and the finding count — and writes the classified
+table to ``results/collective_audit_table.md`` (appended to the GitHub
+step summary and uploaded as a nightly artifact by CI).
+"""
+import os
+import time
+
+from benchmarks import common  # noqa: F401  (sets XLA_FLAGS first)
+from benchmarks.common import QUICK, emit
+
+OUT_MD = os.path.join("results", "collective_audit_table.md")
+
+
+def main() -> None:
+    import jax
+
+    from repro.analysis.__main__ import FAST_PAIRS
+    from repro.analysis.hlo_audit import audit_mapping, format_audit_markdown
+    from repro.launch.mappings import _TABLE
+
+    pairs = ([p for p in FAST_PAIRS if p in _TABLE] if QUICK
+             else sorted(_TABLE))
+    audits = []
+    for arch, shape_name in pairs:
+        jax.clear_caches()
+        t0 = time.perf_counter()
+        audit = audit_mapping(arch, shape_name)
+        dt_us = (time.perf_counter() - t0) * 1e6
+        audits.append(audit)
+        top = audit.rows[0] if audit.rows else None
+        emit(f"audit/{arch}/{shape_name}", dt_us,
+             f"rows={len(audit.rows)};findings={len(audit.findings)};"
+             + (f"top={top.kind}@{'+'.join(top.atoms)}="
+                f"{top.wire_bytes / 2 ** 20:.2f}MiB" if top else "top=none"))
+    os.makedirs(os.path.dirname(OUT_MD), exist_ok=True)
+    with open(OUT_MD, "w") as f:
+        f.write(format_audit_markdown(audits))
+    print(f"# wrote {OUT_MD} ({len(audits)} mappings)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

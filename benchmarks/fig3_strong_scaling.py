@@ -12,7 +12,6 @@ schedule's per-rank timeline* (``core.pipeline.simulate_timeline``),
 reported against the closed form ``(pp-1)/(vpp·m+pp-1)`` — the paper's
 large-scale runs all use pp with interleaved virtual stages.
 """
-import dataclasses
 
 from benchmarks.common import QUICK, emit
 

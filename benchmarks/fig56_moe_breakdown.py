@@ -10,7 +10,6 @@ folded groups) — the same arithmetic the compiled HLO realizes, but with
 per-axis bandwidth (intra-pod ICI vs inter-pod DCI) attached to the actual
 atom groups, which is the quantity Fig 5/6 studies.
 """
-import math
 
 from benchmarks.common import QUICK, emit
 

@@ -16,7 +16,7 @@ import dataclasses
 
 import numpy as np
 
-from benchmarks.common import QUICK, emit, timeit
+from benchmarks.common import QUICK, emit
 
 
 def main() -> None:

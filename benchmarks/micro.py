@@ -1,7 +1,7 @@
 """CPU micro-benchmarks of the hot paths (real wall time, us_per_call)."""
 import numpy as np
 
-from benchmarks.common import QUICK, emit, timeit
+from benchmarks.common import emit, timeit
 
 
 def main() -> None:
@@ -93,11 +93,11 @@ def main() -> None:
     pcfg_g = ParallelConfig(attn=PM(2, 1, 1), moe=PM(1, 2, 1))
     fm_g = build_folded_mesh(pcfg_g, devices=devices[:2])
     mcfg_g = MoEConfig(n_experts=Eg, top_k=K, d_expert=Fg)
-    xg_ = jax.random.normal(ks[0], (Tg, Dg))
-    wgg = jax.random.normal(ks[1], (Dg, Eg)) * 0.1
-    w1g = jax.random.normal(ks[2], (Eg, Dg, Fg)) * 0.05
-    w2g = jax.random.normal(ks[3], (Eg, Fg, Dg)) * 0.05
-    w3g = jax.random.normal(ks[4], (Eg, Dg, Fg)) * 0.05
+    xg_ = jax.random.normal(ks[0], (Tg, Dg))  # lint-ok: key-reuse
+    wgg = jax.random.normal(ks[1], (Dg, Eg)) * 0.1  # lint-ok: key-reuse
+    w1g = jax.random.normal(ks[2], (Eg, Dg, Fg)) * 0.05  # lint-ok: key-reuse
+    w2g = jax.random.normal(ks[3], (Eg, Fg, Dg)) * 0.05  # lint-ok: key-reuse
+    w3g = jax.random.normal(ks[4], (Eg, Dg, Fg)) * 0.05  # lint-ok: key-reuse
     f = jax.jit(lambda *a: moe_ffn(*a, mcfg_g, fm_g, permute_mode="scatter")[0])
     emit("micro/dispatcher_scatter_einsum_ep2_T1024_D128",
          timeit(f, xg_, wgg, w1g, w2g, w3g), "tileable shape; einsum experts")

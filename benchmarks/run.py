@@ -16,14 +16,15 @@ from benchmarks import common  # noqa: F401  (sets XLA_FLAGS first)
 
 
 def main() -> None:
-    from benchmarks import (autotune_table, fig3_strong_scaling,
-                            fig4_context_scaling, fig56_moe_breakdown,
-                            loss_parity, micro, table1_mfu, table2_fp8)
+    from benchmarks import (autotune_table, collective_audit_table,
+                            fig3_strong_scaling, fig4_context_scaling,
+                            fig56_moe_breakdown, loss_parity, micro,
+                            table1_mfu, table2_fp8)
 
     print("name,us_per_call,derived")
     for mod in (fig56_moe_breakdown, micro, loss_parity, table2_fp8,
-                table1_mfu, autotune_table, fig3_strong_scaling,
-                fig4_context_scaling):
+                table1_mfu, autotune_table, collective_audit_table,
+                fig3_strong_scaling, fig4_context_scaling):
         try:
             mod.main()
         except Exception:  # noqa: BLE001 — keep the harness going

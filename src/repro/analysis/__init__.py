@@ -1,0 +1,57 @@
+"""Static analysis over lowered HLO and source ASTs.
+
+Three passes, each mechanizing a bug class this repo has already paid for
+once by hand (see docs/analysis.md):
+
+* ``hlo_audit``  — lower the real step for each ``launch.mappings._TABLE``
+  row on fake devices, classify every collective in the optimized HLO by
+  mesh axes / payload bytes / fold, and diff against the analytic
+  collective-byte budget from the autotuner's cost entry points.  An
+  *unbudgeted* collective (a GSPMD-inserted resharding gather — the PR 4
+  vpp bug class) is a named finding; the classified rows are pinned in
+  ``tests/collective_audit_golden.json`` and gated in CI.
+* ``purity``     — re-run a jitted init/step under permuted device orders
+  and across mappings and assert bitwise equality (the PR 2 EP-init RNG
+  drift and the PR 4 ``strip_stack_pp`` init impurity, as a reusable
+  detector with both historical bugs as its seeded regression corpus).
+* ``lint``       — AST rules over ``src/``: Python branching on traced
+  values, ``jax.random`` key reuse, nondeterministic ops reachable from
+  ``deterministic_router`` paths, implicit dtype promotion in hot paths,
+  and mesh-axis string literals not registered in ``core/folding.py``.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.analysis audit [--fast]
+    PYTHONPATH=src python -m repro.analysis lint [paths...]
+    PYTHONPATH=src python -m repro.analysis purity
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One named analysis finding, shared by all three passes.
+
+    ``rule`` is a stable kebab-case identifier (waivable in source via a
+    ``# lint-ok: <rule>`` comment for the lint pass; budget entries are the
+    waiver mechanism for the audit pass). ``where`` locates the finding —
+    ``file:line`` for lint, ``arch|shape`` mapping key for audit/purity.
+    """
+    rule: str
+    where: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"[{self.rule}] {self.where}: {self.message}"
+
+
+def format_findings(findings: Tuple[Finding, ...] | list) -> str:
+    if not findings:
+        return "no findings"
+    return "\n".join(str(f) for f in findings)
+
+
+__all__ = ["Finding", "format_findings"]

@@ -1,0 +1,278 @@
+"""Custom jax lint: AST rules for the silent-hazard classes generic
+linters can't see.
+
+Rules (waive a line with a trailing ``# lint-ok: <rule>`` comment):
+
+* ``traced-branch`` — Python ``if``/``while`` whose test calls a
+  ``jnp``/``lax`` op: under ``jit`` the result is a tracer and the branch
+  either fails or silently specializes on trace-time values.
+* ``key-reuse`` — the same ``jax.random`` key expression passed to more
+  than one sampler in a function without an intervening reassignment:
+  correlated randomness, the classic silent-init bug.
+* ``nondet-in-det-path`` — value-ordered ops (``lax.top_k``,
+  ``jnp.argmax``, unstable ``argsort``) in the routing/dispatch modules
+  outside the ``deterministic_top_k`` helper or a branch guarded by
+  ``deterministic_router``: float ties flip across mappings (the PR 2
+  drift class).
+* ``implicit-dtype`` — array-creation calls without an explicit dtype in
+  hot-path modules (``core``/``models``/``kernels``/``train``): the
+  default dtype silently promotes downstream arithmetic.
+* ``unregistered-axis-name`` — a mesh-axis string literal (in
+  ``axis_name=``, a collective's axis argument, or a raw
+  ``PartitionSpec``) that ``core.folding.is_registered_axis_name``
+  rejects: a typo'd or stale axis surfaces as an opaque GSPMD error.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis import Finding
+from repro.core.folding import is_registered_axis_name
+
+WAIVER = "# lint-ok:"
+# Modules where value-ordered ops feed routing decisions.
+DET_PATH_MODULES = ("router", "dispatcher", "moe_layer", "overlap")
+# Module path fragments counted as hot paths for the dtype rule.
+HOT_PATHS = (f"{os.sep}core{os.sep}", f"{os.sep}models{os.sep}",
+             f"{os.sep}kernels{os.sep}", f"{os.sep}train{os.sep}")
+_CREATION = {"zeros": 2, "ones": 2, "empty": 2, "full": 3, "eye": 2,
+             "arange": 99, "linspace": 99}   # min positional argc for dtype
+_SAMPLER_EXEMPT = {"split", "fold_in", "PRNGKey", "key_data",
+                   "wrap_key_data", "key", "key_impl", "clone"}
+_COLLECTIVES_AXIS_ARG = {"psum", "pmean", "pmax", "pmin", "ppermute",
+                         "pshuffle", "all_gather", "all_to_all",
+                         "axis_index", "psum_scatter"}
+
+
+def _attr_chain(node: ast.AST) -> Tuple[str, ...]:
+    """``jax.lax.top_k`` → ("jax", "lax", "top_k"); non-chains → ()."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return ()
+
+
+def _is_jax_op(chain: Tuple[str, ...]) -> bool:
+    if not chain:
+        return False
+    if chain[0] in ("jnp", "lax"):
+        return True
+    return (chain[0] == "jax" and len(chain) > 1
+            and chain[1] in ("lax", "nn", "numpy", "random"))
+
+
+def _strings_in(node: ast.AST) -> Iterable[Tuple[int, str]]:
+    """(line, value) for direct string literals in an axis expression.
+
+    Only bare strings and strings inside tuple/list literals count — a
+    string nested in a call (``fm.axis("attn", "dp")``) is a *logical*
+    name being resolved, not a mesh-axis literal.
+    """
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        yield node.lineno, node.value
+    elif isinstance(node, (ast.Tuple, ast.List)):
+        for elt in node.elts:
+            yield from _strings_in(elt)
+
+
+class _FileLinter(ast.NodeVisitor):
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.lines = source.splitlines()
+        self.findings: List[Finding] = []
+        self.func_stack: List[str] = []
+        self.det_guard = 0          # depth of deterministic_router branches
+        base = os.path.basename(path)
+        self.det_module = any(m in base for m in DET_PATH_MODULES)
+        self.hot = any(h in path for h in HOT_PATHS)
+        # rule -> {function-scope id: [(key_dump, line), ...]}
+        self._key_uses: List[Dict[str, List[int]]] = []
+        self._key_assigns: List[Dict[str, List[int]]] = []
+
+    # -- helpers --------------------------------------------------------
+    def _waived(self, line: int, rule: str) -> bool:
+        if 1 <= line <= len(self.lines):
+            comment = self.lines[line - 1]
+            if WAIVER in comment and rule in comment.split(WAIVER, 1)[1]:
+                return True
+        return False
+
+    def _emit(self, line: int, rule: str, message: str) -> None:
+        if not self._waived(line, rule):
+            self.findings.append(
+                Finding(rule=rule, where=f"{self.path}:{line}",
+                        message=message))
+
+    # -- scope tracking -------------------------------------------------
+    def visit_FunctionDef(self, node):
+        self.func_stack.append(node.name)
+        self._key_uses.append({})
+        self._key_assigns.append({})
+        self.generic_visit(node)
+        self._check_key_reuse(node)
+        self._key_uses.pop()
+        self._key_assigns.pop()
+        self.func_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    # -- rule: traced-branch -------------------------------------------
+    def _check_branch(self, node):
+        for n in ast.walk(node.test):
+            if isinstance(n, ast.Call) and _is_jax_op(_attr_chain(n.func)):
+                chain = ".".join(_attr_chain(n.func))
+                self._emit(node.lineno, "traced-branch",
+                           f"Python branch on the result of `{chain}` — a "
+                           "tracer under jit; use lax.cond/jnp.where or "
+                           "hoist to trace time")
+                break
+
+    def visit_If(self, node):
+        self._check_branch(node)
+        guard = "deterministic_router" in ast.dump(node.test)
+        if guard:
+            self.det_guard += 1
+        self.generic_visit(node)
+        if guard:
+            self.det_guard -= 1
+
+    def visit_While(self, node):
+        self._check_branch(node)
+        self.generic_visit(node)
+
+    # -- rules on calls -------------------------------------------------
+    def visit_Call(self, node):
+        chain = _attr_chain(node.func)
+        dotted = ".".join(chain)
+
+        # key-reuse: record sampler first-arg expressions per function
+        if (self.func_stack and len(chain) >= 2 and node.args
+                and (chain[:2] == ("jax", "random") or chain[0] == "jr")
+                and chain[-1] not in _SAMPLER_EXEMPT):
+            key_id = ast.dump(node.args[0])
+            self._key_uses[-1].setdefault(key_id, []).append(node.lineno)
+
+        # nondet-in-det-path
+        if (self.det_module and self.det_guard == 0
+                and "deterministic_top_k" not in self.func_stack):
+            nondet = (chain[-1:] == ("top_k",)
+                      or chain[-1:] == ("approx_max_k",)
+                      or chain[-1:] == ("argmax",)
+                      or (chain[-1:] == ("argsort",)
+                          and not any(kw.arg == "stable" for kw in
+                                      node.keywords)))
+            if nondet and _is_jax_op(chain):
+                self._emit(node.lineno, "nondet-in-det-path",
+                           f"`{dotted}` breaks ties by float compare on a "
+                           "deterministic-router path; use "
+                           "router.deterministic_top_k or a stable sort")
+
+        # implicit-dtype
+        if (self.hot and len(chain) == 2 and chain[0] == "jnp"
+                and chain[1] in _CREATION):
+            has_dtype = (any(kw.arg == "dtype" for kw in node.keywords)
+                         or len(node.args) >= _CREATION[chain[1]])
+            if not has_dtype:
+                self._emit(node.lineno, "implicit-dtype",
+                           f"`jnp.{chain[1]}` without an explicit dtype in "
+                           "a hot path — the default silently promotes "
+                           "downstream arithmetic")
+
+        # unregistered-axis-name
+        axis_nodes: List[ast.AST] = [
+            kw.value for kw in node.keywords
+            if kw.arg in ("axis_name", "axis_names")]
+        if chain[-1:] and chain[-1] in _COLLECTIVES_AXIS_ARG \
+                and _is_jax_op(chain) and len(node.args) >= 2:
+            axis_nodes.append(node.args[1])
+        if chain[-1:] in (("PartitionSpec",), ("P",)):
+            axis_nodes.extend(node.args)
+        for an in axis_nodes:
+            for line, s in _strings_in(an):
+                if not is_registered_axis_name(s):
+                    self._emit(line, "unregistered-axis-name",
+                               f"mesh-axis literal {s!r} is not a "
+                               "registered folded-mesh axis (pod/pp/fN — "
+                               "see core.folding.is_registered_axis_name)")
+        self.generic_visit(node)
+
+    # -- key-reuse assignment tracking ---------------------------------
+    def _record_assign(self, target: ast.AST, line: int) -> None:
+        if not self._key_assigns:
+            return
+        for n in ast.walk(target):
+            if isinstance(n, ast.Name):
+                self._key_assigns[-1].setdefault(
+                    ast.dump(ast.Name(id=n.id, ctx=ast.Load())),
+                    []).append(line)
+
+    def visit_Assign(self, node):
+        for t in node.targets:
+            self._record_assign(t, node.lineno)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node):
+        self._record_assign(node.target, node.lineno)
+        self.generic_visit(node)
+
+    def visit_For(self, node):
+        self._record_assign(node.target, node.lineno)
+        self.generic_visit(node)
+
+    def _check_key_reuse(self, func) -> None:
+        uses = self._key_uses[-1]
+        assigns = self._key_assigns[-1]
+        for key_id, lines in uses.items():
+            if len(lines) < 2:
+                continue
+            lines = sorted(lines)
+            re_lines = assigns.get(key_id, [])
+            for a, b in zip(lines, lines[1:]):
+                if any(a < r <= b for r in re_lines):
+                    continue        # reassigned between the two uses
+                if not self._waived(b, "key-reuse"):
+                    self._emit(b, "key-reuse",
+                               "same PRNG key expression already consumed "
+                               f"by a sampler on line {a} of "
+                               f"`{func.name}` — split or fold_in first")
+                break
+
+
+def lint_source(path: str, source: str) -> List[Finding]:
+    """Lint one file's source text. Syntax errors are findings too."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(rule="syntax-error", where=f"{path}:{e.lineno}",
+                        message=str(e.msg))]
+    linter = _FileLinter(path, source)
+    linter.visit(tree)
+    return sorted(linter.findings, key=lambda f: f.where)
+
+
+def lint_paths(paths: Sequence[str],
+               rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint every ``.py`` file under the given paths."""
+    files: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            files.append(p)
+        else:
+            for root, _dirs, names in os.walk(p):
+                files.extend(os.path.join(root, n) for n in sorted(names)
+                             if n.endswith(".py"))
+    findings: List[Finding] = []
+    for f in sorted(set(files)):
+        with open(f, encoding="utf-8") as fh:
+            src = fh.read()
+        found = lint_source(f, src)
+        if rules:
+            found = [x for x in found if x.rule in rules]
+        findings.extend(found)
+    return findings

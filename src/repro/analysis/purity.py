@@ -1,0 +1,185 @@
+"""Init/step purity checker: bitwise invariance across mappings and
+device orders.
+
+Two historical bug classes motivate this pass and serve as its seeded
+regression corpus (see ``tests/test_analysis_purity.py``):
+
+* **PR 2 — EP-init RNG drift.** Sharded ``jit`` init under the default
+  (non-partitionable) threefry lowering produced different expert weights
+  per mapping; fixed by forcing ``jax_threefry_partitionable`` in
+  ``repro.__init__``. :func:`check_purity` over
+  :func:`mapping_variants` re-runs that experiment on every call.
+* **PR 4 — ``strip_stack_pp`` init impurity.** ``jit`` init with a
+  pp-sharded layer-stack dim is not position-pure on the pinned jax, so
+  ``train.loop.init_train_state`` initializes pp-replicated and reshards.
+  :func:`builtin_purity_suite` asserts the workaround keeps the gathered
+  params identical to the pp=1 reference.
+
+The checker is deliberately *bitwise*: numerical closeness is exactly the
+failure mode these bugs hide behind — a mapping-dependent init is wrong
+even when every leaf is within 1e-6.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.analysis import Finding
+
+MAX_LEAVES_REPORTED = 4
+
+
+def pytree_bitwise_diffs(ref, other) -> List[Tuple[str, int, float]]:
+    """``(leaf_path, n_mismatched, max_abs_diff)`` per unequal leaf.
+
+    Leaves are compared bitwise on their host values; shape or tree
+    mismatches are reported as a synthetic ``<structure>`` leaf.
+    """
+    import jax
+
+    ref_leaves = jax.tree_util.tree_flatten_with_path(ref)[0]
+    other_leaves = jax.tree_util.tree_flatten_with_path(other)[0]
+    if [p for p, _ in ref_leaves] != [p for p, _ in other_leaves]:
+        return [("<structure>", 1, float("inf"))]
+    out: List[Tuple[str, int, float]] = []
+    for (path, a), (_, b) in zip(ref_leaves, other_leaves):
+        a = np.asarray(a)
+        b = np.asarray(b)
+        name = jax.tree_util.keystr(path)
+        if a.shape != b.shape or a.dtype != b.dtype:
+            out.append((name, a.size, float("inf")))
+            continue
+        neq = a.view(np.uint8) != b.view(np.uint8)
+        if neq.any():
+            fa = a.astype(np.float64) if np.issubdtype(a.dtype, np.number) \
+                else a.view(np.uint8)
+            fb = b.astype(np.float64) if np.issubdtype(b.dtype, np.number) \
+                else b.view(np.uint8)
+            out.append((name, int(neq.any(axis=-1).sum()) if a.ndim else 1,
+                        float(np.max(np.abs(fa - fb)))))
+    return out
+
+
+def check_purity(run: Callable, variants: Sequence[Tuple[str, object]],
+                 *, rule: str, where: str) -> List[Finding]:
+    """Run ``run(ctx)`` for each ``(name, ctx)`` variant; the host-gathered
+    pytrees must be bitwise identical to the first variant's.
+
+    ``run`` returns a pytree of arrays (they are materialized to host via
+    ``np.asarray``, so fully-addressable shardings are fine as-is).
+    """
+    if len(variants) < 2:
+        raise ValueError("need at least two variants to compare")
+    findings: List[Finding] = []
+    ref_name, ref_ctx = variants[0]
+    ref = run(ref_ctx)
+    for name, ctx in variants[1:]:
+        diffs = pytree_bitwise_diffs(ref, run(ctx))
+        if not diffs:
+            continue
+        shown = ", ".join(
+            f"{p} (max |Δ| {d:.3g})" for p, _n, d in
+            diffs[:MAX_LEAVES_REPORTED])
+        more = (f" and {len(diffs) - MAX_LEAVES_REPORTED} more leaves"
+                if len(diffs) > MAX_LEAVES_REPORTED else "")
+        findings.append(Finding(
+            rule=rule, where=where,
+            message=f"variant '{name}' differs bitwise from "
+                    f"'{ref_name}' at {shown}{more}"))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# Variant builders
+# --------------------------------------------------------------------------
+
+def mapping_variants(pcfgs: Sequence, moe_factors=None
+                     ) -> List[Tuple[str, object]]:
+    """``(label, FoldedMesh)`` per ParallelConfig — cross-mapping checks."""
+    from repro.core.folding import build_folded_mesh
+    out = []
+    for pcfg in pcfgs:
+        fm = build_folded_mesh(pcfg, moe_factors=moe_factors)
+        a, m = pcfg.attn, pcfg.moe
+        out.append((f"dp{a.dp}cp{a.inner}tp{a.tp}/"
+                    f"edp{m.dp}ep{m.inner}etp{m.tp}/pp{pcfg.pp}", fm))
+    return out
+
+
+def device_order_variants(pcfg, n_perm: int = 2, moe_factors=None,
+                          seed: int = 0) -> List[Tuple[str, object]]:
+    """One identity mesh plus ``n_perm`` device-permuted meshes."""
+    import jax
+    from repro.core.folding import build_folded_mesh
+    world = pcfg.world_size
+    devs = np.array(jax.devices()[:world])
+    rng = np.random.RandomState(seed)
+    out = [("identity", build_folded_mesh(pcfg, devices=devs,
+                                          moe_factors=moe_factors))]
+    for i in range(n_perm):
+        perm = rng.permutation(world)
+        out.append((f"perm{i}:{perm.tolist()}",
+                    build_folded_mesh(pcfg, devices=devs[perm],
+                                      moe_factors=moe_factors)))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Built-in suite (the CLI / CI gate)
+# --------------------------------------------------------------------------
+
+def _init_params(fm, cfg):
+    """Store-sharded jit init via the production path, gathered to host."""
+    import jax
+    from repro.train.loop import init_train_state
+    params, _opt = init_train_state(jax.random.PRNGKey(0), cfg, fm)
+    return jax.tree.map(np.asarray, params)
+
+
+def builtin_purity_suite(world: Optional[int] = None) -> List[Finding]:
+    """The three production purity invariants, needing ≤ 4 fake devices.
+
+    1. cross-mapping: same arch, two (attn, moe, pp) folds — identical
+       gathered params (PR 2 EP-init RNG class);
+    2. device-order: same fold, permuted device arrays (flat device order
+       must not leak into initialization);
+    3. pp-stack: pp=2 via the ``strip_stack_pp`` init path against the
+       pp=1 reference (PR 4 class — fails if the workaround regresses).
+    """
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.configs.base import ParallelConfig
+    from repro.configs.base import ParallelMappingSpec as PM
+
+    avail = len(jax.devices())
+    world = min(world or 4, avail)
+    if world < 4:
+        return [Finding(
+            rule="purity-suite-setup", where="builtin_purity_suite",
+            message=f"need 4 devices for the built-in suite, have {avail} "
+                    "(set --xla_force_host_platform_device_count)")]
+    cfg = reduced(get_config("mixtral-8x22b"), n_layers=4)
+
+    findings: List[Finding] = []
+    cross = mapping_variants([
+        ParallelConfig(attn=PM(2, 1, 2), moe=PM(1, 2, 2), pp=1),
+        ParallelConfig(attn=PM(4, 1, 1), moe=PM(2, 2, 1), pp=1),
+        ParallelConfig(attn=PM(2, 2, 1), moe=PM(2, 1, 2), pp=1),
+    ])
+    findings += check_purity(lambda fm: _init_params(fm, cfg), cross,
+                             rule="mapping-dependent-init",
+                             where="init_train_state")
+    order = device_order_variants(
+        ParallelConfig(attn=PM(2, 1, 2), moe=PM(1, 2, 2), pp=1))
+    findings += check_purity(lambda fm: _init_params(fm, cfg), order,
+                             rule="device-order-dependent-init",
+                             where="init_train_state")
+    stack = mapping_variants([
+        ParallelConfig(attn=PM(2, 1, 1), moe=PM(1, 2, 1), pp=1),
+        ParallelConfig(attn=PM(1, 1, 2), moe=PM(1, 1, 2), pp=2),
+    ])
+    findings += check_purity(lambda fm: _init_params(fm, cfg), stack,
+                             rule="pp-stack-init-impurity",
+                             where="init_train_state (strip_stack_pp)")
+    return findings

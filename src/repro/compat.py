@@ -148,7 +148,7 @@ def ragged_all_to_all(operand: jax.Array, output: jax.Array,
     n_rows = operand.shape[0]
     s_max = n_rows if max_send is None else min(int(max_send), n_rows)
     if not isinstance(send_sizes, jax.core.Tracer):
-        if int(jnp.max(send_sizes)) > s_max or int(jnp.max(recv_sizes)) > s_max:
+        if int(jnp.max(send_sizes)) > s_max or int(jnp.max(recv_sizes)) > s_max:  # lint-ok: traced-branch (concrete: non-Tracer guard above)
             raise ValueError(
                 f"ragged_all_to_all emulation bucket max_send={s_max} does "
                 f"not cover every span (max send "

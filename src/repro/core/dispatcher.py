@@ -68,7 +68,6 @@ concurrently with the first chunk's dispatch rather than after the combine.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
@@ -225,8 +224,8 @@ def _route_sweep(x: Array, wg: Array, mcfg: MoEConfig, fm: FoldedMesh,
     T, D = x.shape
     _, n_shards, x, t_local, _ = _token_shards(x, fm)
     chunks = x.reshape(n_shards, t_local, D)
-    valid = (jnp.arange(n_shards)[:, None] * t_local
-             + jnp.arange(t_local)[None, :]) < T                 # mask padding
+    valid = (jnp.arange(n_shards, dtype=jnp.int32)[:, None] * t_local
+             + jnp.arange(t_local, dtype=jnp.int32)[None, :]) < T  # mask padding
     cap = cap_fn(t_local)
 
     def one(xc, mask):
@@ -730,7 +729,7 @@ def moe_ffn(
         return y, aux, zl, dropf
 
     tok_spec = P(token_axes or None, None)
-    mask = jnp.arange(T_pad) < T                                            # padding mask
+    mask = jnp.arange(T_pad, dtype=jnp.int32) < T                           # padding mask
     edp_or = edp_axes or None
     args = [x, wg, w1, w2, w3]
     in_specs = [

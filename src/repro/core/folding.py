@@ -33,12 +33,36 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ParallelConfig, ParallelMappingSpec
+from repro.configs.base import ParallelConfig
 
 PODS_AXIS = "pod"
 PP_AXIS = "pp"
+# Atomic mesh axes created by the common refinement are named f0, f1, ...
+# (see build_folded_mesh). Everything that names a mesh axis *literally* —
+# shard_map specs, collective axis_name args — must use a registered name;
+# the static lint (repro.analysis.lint) enforces this against
+# :func:`is_registered_axis_name` so a typo'd or stale axis string fails
+# review instead of surfacing as an opaque GSPMD error.
+ATOM_AXIS_PREFIX = "f"
 
 AxisRef = Union[None, str, Tuple[str, ...]]
+
+
+def is_registered_axis_name(name: str) -> bool:
+    """True for mesh-axis names the folded mesh can ever define.
+
+    Registered names are the pod/pipeline axes and the refinement atoms
+    ``f0, f1, ...``:
+
+    >>> [is_registered_axis_name(n) for n in ("pod", "pp", "f0", "f12")]
+    [True, True, True, True]
+    >>> [is_registered_axis_name(n) for n in ("tp", "expert", "f", "fx")]
+    [False, False, False, False]
+    """
+    if name in (PODS_AXIS, PP_AXIS):
+        return True
+    return (name.startswith(ATOM_AXIS_PREFIX)
+            and name[len(ATOM_AXIS_PREFIX):].isdigit())
 
 
 def common_refinement(fa: Sequence[int], fb: Sequence[int]) -> Tuple[List[int], List[List[int]], List[List[int]]]:

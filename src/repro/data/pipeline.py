@@ -8,7 +8,7 @@ with numpy and device_put with the step's input sharding.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
 import jax.numpy as jnp

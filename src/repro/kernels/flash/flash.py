@@ -16,7 +16,6 @@ Grid: (B, H, Sq/bq, Skv/bkv), KV innermost.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

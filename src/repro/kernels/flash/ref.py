@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.models.attn_core import blockwise_attention, naive_attention
+from repro.models.attn_core import naive_attention
 
 
 def flash_ref(q, k, v, *, q_offset=0, causal=True, window=0, sm_scale=None):

@@ -17,8 +17,6 @@ Grid: (M/bm, N/bn, K/bk) — K innermost for accumulation in a VMEM scratch.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -19,5 +19,5 @@ def gmm_ref(x: jax.Array, w: jax.Array, block_expert: jax.Array, *,
 def group_sizes_to_block_expert(group_sizes: jax.Array, bm: int) -> jax.Array:
     """Expert id per row-block for group-contiguous rows (sizes % bm == 0)."""
     offsets = jnp.cumsum(group_sizes)
-    starts = jnp.arange(0, int(offsets[-1]), bm)
+    starts = jnp.arange(0, int(offsets[-1]), bm, dtype=jnp.int32)
     return jnp.searchsorted(offsets, starts, side="right").astype(jnp.int32)

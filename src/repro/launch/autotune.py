@@ -47,7 +47,6 @@ import argparse
 import dataclasses
 import functools
 import json
-import math
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig, ParallelConfig, \
@@ -373,6 +372,118 @@ def score(cfg: ModelConfig, shape: InputShape, cand: Candidate) -> Scored:
                   breakdown=breakdown)
 
 
+def collective_byte_budget(cfg: ModelConfig, shape: InputShape,
+                           cand: Candidate) -> List[Dict]:
+    """Analytic per-device wire-byte budget, one entry per collective family.
+
+    The byte side of :func:`score`'s collective terms (which turn these
+    same derivations into α-β times), exposed for the HLO collective audit
+    (``repro.analysis.hlo_audit``): each entry names the logical axes a
+    family is *allowed* to communicate over, the HLO op kinds it may use,
+    and the analytic per-step per-device wire bytes. A compiled collective
+    that matches no entry is unbudgeted — the GSPMD-resharding bug class.
+
+    Entries (``side``/``logical`` resolve to mesh atoms via ``FoldedMesh``):
+
+    * ``seqpar`` — sequence-parallel activation AG/RS (and fused AR /
+      layout all-to-alls) over the combined (cp · tp) sequence atoms.
+    * ``cp``   — ring-CP KV rotations (permutes) or allgather-KV.
+    * ``a2a``  — EP token dispatch/combine all-to-alls (+ the ragged path's
+      count-exchange all-gathers).
+    * ``etp``  — AG-V/RS-V around the expert FFN inside the etp group.
+    * ``dp`` / ``edp`` — FSDP param gathers + gradient reduce-scatter
+      (train), or stored-weight gathers (serve) over each side's full
+      data-parallel axis.
+    """
+    (dp, cp, tp), (edp, ep, etp) = cand.attn, cand.moe
+    pp_ = cand.pp
+    train = shape.kind == "train"
+    fb = 3.0 if train else 1.0
+    m = max(cand.microbatch, 1) if train else 1
+    tokens = (shape.global_batch if shape.kind == "decode"
+              else shape.global_batch * shape.seq_len)
+    d = cfg.d_model
+    Ls = cfg.n_layers / pp_
+    dense, routed = _split_params(cfg)
+    entries: List[Dict] = []
+
+    # Sequence-parallel activation layout: activations enter each layer
+    # sharded over the (cp · tp) sequence atoms, so the AG/RS (and fused
+    # AR / layout all-to-all) resharding family spans *both* axes — at
+    # tp=1, cp>1 the same collectives simply lower over the cp atoms.
+    act_dp = tokens / m / dp * d * 2.0      # activation bytes per dp rank
+    if cp * tp > 1:
+        entries.append(dict(
+            name="seqpar", side="attn", logical=("cp", "tp"),
+            kinds=("all-gather", "reduce-scatter", "all-reduce",
+                   "all-to-all"),
+            bytes=fb * m * Ls * 4.0 * act_dp))
+    if cp > 1:
+        if shape.kind == "decode":
+            blk = shape.global_batch / dp * d * 2.0
+        else:
+            blk = tokens / m / (dp * cp) * cfg.kv_dim * 2.0 * 2.0
+        # GSPMD fuses dp batch-resharding into the ring rotation, so the
+        # permutes can span the (dp · cp) atoms jointly.
+        entries.append(dict(
+            name="cp", side="attn", logical=("cp", "dp"),
+            kinds=("collective-permute", "all-gather", "all-to-all"),
+            bytes=fb * m * Ls * (cp - 1) * blk))
+    n_ssm_s = sum(1 for b in cfg.blocks()
+                  if b not in ("dense", "moe")) / pp_
+    if n_ssm_s and dp * cp * tp > 1:
+        # Sequence stays unsharded inside recurrent blocks, so every ssm
+        # layer reshards the cp-sharded activations on entry/exit, carries
+        # its state (per-head hd×hd matrices dwarf the activations at
+        # decode), and exchanges conv halos / sLSTM heads over tp — all
+        # lowered as permute chains over the whole attn fold.
+        hd = cfg.resolved_head_dim
+        state = shape.global_batch / dp * cfg.n_heads * hd * (hd + 2) * 4.0
+        entries.append(dict(
+            name="ssm-reshard", side="attn", logical=("cp", "dp", "tp"),
+            kinds=("collective-permute", "all-gather",
+                   "reduce-scatter", "all-to-all"),
+            bytes=fb * m * n_ssm_s * 2.0 * (act_dp + state)))
+    if cfg.moe is not None:
+        n_moe_s = sum(1 for b in cfg.blocks() if b == "moe") / pp_
+        local = tokens / m / (edp * ep)
+        r_bytes = local * cfg.moe.top_k * d * 2.0
+        if ep > 1:
+            # GSPMD fuses the dp→(edp·ep) batch resharding and the etp
+            # layout change into the dispatch exchange (so the family may
+            # span the edp and etp atoms too) and is free to lower
+            # small-group exchanges as permute chains.
+            entries.append(dict(
+                name="a2a", side="moe", logical=("ep", "edp", "etp"),
+                kinds=("all-to-all", "all-gather", "collective-permute"),
+                bytes=fb * m * n_moe_s * 2.0 * r_bytes))
+        if etp > 1:
+            entries.append(dict(
+                name="etp", side="moe", logical=("etp",),
+                kinds=("all-gather", "reduce-scatter", "all-reduce"),
+                bytes=fb * m * n_moe_s
+                * (r_bytes * etp * (etp - 1) / etp + r_bytes * (etp - 1))))
+    # Data-parallel / FSDP weight+grad traffic. Serve paths gather the
+    # world-sharded stored weights once per step; train adds the gradient
+    # reduce-scatter and runs the gather per microbatch.
+    dshard = dense / pp_ * 2.0 / tp
+    eshard = routed / pp_ * 2.0 / (ep * etp)
+    dp_logical = ("dp",) if train else ("dp", "cp", "tp")
+    for name, side, logical, shard, g in (
+            ("dp", "attn", dp_logical, dshard,
+             dp if train else dp * cp * tp),
+            ("edp", "moe", ("edp",), eshard, edp)):
+        if g > 1 and shard:
+            per_gather = shard * (g - 1) / g
+            nbytes = (m * 2.0 * per_gather + 2.0 * per_gather if train
+                      else per_gather)
+            entries.append(dict(
+                name=name, side=side, logical=logical,
+                kinds=("all-gather", "reduce-scatter", "all-reduce"),
+                bytes=nbytes))
+    return entries
+
+
 # ---------------------------------------------------------------------------
 # Search
 # ---------------------------------------------------------------------------
@@ -517,17 +628,25 @@ def format_markdown(scored: Sequence[Scored], top: int = 10,
     lines = []
     if title:
         lines += [f"### {title}", ""]
-    lines += ["| rank | mapping | step ms | MFU | mem GiB | "
+    lines += ["| rank | mapping | step ms | MFU | mem GiB | fits | "
               + " | ".join(_BREAKDOWN_KEYS) + " |",
-              "|" + "---|" * (5 + len(_BREAKDOWN_KEYS))]
+              "|" + "---|" * (6 + len(_BREAKDOWN_KEYS))]
+    n_over = 0
     for i, s in enumerate(scored[:top], 1):
         b = s.breakdown
+        fits = s.mem_bytes <= HBM_BYTES
+        n_over += not fits
         terms = [f"{b['bubble']:.3f}" if k == "bubble" else f"{b[k]*1e3:.2f}"
                  for k in _BREAKDOWN_KEYS]
         lines.append(
             f"| {i} | `{s.candidate.label()}` | {s.total_s*1e3:.2f} | "
-            f"{s.mfu:.3f} | {s.mem_bytes/2**30:.2f} | " + " | ".join(terms)
-            + " |")
+            f"{s.mfu:.3f} | {s.mem_bytes/2**30:.2f} | "
+            f"{'yes' if fits else '**NO**'} | " + " | ".join(terms) + " |")
+    if n_over:
+        lines += ["", f"**{n_over} of {min(top, len(scored))} shown "
+                  f"mappings exceed the {HBM_BYTES/2**30:.0f} GiB HBM "
+                  "budget** — the memory prune was waived because no "
+                  "candidate fits (see `search_mappings`)."]
     return "\n".join(lines) + "\n"
 
 

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import ASSIGNED, get_config
+from repro.configs import ASSIGNED
 from repro.configs.shapes import SHAPES, get_shape
 from repro.data.pipeline import make_batch_specs
 from repro.launch.mappings import model_for, pcfg_for
@@ -292,6 +292,38 @@ def run_autotune(arch: str, shape_name: str, world: int, top: int,
     print("all top candidates lower cleanly")
 
 
+def run_audit(arch: Optional[str], shape_name: Optional[str]) -> None:
+    """``--audit`` mode: classify + budget-diff the selected mappings.
+
+    Runs the structure-preserving probes from ``repro.analysis.hlo_audit``
+    for every selected ``_TABLE`` row and prints the classified collective
+    rows with their budget verdicts. Exits nonzero on findings (an
+    unbudgeted or over-budget collective family).
+    """
+    from repro.analysis import format_findings
+    from repro.analysis.hlo_audit import audit_mapping
+    from repro.launch.mappings import _TABLE
+    pairs = [(a, s) for a, s in sorted(_TABLE)
+             if (arch is None or a == arch)
+             and (shape_name is None or s == shape_name)]
+    if not pairs:
+        raise SystemExit(f"no _TABLE rows match arch={arch} shape={shape_name}")
+    findings = []
+    for a, s in pairs:
+        jax.clear_caches()
+        audit = audit_mapping(a, s)
+        findings.extend(audit.findings)
+        print(f"{audit.spec.key}  probe {audit.spec.label()} "
+              f"(world {audit.spec.world})")
+        for r in audit.rows:
+            print(f"  {r.kind:20s} atoms={','.join(r.atoms):12s} "
+                  f"fold={r.fold:9s} {r.wire_bytes/2**20:8.2f} MiB "
+                  f"x{r.count:.0f}  [{' '.join(r.labels)}]")
+    print(f"\naudited {len(pairs)} mappings: {format_findings(findings)}")
+    if findings:
+        raise SystemExit(1)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -311,11 +343,18 @@ def main() -> None:
                     help="rows to print in the --autotune table")
     ap.add_argument("--lower-top", type=int, default=3,
                     help="candidates to validate by lowering (0 = skip)")
+    ap.add_argument("--audit", action="store_true",
+                    help="run the HLO collective audit "
+                         "(repro.analysis.hlo_audit) for the selected "
+                         "arch/shape rows instead of compiling them")
     args = ap.parse_args()
 
     if args.autotune:
         run_autotune(args.autotune[0], args.autotune[1], args.world,
                      args.top, args.lower_top)
+        return
+    if args.audit:
+        run_audit(args.arch, args.shape)
         return
 
     archs = [args.arch] if args.arch else sorted(ASSIGNED)

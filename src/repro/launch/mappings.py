@@ -18,7 +18,7 @@ from typing import Dict, Optional, Tuple
 from repro.configs import get_config
 from repro.configs.base import (ModelConfig, ParallelConfig,
                                 ParallelMappingSpec as PM)
-from repro.configs.shapes import InputShape, get_shape
+from repro.configs.shapes import get_shape
 
 SWA_WINDOW = 8192  # sliding window used to run long_500k on full-attention archs
 

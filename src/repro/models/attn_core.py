@@ -79,7 +79,8 @@ def _fwd_scan(q, k, v, q_pos, kv_pos, *, causal, window, block_kv, scale):
             preferred_element_type=jnp.float32)
         return (m_new, l_new, acc_new), None
 
-    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(n_blocks))
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  jnp.arange(n_blocks, dtype=jnp.int32))
     lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), jnp.float32(1e30))
     out = acc / jnp.maximum(l[..., None], 1e-30)
     return out, lse, m, l, acc
@@ -125,8 +126,8 @@ def _bwd_scan(q, k, v, q_pos, kv_pos, lse, dout, delta, *, causal, window,
         return dq, (dk_b, dv_b)
 
     dq0 = jnp.zeros((B, H, Sq, hd), jnp.float32)
-    dq, (dk_blocks, dv_blocks) = jax.lax.scan(step, dq0,
-                                              jnp.arange(n_blocks))
+    dq, (dk_blocks, dv_blocks) = jax.lax.scan(
+        step, dq0, jnp.arange(n_blocks, dtype=jnp.int32))
     dk = dk_blocks.transpose(1, 2, 0, 3, 4).reshape(B, H, Skv, hd)
     dv = dv_blocks.transpose(1, 2, 0, 3, 4).reshape(B, H, Skv, hd)
     return dq, dk, dv

@@ -75,7 +75,8 @@ def apply_mrope(x: Array, positions_3d: Array, theta: float,
     assert sum(sections) == hd // 2, (sections, hd)
     freqs = rope_freqs(hd, theta)                          # (hd/2,)
     # Section ownership per frequency channel.
-    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=hd // 2)
+    sec_id = jnp.repeat(jnp.arange(3, dtype=jnp.int32), jnp.array(sections),
+                        total_repeat_length=hd // 2)
     pos = jnp.take_along_axis(
         positions_3d.astype(jnp.float32),
         jnp.broadcast_to(sec_id, positions_3d.shape[:-1] + (hd // 2,)).astype(jnp.int32),

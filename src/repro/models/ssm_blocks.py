@@ -15,13 +15,12 @@ instead (DESIGN.md §Arch-applicability).
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.folding import FoldedMesh
 from repro.models.common import dense_init, norm_apply, norm_init
 from repro.models.sharding import constrain, wconstrain
 from repro.models.transformer import _zero_aux, register_block
@@ -53,7 +52,7 @@ def chunked_decay_scan(q: Array, k: Array, v: Array, log_decay: Array,
     vc = v.reshape(B, H, nc, chunk, dv).transpose(2, 0, 1, 3, 4)
     gc = log_decay.reshape(B, H, nc, chunk).transpose(2, 0, 1, 3)
 
-    idx = jnp.arange(chunk)
+    idx = jnp.arange(chunk, dtype=jnp.int32)
     tri = idx[:, None] >= idx[None, :]          # i >= j
 
     def step(h, xs):
@@ -123,7 +122,7 @@ def _init_mamba2(key, cfg, dtype):
         "norm1": norm_init(cfg.norm, d),
         "w_in": dense_init(ks[0], d, 2 * d_in + 2 * n + nh, dtype=dtype),
         "conv_w": jax.random.normal(ks[1], (CONV_WIDTH, 1, conv_c), dtype) * 0.2,
-        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
         "dt_bias": jnp.zeros((nh,), jnp.float32),
         "d_skip": jnp.ones((nh,), jnp.float32),
         "w_out_ssm": dense_init(ks[2], d_in, d, dtype=dtype),

@@ -10,7 +10,7 @@ the cycle structure naturally.
 from __future__ import annotations
 
 import math
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -414,9 +414,11 @@ def decode_step(params: Dict, state: Dict, tokens: Array, cfg: ModelConfig,
     if cfg.name.startswith("gemma"):
         x = x * jnp.asarray(math.sqrt(cfg.d_model), dt)
     if cfg.rope_kind == "none" and not cfg.is_encoder_decoder:
-        x = x + _sinusoid(jnp.full((B, 1), step), cfg.d_model).astype(dt)
+        x = x + _sinusoid(jnp.full((B, 1), step, dtype=jnp.int32),
+                          cfg.d_model).astype(dt)
     if cfg.is_encoder_decoder:
-        x = x + _sinusoid(jnp.full((B, 1), step), cfg.d_model).astype(dt)
+        x = x + _sinusoid(jnp.full((B, 1), step, dtype=jnp.int32),
+                          cfg.d_model).astype(dt)
     x = constrain(x, fm, "attn", "dp", None, None)
 
     _, cycle = model_cycle(cfg)
@@ -474,13 +476,14 @@ def decode_step(params: Dict, state: Dict, tokens: Array, cfg: ModelConfig,
             return h, new_state
 
         x, new_cycle_state = jax.lax.scan(
-            body_xs, x, (params["cycle"], state["cycle"], jnp.arange(n_rep)))
+            body_xs, x, (params["cycle"], state["cycle"],
+                         jnp.arange(n_rep, dtype=jnp.int32)))
         state["cycle"] = new_cycle_state
     else:
         shared0 = state.get("shared", {"_": jnp.zeros((n_rep,), jnp.float32)})
         (x, new_cycle_state, new_shared), _ = jax.lax.scan(
             body, (x, state["cycle"], shared0),
-            (params["cycle"], jnp.arange(n_rep)))
+            (params["cycle"], jnp.arange(n_rep, dtype=jnp.int32)))
         state["cycle"] = new_cycle_state
         if cfg.shared_attention_every:
             state["shared"] = new_shared

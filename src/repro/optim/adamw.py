@@ -8,7 +8,7 @@ no collectives of its own; GSPMD keeps it fully local to each shard.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -22,9 +22,8 @@ Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -106,13 +105,20 @@ def _shape_bytes(type_str: str) -> int:
 
 _IOTA_FULL_RE = re.compile(
     r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+# Full nested explicit list ``{{0,1},{2,3}}`` — _GROUPS_RE (non-greedy to the
+# first ``}``) only sees the first group, which is all _group_info needs but
+# not enough to reconstruct the partition.
+_GROUPS_NESTED_RE = re.compile(r"replica_groups=\{((?:\{[\d, ]*\},?)+)\}")
 
 
-def _group_info(line: str, default: int, chips_per_pod: int) -> Tuple[int, bool]:
-    """(group_size, crosses_pod) for a collective instruction line.
+def hlo_replica_groups(line: str) -> Optional[List[List[int]]]:
+    """Full replica-group list of one collective instruction line, or None.
 
-    Iota replica groups ``[g,s]<=[dims]T(perm)`` are reconstructed exactly;
-    explicit ``{{...}}`` groups are parsed from the first group.
+    Both HLO spellings are reconstructed exactly: iota groups
+    ``[g,s]<=[dims]T(perm)`` and explicit ``{{0,1},{2,3}}`` lists. This is
+    the classification primitive of the collective audit
+    (``repro.analysis.hlo_audit``): the group *partition* identifies which
+    folded-mesh atoms a collective runs over.
     """
     import numpy as _np
     m = _IOTA_FULL_RE.search(line)
@@ -123,17 +129,26 @@ def _group_info(line: str, default: int, chips_per_pod: int) -> Tuple[int, bool]
         if m.group(4):
             perm = [int(x) for x in m.group(4).split(",")]
             arr = arr.transpose(perm)
-        groups = arr.reshape(g, s)
-        pods = groups // chips_per_pod
-        crosses = bool((pods != pods[:, :1]).any())
-        return s, crosses
-    m = _GROUPS_RE.search(line)
+        return arr.reshape(g, s).tolist()
+    m = _GROUPS_NESTED_RE.search(line) or _GROUPS_RE.search(line)
     if m:
-        first = m.group(1).split("}")[0].strip("{} ")
-        if first:
-            ranks = [int(x) for x in first.split(",") if x.strip() != ""]
-            crosses = len({r // chips_per_pod for r in ranks}) > 1
-            return len(ranks), crosses
+        groups = []
+        for chunk in m.group(1).split("}"):
+            chunk = chunk.strip("{}, ")
+            if chunk:
+                groups.append([int(x) for x in chunk.split(",")
+                               if x.strip() != ""])
+        return groups or None
+    return None
+
+
+def _group_info(line: str, default: int, chips_per_pod: int) -> Tuple[int, bool]:
+    """(group_size, crosses_pod) for a collective instruction line."""
+    groups = hlo_replica_groups(line)
+    if groups:
+        crosses = any(len({r // chips_per_pod for r in g}) > 1
+                      for g in groups)
+        return len(groups[0]), crosses
     return default, False
 
 
@@ -271,21 +286,21 @@ def _execution_multipliers(comps: Dict[str, List[str]],
     return mult
 
 
-def parse_collectives(hlo_text: str, n_devices: int,
-                      depth_factors: Optional[List[float]] = None,
-                      chips_per_pod: int = 256,
-                      ) -> List[CollectiveOp]:
-    """Scan post-SPMD HLO for collectives, scaling by while-loop trips.
+def scan_collective_lines(hlo_text: str,
+                          depth_factors: Optional[List[float]] = None,
+                          ) -> Iterator[Tuple[str, str, int, float, str]]:
+    """Yield ``(kind, line, result_bytes, exec_count, computation)`` for
+    every collective instruction in post-SPMD HLO.
 
-    Collectives inside scan bodies appear once in the text but run
-    trip-count times; while trip counts are parsed from cond constants
-    (``depth_factors`` is the fallback). Each op is tagged ``crosses_pod``
-    from its reconstructed replica groups — inter-pod ops are charged DCI
-    bandwidth instead of ICI.
+    The shared scanning primitive under :func:`parse_collectives` (roofline
+    wire-time accounting) and the collective audit
+    (``repro.analysis.hlo_audit`` classification): collectives inside scan
+    bodies appear once in the text but run trip-count times, so
+    ``exec_count`` is the product of enclosing while trip counts (parsed
+    from cond constants; ``depth_factors`` is the fallback).
     """
     comps = _split_computations(hlo_text)
     mult = _execution_multipliers(comps, depth_factors or [])
-    ops: Dict[Tuple[str, int, int, str, bool], CollectiveOp] = {}
     for comp_name, lines in comps.items():
         m_exec = mult.get(comp_name, 1.0)
         for line in lines:
@@ -305,29 +320,46 @@ def parse_collectives(hlo_text: str, n_devices: int,
                 if f" {kind}-done(" in rhs:
                     break  # -done carries no new bytes
                 type_part = rhs.split(kind)[0]
-                b = _shape_bytes(type_part)
-                g, crosses = _group_info(s, n_devices, chips_per_pod)
-                if g <= 1:
-                    break
-                if kind == "all-gather":
-                    wire = b * (g - 1) / g
-                elif kind == "reduce-scatter":
-                    wire = b * (g - 1)          # b is the (small) output
-                elif kind == "all-reduce":
-                    wire = 2 * b * (g - 1) / g
-                elif kind == "all-to-all":
-                    wire = b * (g - 1) / g
-                else:  # collective-permute
-                    wire = b
-                wire *= m_exec
-                key = (kind, b, g, comp_name, crosses)
-                if key in ops:
-                    ops[key].count += m_exec
-                    ops[key].wire_bytes += wire
-                else:
-                    ops[key] = CollectiveOp(kind, b, g, wire, m_exec,
-                                            comp_name, crosses)
+                yield kind, s, _shape_bytes(type_part), m_exec, comp_name
                 break
+
+
+def parse_collectives(hlo_text: str, n_devices: int,
+                      depth_factors: Optional[List[float]] = None,
+                      chips_per_pod: int = 256,
+                      ) -> List[CollectiveOp]:
+    """Scan post-SPMD HLO for collectives, scaling by while-loop trips.
+
+    Collectives inside scan bodies appear once in the text but run
+    trip-count times; while trip counts are parsed from cond constants
+    (``depth_factors`` is the fallback). Each op is tagged ``crosses_pod``
+    from its reconstructed replica groups — inter-pod ops are charged DCI
+    bandwidth instead of ICI.
+    """
+    ops: Dict[Tuple[str, int, int, str, bool], CollectiveOp] = {}
+    for kind, s, b, m_exec, comp_name in scan_collective_lines(
+            hlo_text, depth_factors):
+        g, crosses = _group_info(s, n_devices, chips_per_pod)
+        if g <= 1:
+            continue
+        if kind == "all-gather":
+            wire = b * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire = b * (g - 1)          # b is the (small) output
+        elif kind == "all-reduce":
+            wire = 2 * b * (g - 1) / g
+        elif kind == "all-to-all":
+            wire = b * (g - 1) / g
+        else:  # collective-permute
+            wire = b
+        wire *= m_exec
+        key = (kind, b, g, comp_name, crosses)
+        if key in ops:
+            ops[key].count += m_exec
+            ops[key].wire_bytes += wire
+        else:
+            ops[key] = CollectiveOp(kind, b, g, wire, m_exec,
+                                    comp_name, crosses)
     return list(ops.values())
 
 

@@ -13,15 +13,13 @@
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ParallelConfig
+from repro.configs.base import ModelConfig
 from repro.core import pipeline as pl
 from repro.core.folding import FoldedMesh
 from repro.models.common import softmax_cross_entropy
@@ -173,7 +171,7 @@ def make_train_step(cfg: ModelConfig, fm: FoldedMesh,
             (_, m0), g1 = grads_of(cparams, slice_mb(0))
             g0 = jax.tree.map(lambda g: g.astype(jnp.float32), g1)
             (g_sum, m_sum), _ = jax.lax.scan(
-                body, (g0, m0), jnp.arange(1, nmicro))
+                body, (g0, m0), jnp.arange(1, nmicro, dtype=jnp.int32))
             grads = jax.tree.map(lambda g: g / nmicro, g_sum)
             metrics = jax.tree.map(lambda m: m / nmicro, m_sum)
         else:

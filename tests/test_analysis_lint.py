@@ -1,0 +1,185 @@
+"""Custom jax lint (analysis/lint.py): each rule fires on a minimal
+synthetic snippet, waivers suppress, and the production tree is clean.
+"""
+import textwrap
+
+from repro.analysis.lint import lint_paths, lint_source
+
+
+def _lint(src, path="src/repro/core/router.py"):
+    return lint_source(path, textwrap.dedent(src))
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# traced-branch
+# ---------------------------------------------------------------------------
+
+def test_traced_branch_fires():
+    f = _lint("""
+        def step(x):
+            if jnp.max(x) > 0:
+                return x
+    """)
+    assert "traced-branch" in _rules(f)
+    assert "jnp.max" in [x for x in f if x.rule == "traced-branch"][0].message
+
+
+def test_traced_branch_ignores_attribute_compare_and_isinstance():
+    f = _lint("""
+        def step(p, x):
+            if p.dtype == jnp.float32:
+                return p
+            while isinstance(x, jax.core.Tracer):
+                x = x.val
+    """)
+    assert "traced-branch" not in _rules(f)
+
+
+def test_waiver_comment_suppresses():
+    f = _lint("""
+        def step(x):
+            if jnp.max(x) > 0:  # lint-ok: traced-branch
+                return x
+    """)
+    assert f == []
+
+
+# ---------------------------------------------------------------------------
+# key-reuse
+# ---------------------------------------------------------------------------
+
+def test_key_reuse_fires():
+    f = _lint("""
+        def init(key):
+            a = jax.random.normal(key, (2,))
+            b = jax.random.normal(key, (2,))
+            return a + b
+    """)
+    assert _rules(f) == ["key-reuse"]
+    assert "split or fold_in" in f[0].message
+
+
+def test_key_reuse_allows_split_and_reassignment():
+    f = _lint("""
+        def init(key):
+            k1, k2 = jax.random.split(key)
+            a = jax.random.normal(k1, (2,))
+            b = jax.random.normal(k2, (2,))
+            key, sk = jax.random.split(key)
+            c = jax.random.normal(sk, (2,))
+            key, sk = jax.random.split(key)
+            d = jax.random.normal(sk, (2,))
+            return a + b + c + d
+    """)
+    assert "key-reuse" not in _rules(f)
+
+
+# ---------------------------------------------------------------------------
+# nondet-in-det-path
+# ---------------------------------------------------------------------------
+
+def test_nondet_fires_in_router_module():
+    f = _lint("""
+        def route(logits):
+            return jax.lax.top_k(logits, 2)
+    """)
+    assert "nondet-in-det-path" in _rules(f)
+
+
+def test_nondet_exempt_in_guard_and_helper():
+    f = _lint("""
+        def deterministic_top_k(logits, k):
+            return jax.lax.top_k(logits, k)
+
+        def route(cfg, logits):
+            if cfg.deterministic_router:
+                idx = deterministic_top_k(logits, 2)
+            else:
+                idx = jax.lax.top_k(logits, 2)
+            order = jnp.argsort(logits, stable=True)
+            return idx, order
+    """)
+    assert "nondet-in-det-path" not in _rules(f)
+
+
+def test_nondet_not_flagged_outside_det_modules():
+    f = _lint("""
+        def pick(x):
+            return jnp.argmax(x)
+    """, path="src/repro/models/attn_core.py")
+    assert "nondet-in-det-path" not in _rules(f)
+
+
+# ---------------------------------------------------------------------------
+# implicit-dtype
+# ---------------------------------------------------------------------------
+
+def test_implicit_dtype_fires_in_hot_path():
+    f = _lint("def f(n):\n    return jnp.arange(n)\n")
+    assert "implicit-dtype" in _rules(f)
+
+
+def test_explicit_dtype_positional_or_kw_ok():
+    f = _lint("""
+        def f(n):
+            a = jnp.arange(n, dtype=jnp.int32)
+            b = jnp.zeros((n, n), jnp.float32)
+            c = jnp.full((n,), 2, jnp.int32)
+            return a, b, c
+    """)
+    assert "implicit-dtype" not in _rules(f)
+
+
+def test_implicit_dtype_scoped_to_hot_paths():
+    f = _lint("def f(n):\n    return jnp.arange(n)\n",
+              path="src/repro/launch/dryrun.py")
+    assert "implicit-dtype" not in _rules(f)
+
+
+# ---------------------------------------------------------------------------
+# unregistered-axis-name
+# ---------------------------------------------------------------------------
+
+def test_unregistered_axis_literal_fires():
+    f = _lint("""
+        def g(x):
+            return jax.lax.psum(x, "expert")
+    """)
+    assert "unregistered-axis-name" in _rules(f)
+    assert "'expert'" in f[0].message
+
+
+def test_registered_and_resolved_axis_names_ok():
+    f = _lint("""
+        def g(x, fm):
+            a = jax.lax.psum(x, "f0")
+            b = jax.lax.psum(x, ("pod", "pp"))
+            spec = P(fm.axis("attn", "dp"), None)
+            return a, b, spec
+    """)
+    assert "unregistered-axis-name" not in _rules(f)
+
+
+def test_partition_spec_literal_checked():
+    f = _lint("""
+        def g():
+            return P("dp", None)
+    """)
+    assert "unregistered-axis-name" in _rules(f)
+
+
+# ---------------------------------------------------------------------------
+# syntax errors + whole-tree cleanliness
+# ---------------------------------------------------------------------------
+
+def test_syntax_error_is_finding():
+    f = lint_source("x.py", "def broken(:\n")
+    assert _rules(f) == ["syntax-error"]
+
+
+def test_production_tree_is_clean():
+    assert lint_paths(["src"]) == []

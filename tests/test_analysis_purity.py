@@ -1,0 +1,139 @@
+"""Init-purity checker (analysis/purity.py) and its seeded regression
+corpus: the PR 2 EP-init RNG drift and the PR 4 ``strip_stack_pp`` init
+impurity, each re-created behind a fixture and asserted *caught*.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis.purity import (check_purity, device_order_variants,
+                                   mapping_variants, pytree_bitwise_diffs)
+from repro.configs import get_config, reduced
+from repro.configs.base import ParallelConfig, ParallelMappingSpec as PM
+
+
+def _cfg():
+    return reduced(get_config("mixtral-8x22b"), n_layers=4)
+
+
+def _init(fm, cfg):
+    from repro.train.loop import init_train_state
+    params, _ = init_train_state(jax.random.PRNGKey(0), cfg, fm)
+    return jax.tree.map(np.asarray, params)
+
+
+# ---------------------------------------------------------------------------
+# The comparison primitive
+# ---------------------------------------------------------------------------
+
+def test_bitwise_diffs_exact():
+    a = {"w": np.arange(6, dtype=np.float32).reshape(2, 3)}
+    assert pytree_bitwise_diffs(a, {"w": a["w"].copy()}) == []
+    b = {"w": a["w"].copy()}
+    b["w"][0, 0] += 1e-7      # numerically close is still a diff — by design
+    diffs = pytree_bitwise_diffs(a, b)
+    assert len(diffs) == 1
+    path, _n, mx = diffs[0]
+    assert "w" in path and 0 < mx < 1e-6
+
+
+def test_bitwise_diffs_structure_mismatch():
+    assert pytree_bitwise_diffs({"a": np.zeros(2)}, {"b": np.zeros(2)}) \
+        == [("<structure>", 1, float("inf"))]
+
+
+def test_check_purity_flags_impure_run():
+    calls = []
+
+    def run(ctx):
+        calls.append(ctx)
+        return {"w": np.full(4, float(len(calls)))}
+
+    findings = check_purity(run, [("a", 1), ("b", 2)],
+                            rule="test-impure", where="here")
+    assert len(findings) == 1
+    assert findings[0].rule == "test-impure"
+    assert "'b'" in findings[0].message and "w" in findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# Production invariants (subset of builtin_purity_suite, kept tier-1-fast)
+# ---------------------------------------------------------------------------
+
+def test_cross_mapping_init_pure():
+    """PR 2 invariant: gathered params identical across folded mappings."""
+    cfg = _cfg()
+    variants = mapping_variants([
+        ParallelConfig(attn=PM(2, 1, 2), moe=PM(1, 2, 2), pp=1),
+        ParallelConfig(attn=PM(4, 1, 1), moe=PM(2, 2, 1), pp=1),
+    ])
+    assert check_purity(lambda fm: _init(fm, cfg), variants,
+                        rule="mapping-dependent-init", where="test") == []
+
+
+def test_device_order_init_pure():
+    """Flat device order must not leak into initialization."""
+    cfg = _cfg()
+    variants = device_order_variants(
+        ParallelConfig(attn=PM(2, 1, 2), moe=PM(1, 2, 2), pp=1), n_perm=1)
+    assert check_purity(lambda fm: _init(fm, cfg), variants,
+                        rule="device-order-dependent-init", where="test") == []
+
+
+# ---------------------------------------------------------------------------
+# Seeded regression corpus
+# ---------------------------------------------------------------------------
+
+def test_detector_catches_pr2_rng_drift():
+    """Re-create the PR 2 bug: with ``jax_threefry_partitionable`` off,
+    sharded jit init is mapping-dependent — the checker must name the
+    drifted leaves. (Fixed for production in ``repro.__init__``.)"""
+    cfg = _cfg()
+    variants = mapping_variants([
+        ParallelConfig(attn=PM(2, 1, 2), moe=PM(1, 2, 2), pp=1),
+        ParallelConfig(attn=PM(4, 1, 1), moe=PM(2, 2, 1), pp=1),
+    ])
+    jax.config.update("jax_threefry_partitionable", False)
+    try:
+        jax.clear_caches()
+        findings = check_purity(lambda fm: _init(fm, cfg), variants,
+                                rule="mapping-dependent-init", where="seeded")
+    finally:
+        jax.config.update("jax_threefry_partitionable", True)
+        jax.clear_caches()
+    if not findings:
+        pytest.skip("non-partitionable threefry init is mapping-pure on "
+                    f"jax {jax.__version__} — PR 2 bug not reproducible")
+    assert findings[0].rule == "mapping-dependent-init"
+    assert "max |Δ|" in findings[0].message
+
+
+def test_detector_catches_pr4_stack_impurity():
+    """Re-create the PR 4 bug: jit init with a pp-sharded layer-stack dim
+    differs from the stripped-then-reshard production path — the checker
+    must catch the direct variant. (Mirrors
+    ``test_pipeline.test_strip_stack_pp_workaround_still_needed``.)"""
+    from repro.core.folding import build_folded_mesh
+    from repro.models.sharding import param_shardings, strip_stack_pp
+    from repro.models.transformer import init_lm
+    cfg = _cfg()
+    fm = build_folded_mesh(
+        ParallelConfig(attn=PM(2, 1, 2), moe=PM(1, 2, 2), pp=2))
+    shapes = jax.eval_shape(lambda k: init_lm(k, cfg), jax.random.PRNGKey(0))
+    pshard = param_shardings(shapes, fm, mode="store")
+    assert pshard["cycle"]["b0"]["moe"]["router"].spec[0] == ("pp",)
+
+    def run(out_shardings):
+        p = jax.jit(lambda k: init_lm(k, cfg),
+                    out_shardings=out_shardings)(jax.random.PRNGKey(0))
+        return jax.tree.map(np.asarray, p)
+
+    findings = check_purity(
+        run, [("stripped", strip_stack_pp(pshard, fm)), ("direct", pshard)],
+        rule="pp-stack-init-impurity", where="seeded")
+    if not findings:
+        pytest.skip("pp-sharded stack init is position-pure on "
+                    f"jax {jax.__version__} — PR 4 bug not reproducible "
+                    "(strip_stack_pp can retire, see ROADMAP (e))")
+    assert findings[0].rule == "pp-stack-init-impurity"
+    assert "'direct'" in findings[0].message

@@ -195,3 +195,35 @@ def test_rank_of_rejects_unenumerated_mapping():
     s = search_mappings("llama3.2-1b", "train_4k", 64, pp=1, vpp=1)
     with pytest.raises(ValueError, match="not in the searched space"):
         rank_of(s, (3, 1, 1), (3, 1, 1), 1)
+
+
+def test_format_markdown_surfaces_memory_prune_waiver():
+    """A ranked table containing over-HBM mappings (possible only when the
+    memory prune was waived because *no* candidate fits) must say so: the
+    per-row `fits` column and a trailing waiver note, nothing when all
+    rows fit."""
+    from repro.launch.autotune import format_markdown
+    cfg = model_for("mixtral-8x22b", "train_4k")
+    shape = get_shape("train_4k")
+    fitting = next(enumerate_candidates(cfg, shape, 16, pp=1, vpp=1))
+    ok = score(cfg, shape, fitting)
+    ok = type(ok)(candidate=ok.candidate, total_s=ok.total_s, mfu=ok.mfu,
+                  mem_bytes=HBM_BYTES // 2, breakdown=ok.breakdown)
+    over = type(ok)(candidate=ok.candidate, total_s=ok.total_s, mfu=ok.mfu,
+                    mem_bytes=2 * HBM_BYTES, breakdown=ok.breakdown)
+
+    clean = format_markdown([ok])
+    assert "| fits |" in clean and "| yes |" in clean
+    assert "exceed" not in clean
+
+    waived = format_markdown([ok, over])
+    assert "**NO**" in waived
+    assert "1 of 2 shown" in waived and "memory prune was waived" in waived
+
+
+def test_table_report_and_bench_row_carry_fits_memory():
+    """Satellite of the waiver surfacing: `table_report` exposes the
+    committed row's residency verdict, and the nightly bench row derives
+    it (benchmarks/autotune_table.py emits `fits_memory=...`)."""
+    rep = _report("mixtral-8x22b", "train_4k")
+    assert rep["fits_memory"] is True  # production mapping must fit

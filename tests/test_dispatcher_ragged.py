@@ -113,11 +113,11 @@ def test_ragged_all_to_all_shim_routes_spans():
     def body(op, io, ss, oo, rs):
         out = jnp.full((rcap, 1), -1.0)
         return ragged_all_to_all(op[0], out, io[0], ss[0], oo[0], rs[0],
-                                 axis_name="x")[None]
+                                 axis_name="x")[None]  # lint-ok: unregistered-axis-name
 
     f = shard_map(body, mesh=mesh,
-                  in_specs=(jax.sharding.PartitionSpec("x"),) * 5,
-                  out_specs=jax.sharding.PartitionSpec("x"))
+                  in_specs=(jax.sharding.PartitionSpec("x"),) * 5,  # lint-ok: unregistered-axis-name
+                  out_specs=jax.sharding.PartitionSpec("x"))  # lint-ok: unregistered-axis-name
     got = np.asarray(f(jnp.asarray(ops), jnp.asarray(in_off),
                        jnp.asarray(counts), jnp.asarray(out_off),
                        jnp.asarray(counts.transpose().copy())))

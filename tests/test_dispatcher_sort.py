@@ -94,7 +94,6 @@ def test_sort_gmm_kernel_exercised_on_tileable_shape(monkeypatch):
     """On an MXU-tileable shape the sorted layout routes expert compute
     through the Pallas GMM kernel (interpret mode on CPU) — and still
     matches the einsum-backed scatter path."""
-    import repro.core.dispatcher as disp
     import repro.kernels.gmm.ops as ops
     d, f, e, t, top_k = 128, 256, 4, 512, 2
     calls = []

@@ -17,7 +17,7 @@ import pytest
 pytestmark = pytest.mark.slow  # multi-minute model builds/compiles
 
 from repro.configs import get_config, reduced
-from repro.configs.base import MoEConfig, ParallelConfig, ParallelMappingSpec as PM
+from repro.configs.base import ParallelConfig, ParallelMappingSpec as PM
 from repro.core.folding import build_folded_mesh
 from repro.models.transformer import (apply_lm, decode_step, init_decode_state,
                                       init_lm)

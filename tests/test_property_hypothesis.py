@@ -10,7 +10,6 @@ import pytest
 
 pytest.importorskip("hypothesis")
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st

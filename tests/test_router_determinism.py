@@ -10,7 +10,6 @@ logits below the snap quantum."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import MoEConfig, ParallelConfig, ParallelMappingSpec as PM
@@ -29,7 +28,7 @@ def test_sharded_init_is_mapping_invariant():
     key = jax.random.PRNGKey(7)
     ref = jax.random.normal(key, (8, 256))
     devs = np.asarray(jax.devices()[:8])
-    for shape, spec in ((8,), P("x")), ((2, 4), P("x", "y")), ((4, 2), P("x", "y")):
+    for shape, spec in ((8,), P("x")), ((2, 4), P("x", "y")), ((4, 2), P("x", "y")):  # lint-ok: unregistered-axis-name
         mesh = Mesh(devs.reshape(shape), ("x", "y")[:len(shape)])
         sharded = jax.jit(
             lambda k: jax.random.normal(k, (8, 256)),

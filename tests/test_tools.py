@@ -1,0 +1,80 @@
+"""CI-gate plumbing tests (tools/assert_no_worse.py).
+
+The bench gate's failure modes must be *named* diffs, not tracebacks: a
+hand-edited or schema-drifted snapshot row used to surface as a bare
+KeyError half-way through the comparison.
+"""
+import importlib.util
+import json
+import os
+import pathlib
+
+_SPEC = importlib.util.spec_from_file_location(
+    "assert_no_worse",
+    os.path.join(os.path.dirname(__file__), os.pardir, "tools",
+                 "assert_no_worse.py"))
+anw = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(anw)
+
+CSV = ("name,us_per_call,derived\n"
+       "micro/a,100.0,n=1\n"
+       "micro/b,100.0,n=1\n")
+
+
+def _write(tmp_path, snap_rows, csv=CSV):
+    snap = tmp_path / "snap.json"
+    snap.write_text(json.dumps({"tolerance": 1.25, "abs_floor_us": 250.0,
+                                "rows": snap_rows}))
+    bench = tmp_path / "bench.csv"
+    bench.write_text(csv)
+    return str(bench), str(snap)
+
+
+def test_bench_gate_ok(tmp_path, capsys):
+    bench, snap = _write(tmp_path, {
+        "micro/a": {"us_per_call": 100.0, "derived": "n=1"},
+        "micro/b": {"us_per_call": 100.0, "derived": "n=1"},
+    })
+    assert anw.check_bench(bench, snap) == 0
+    assert "OK" in capsys.readouterr().out
+
+
+def test_bench_gate_names_malformed_snapshot_rows(tmp_path, capsys):
+    """Missing / non-numeric 'us_per_call' → named per-row diff, not a
+    KeyError mid-gate."""
+    bench, snap = _write(tmp_path, {
+        "micro/a": {"us_per_call": 100.0, "derived": "n=1"},
+        "micro/bad-missing": {"derived": "n=1"},
+        "micro/bad-type": {"us_per_call": "fast", "derived": "n=1"},
+    })
+    assert anw.check_bench(bench, snap) == 1
+    out = capsys.readouterr().out
+    assert "2 snapshot row(s)" in out and "us_per_call" in out
+    assert "micro/bad-missing" in out and "micro/bad-type" in out
+    assert "re-record the snapshot" in out
+
+
+def test_bench_gate_notes_unrecorded_new_rows(tmp_path, capsys):
+    """A fresh micro row that isn't in the snapshot yet is informational
+    (ungated), not a failure."""
+    bench, snap = _write(tmp_path, {
+        "micro/a": {"us_per_call": 100.0, "derived": "n=1"},
+    })
+    assert anw.check_bench(bench, snap) == 0
+    out = capsys.readouterr().out
+    assert "micro/b" in out and "ungated until re-recorded" in out
+
+
+def test_bench_gate_flags_vanished_row(tmp_path, capsys):
+    bench, snap = _write(tmp_path, {
+        "micro/a": {"us_per_call": 100.0, "derived": "n=1"},
+        "micro/gone": {"us_per_call": 100.0, "derived": "n=1"},
+    })
+    assert anw.check_bench(bench, snap) == 1
+    assert "micro/gone" in capsys.readouterr().out
+
+
+def test_summary_parse_still_hard_fails_without_summary(tmp_path):
+    import pytest
+    with pytest.raises(SystemExit, match="no pytest summary"):
+        anw.parse_summary("collecting ...\nSegmentation fault\n")

@@ -75,6 +75,21 @@ def check_bench(csv_path: str, snapshot_path: str) -> int:
 
     max_scale = float(snap.get("max_scale", 4.0))
 
+    # A malformed snapshot row (hand-edited, or recorded by an older
+    # benchmark runner with a different schema) must surface as a *named*
+    # per-row diff, not a bare KeyError half-way through the gate.
+    malformed = sorted(
+        name for name, rec in snap.get("rows", {}).items()
+        if not isinstance(rec, dict)
+        or not isinstance(rec.get("us_per_call"), (int, float)))
+    if malformed:
+        print(f"assert_no_worse[bench]: FAIL — {len(malformed)} snapshot "
+              f"row(s) in {snapshot_path} missing a numeric 'us_per_call' "
+              "(schema drift? re-record the snapshot):")
+        for name in malformed:
+            print(f"  {name}: {json.dumps(snap['rows'][name])[:100]}")
+        return 1
+
     def gated(name, rec):
         return name.startswith("micro/") and rec["us_per_call"] > 0 \
             and "error" not in rec.get("derived", "")
@@ -116,6 +131,12 @@ def check_bench(csv_path: str, snapshot_path: str) -> int:
                 f"{name}: {now:.1f}us (machine-normalized /{scale:.2f}) vs "
                 f"snapshot {base:.1f}us "
                 f"(+{(now / base - 1) * 100:.0f}% > {(tol - 1) * 100:.0f}%)")
+    new_rows = sorted(n for n in rows
+                      if n.startswith("micro/") and n not in snap["rows"])
+    if new_rows:
+        print(f"assert_no_worse[bench]: note — {len(new_rows)} micro row(s) "
+              "not in the snapshot (ungated until re-recorded): "
+              + ", ".join(new_rows))
     print(f"assert_no_worse[bench]: compared {compared} micro rows against "
           f"{snapshot_path} (tolerance {tol}x, floor {floor}us, "
           f"machine scale {scale:.2f})")
