@@ -1,18 +1,49 @@
-"""Minimal distributed-friendly checkpointing (npz + pytree manifest).
+"""Elastic sharded checkpointing on the folded mesh (npz + JSON manifest).
 
-Saves the *addressable* shards gathered to host as one ``.npz`` per step
-plus a JSON manifest of the tree structure and dtypes. No orbax dependency;
-restore re-shards via the provided shardings.
+Two on-disk formats, both committed crash-safely (write to a hidden tmp
+name, ``os.replace`` into place, then write a ``ckpt_*.done`` marker —
+``latest_step`` only believes marked steps, so a mid-save kill can never
+be resumed from):
+
+* **Legacy** (:func:`save`/:func:`restore`): the whole tree gathered to
+  host as one ``ckpt_{step}.npz`` + dtype/shape manifest. Simple, fully
+  replicated I/O — fine for smoke runs.
+* **Elastic sharded** (:func:`save_sharded`/:func:`restore_sharded`):
+  each host writes only the shards it owns (one ``shards_{proc}.npz`` per
+  host, optionally committed by a background thread) plus a
+  ``manifest.json`` recording, per leaf: global shape, dtype, the
+  folded-mesh :class:`PartitionSpec` it was stored under, and the exact
+  global index box of every shard. Restore takes a *target* tree of
+  shardings that may belong to a completely different
+  :class:`ParallelConfig`, mesh, or world size: each target shard is
+  stitched from the overlapping source boxes
+  (:func:`jax.make_array_from_callback`), so only the bytes a host needs
+  are assembled — the elastic-restart path (docs/checkpointing.md).
+
+Shard ownership: for every distinct index box of a leaf, the device with
+the smallest id holding it is the owner (replica de-duplication); the
+owner's process writes that box. On a single host this degenerates to
+"process 0 writes everything" but the manifest layout is the multi-host
+one.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, Optional
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
+FORMAT = "repro-elastic-v1"
+_TMP_PREFIX = ".tmp."
+
+
+# ---------------------------------------------------------------------------
+# Pytree / spec plumbing
+# ---------------------------------------------------------------------------
 
 def _flatten(tree) -> Dict[str, Any]:
     flat = {}
@@ -22,43 +53,456 @@ def _flatten(tree) -> Dict[str, Any]:
     return flat
 
 
+def _leaf_keys_in_order(tree) -> List[str]:
+    return list(_flatten(tree).keys())
+
+
+def spec_to_json(spec) -> List[Optional[List[str]]]:
+    """Encode a PartitionSpec as JSON-able data (one entry per dim).
+
+    >>> from jax.sharding import PartitionSpec as P
+    >>> spec_to_json(P(("f0", "f1"), None, "f2"))
+    [['f0', 'f1'], None, ['f2']]
+    >>> spec_to_json(P())
+    []
+    """
+    out: List[Optional[List[str]]] = []
+    for e in tuple(spec):
+        if e is None:
+            out.append(None)
+        elif isinstance(e, str):
+            out.append([e])
+        else:
+            out.append(list(e))
+    return out
+
+
+def spec_from_json(entries: Sequence[Optional[Sequence[str]]]):
+    """Inverse of :func:`spec_to_json`.
+
+    >>> spec_from_json([['f0', 'f1'], None, ['f2']])
+    PartitionSpec(('f0', 'f1'), None, 'f2')
+    """
+    from jax.sharding import PartitionSpec as P
+    out = []
+    for e in entries:
+        if e is None:
+            out.append(None)
+        elif len(e) == 1:
+            out.append(e[0])
+        else:
+            out.append(tuple(e))
+    return P(*out)
+
+
+def _undo_void(arr: np.ndarray, dtype: np.dtype) -> np.ndarray:
+    """Recover extension dtypes (bfloat16, fp8) from an npz round trip.
+
+    ``np.savez`` stores ml_dtypes arrays but ``np.load`` hands them back
+    as raw ``V<itemsize>`` void records; a view restores the dtype
+    losslessly (same bytes).
+    """
+    if arr.dtype != dtype and arr.dtype.kind == "V" \
+            and arr.dtype.itemsize == dtype.itemsize:
+        return arr.view(dtype)
+    return arr
+
+
+def _norm_index(index: Tuple, shape: Tuple[int, ...]
+                ) -> Tuple[Tuple[int, int], ...]:
+    """Normalize a tuple-of-slices device index to ((start, stop), ...)."""
+    out = []
+    for sl, dim in zip(index, shape):
+        start, stop, step = sl.indices(dim)
+        assert step == 1, (sl, dim)
+        out.append((start, stop))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Crash-safe file commit
+# ---------------------------------------------------------------------------
+
+def _atomic_write_npz(path: str, arrays: Dict[str, np.ndarray]) -> None:
+    tmp = os.path.join(os.path.dirname(path),
+                       _TMP_PREFIX + os.path.basename(path))
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+
+
+def _atomic_write_json(path: str, payload: Dict) -> None:
+    tmp = os.path.join(os.path.dirname(path),
+                       _TMP_PREFIX + os.path.basename(path))
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1)
+    os.replace(tmp, path)
+
+
+def _done_path(directory: str, step: int) -> str:
+    return os.path.join(directory, f"ckpt_{step:08d}.done")
+
+
+def _write_done(directory: str, step: int, kind: str) -> None:
+    _atomic_write_json(_done_path(directory, step),
+                       {"step": step, "format": FORMAT, "kind": kind})
+
+
+# ---------------------------------------------------------------------------
+# Legacy whole-tree format
+# ---------------------------------------------------------------------------
+
 def save(directory: str, step: int, tree) -> str:
+    """Gather the whole tree to host and save one npz (+ manifest + marker).
+
+    Crash-safe: payload and manifest are written to tmp names and renamed
+    into place before the ``ckpt_*.done`` marker appears; a kill at any
+    point leaves either no marker (step invisible to :func:`latest_step`)
+    or a fully committed checkpoint.
+    """
     os.makedirs(directory, exist_ok=True)
     flat = _flatten(tree)
     arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    np.savez(path, **arrays)
+    _atomic_write_npz(path, arrays)
     manifest = {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                 for k, v in arrays.items()}
-    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
+    _atomic_write_json(os.path.join(directory, f"ckpt_{step:08d}.json"),
+                       manifest)
+    _write_done(directory, step, "legacy")
     return path
 
 
-def latest_step(directory: str) -> Optional[int]:
-    if not os.path.isdir(directory):
-        return None
-    steps = [int(f[5:13]) for f in os.listdir(directory)
-             if f.startswith("ckpt_") and f.endswith(".npz")]
-    return max(steps) if steps else None
+def _validate_keys(ckpt_keys: Sequence[str], like_keys: Sequence[str],
+                   where: str) -> None:
+    missing = sorted(set(like_keys) - set(ckpt_keys))
+    extra = sorted(set(ckpt_keys) - set(like_keys))
+    if missing or extra:
+        parts = []
+        if missing:
+            parts.append(f"missing from checkpoint: {missing}")
+        if extra:
+            parts.append(f"extra in checkpoint: {extra}")
+        raise ValueError(
+            f"checkpoint tree mismatch in {where}: " + "; ".join(parts))
+
+
+def _validate_leaf(key: str, ck_shape: Tuple[int, ...], ck_dtype: str,
+                   like_leaf, where: str) -> None:
+    want_dtype = str(getattr(like_leaf, "dtype", np.asarray(like_leaf).dtype))
+    want_shape = tuple(getattr(like_leaf, "shape",
+                               np.asarray(like_leaf).shape))
+    if str(ck_dtype) != want_dtype:
+        raise ValueError(
+            f"checkpoint dtype mismatch in {where} for leaf {key!r}: "
+            f"checkpoint has {ck_dtype}, restore target expects "
+            f"{want_dtype} (no implicit cast)")
+    if tuple(ck_shape) != want_shape:
+        raise ValueError(
+            f"checkpoint shape mismatch in {where} for leaf {key!r}: "
+            f"checkpoint has {tuple(ck_shape)}, restore target expects "
+            f"{want_shape}")
 
 
 def restore(directory: str, step: int, like_tree, shardings=None):
-    """Restore into the structure of ``like_tree`` (re-sharding if given)."""
-    data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
+    """Restore a legacy checkpoint into the structure of ``like_tree``.
+
+    Raises a ``ValueError`` naming missing/extra leaf keys and any
+    dtype/shape mismatch against the saved arrays — never an opaque
+    ``KeyError`` or a silent implicit cast.
+    """
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    if not os.path.exists(path):
+        raise ValueError(f"no legacy checkpoint for step {step} in "
+                         f"{directory!r} (expected {path!r})")
+    data = np.load(path)
+    man_path = os.path.join(directory, f"ckpt_{step:08d}.json")
+    man = {}
+    if os.path.exists(man_path):
+        with open(man_path) as f:
+            man = json.load(f)
     flat_like = _flatten(like_tree)
+    _validate_keys(list(data.keys()), list(flat_like.keys()), where=path)
     flat_shard = _flatten(shardings) if shardings is not None else {}
     out = {}
     for k, ref in flat_like.items():
-        arr = data[k]
+        # npz loses extension dtypes (bf16 → V2); the manifest keeps the
+        # true dtype and the byte view restores it.
+        true_dtype = np.dtype(man.get(k, {}).get("dtype", str(data[k].dtype)))
+        arr = _undo_void(data[k], true_dtype)
+        _validate_leaf(k, arr.shape, arr.dtype, ref, where=path)
         if k in flat_shard:
             out[k] = jax.device_put(arr, flat_shard[k])
         else:
             out[k] = jax.numpy.asarray(arr)
-    # Rebuild tree
-    leaves_order = [
-        "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        for path, _ in jax.tree_util.tree_flatten_with_path(like_tree)[0]
-    ]
+    leaves_order = _leaf_keys_in_order(like_tree)
     treedef = jax.tree_util.tree_structure(like_tree)
     return jax.tree_util.tree_unflatten(treedef, [out[k] for k in leaves_order])
+
+
+# ---------------------------------------------------------------------------
+# Elastic sharded format
+# ---------------------------------------------------------------------------
+
+class PendingSave:
+    """Handle for an in-flight :func:`save_sharded` commit.
+
+    The device→host copies happen synchronously in the caller's thread
+    (so donation/deletion of the arrays afterwards is safe); file I/O,
+    the atomic rename, and the done marker run in a background thread.
+    ``wait()`` re-raises any I/O failure and returns the final path.
+    """
+
+    def __init__(self, thread: Optional[threading.Thread], path: str):
+        self._thread = thread
+        self._error: List[BaseException] = []
+        self.path = path
+
+    def wait(self) -> str:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error:
+            raise self._error[0]
+        return self.path
+
+
+def _leaf_shards(leaf) -> Tuple[Tuple[int, ...], str, List[Dict]]:
+    """(global_shape, spec_json_or_None, shard records) for one leaf.
+
+    Each record: owner process, owner device id, (start, stop) box, and —
+    when the owner is addressable from this process — the host ndarray.
+    """
+    if isinstance(leaf, jax.Array):
+        shape = tuple(leaf.shape)
+        sharding = leaf.sharding
+        spec = (spec_to_json(sharding.spec)
+                if hasattr(sharding, "spec") else None)
+        index_map = sharding.devices_indices_map(shape)
+        by_box: Dict[Tuple, Any] = {}
+        for dev, index in index_map.items():
+            box = _norm_index(tuple(index), shape)
+            if box not in by_box or dev.id < by_box[box].id:
+                by_box[box] = dev
+        local = {s.device.id: s for s in leaf.addressable_shards}
+        recs = []
+        for box in sorted(by_box):
+            dev = by_box[box]
+            data = None
+            if dev.id in local:
+                data = np.asarray(local[dev.id].data)
+            recs.append({"proc": dev.process_index, "box": box, "data": data})
+        return shape, spec, recs
+    arr = np.asarray(jax.device_get(leaf))
+    box = tuple((0, d) for d in arr.shape)
+    return tuple(arr.shape), None, [{"proc": 0, "box": box, "data": arr}]
+
+
+def save_sharded(directory: str, step: int, tree, *,
+                 meta: Optional[Dict] = None, block: bool = True):
+    """Save ``tree`` in the elastic sharded format.
+
+    Every host writes one ``ckpt_{step}/shards_{proc:05d}.npz`` holding
+    only the shard boxes it owns; process 0 additionally writes
+    ``manifest.json`` (tree keys, global shapes, dtypes, the folded-mesh
+    PartitionSpec per leaf, and the shard index). The step directory is
+    assembled under a tmp name, renamed into place, and only then marked
+    with ``ckpt_{step}.done``.
+
+    ``block=False`` returns a :class:`PendingSave` whose ``wait()``
+    finishes the commit; the device→host copies are taken synchronously
+    either way, so the caller may immediately donate the arrays.
+    """
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    proc = jax.process_index()
+
+    leaves: Dict[str, Dict] = {}
+    my_arrays: Dict[str, np.ndarray] = {}
+    for key, leaf in flat.items():
+        shape, spec, recs = _leaf_shards(leaf)
+        dtype = str(leaf.dtype if hasattr(leaf, "dtype")
+                    else np.asarray(leaf).dtype)
+        shard_recs = []
+        for i, rec in enumerate(recs):
+            npz_key = f"{key}##{i}"
+            shard_recs.append({
+                "file": f"shards_{rec['proc']:05d}.npz",
+                "key": npz_key,
+                "start": [b[0] for b in rec["box"]],
+                "stop": [b[1] for b in rec["box"]],
+            })
+            if rec["proc"] == proc:
+                assert rec["data"] is not None, (key, i)
+                my_arrays[npz_key] = rec["data"]
+        leaves[key] = {"shape": list(shape), "dtype": dtype,
+                       "spec": spec, "shards": shard_recs}
+
+    manifest = {
+        "format": FORMAT,
+        "step": step,
+        "meta": meta or {},
+        "leaves": leaves,
+    }
+
+    final = os.path.join(directory, f"ckpt_{step:08d}")
+    tmp = os.path.join(directory, f"{_TMP_PREFIX}ckpt_{step:08d}.{os.getpid()}")
+    pending = PendingSave(None, final)
+
+    def commit():
+        try:
+            os.makedirs(tmp, exist_ok=True)
+            with open(os.path.join(tmp, f"shards_{proc:05d}.npz"), "wb") as f:
+                np.savez(f, **my_arrays)
+            if proc == 0:
+                _atomic_write_json(os.path.join(tmp, "manifest.json"),
+                                   manifest)
+            # Multi-host note: a real multi-controller run would barrier
+            # here so the rename happens once, after every host's file
+            # landed. Single-controller JAX (this repo's reality) commits
+            # directly.
+            if os.path.isdir(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            _write_done(directory, step, "sharded")
+        except BaseException as e:  # re-raised from wait()
+            pending._error.append(e)
+
+    if block:
+        commit()
+        pending.wait()
+        return final
+    thread = threading.Thread(target=commit, daemon=True,
+                              name=f"ckpt-save-{step}")
+    pending._thread = thread
+    thread.start()
+    return pending
+
+
+def read_manifest(directory: str, step: int) -> Dict:
+    path = os.path.join(directory, f"ckpt_{step:08d}", "manifest.json")
+    if not os.path.exists(path):
+        raise ValueError(f"no sharded checkpoint for step {step} in "
+                         f"{directory!r} (expected {path!r})")
+    with open(path) as f:
+        return json.load(f)
+
+
+def _assemble_box(target_box: Tuple[Tuple[int, int], ...],
+                  rec: Dict, files: Dict[str, Any],
+                  dtype: np.dtype) -> np.ndarray:
+    """Stitch one target index box from the overlapping source shards."""
+    shape = tuple(stop - start for start, stop in target_box)
+    out = np.empty(shape, dtype=dtype)
+    filled = 0
+    for sh in rec["shards"]:
+        src_start, src_stop = sh["start"], sh["stop"]
+        ov = [(max(a0, b0), min(a1, b1))
+              for (a0, a1), (b0, b1) in zip(target_box,
+                                            zip(src_start, src_stop))]
+        if any(o1 <= o0 for o0, o1 in ov):
+            continue
+        src = _undo_void(files[sh["file"]][sh["key"]], dtype)
+        dst_idx = tuple(slice(o0 - t0, o1 - t0)
+                        for (o0, o1), (t0, _) in zip(ov, target_box))
+        src_idx = tuple(slice(o0 - s0, o1 - s0)
+                        for (o0, o1), s0 in zip(ov, src_start))
+        out[dst_idx] = src[src_idx]
+        filled += int(np.prod([o1 - o0 for o0, o1 in ov]))
+    want = int(np.prod(shape)) if shape else 1
+    if not shape:  # scalar: a single covering shard
+        sh0 = rec["shards"][0]
+        out[()] = _undo_void(files[sh0["file"]][sh0["key"]], dtype)
+        filled = 1
+    if filled != want:
+        raise ValueError(
+            f"sharded checkpoint does not cover target box {target_box} "
+            f"({filled}/{want} elements) — corrupt or truncated manifest")
+    return out
+
+
+def restore_sharded(directory: str, step: int, like_tree, shardings):
+    """Restore a sharded checkpoint onto a (possibly different) mapping.
+
+    ``like_tree`` supplies the target tree structure/dtypes (arrays or
+    ``ShapeDtypeStruct``); ``shardings`` a mirroring tree of target
+    ``Sharding``s — typically built from a *different*
+    ``ParallelConfig``/mesh/world size than the saving run. Each target
+    shard is assembled on host from the source boxes recorded in the
+    manifest and ``device_put`` via :func:`jax.make_array_from_callback`,
+    so resharding happens by index arithmetic, not collectives.
+
+    Validates the manifest against ``like_tree`` first: missing/extra
+    leaves and dtype/shape mismatches raise a naming ``ValueError``.
+    """
+    manifest = read_manifest(directory, step)
+    leaves = manifest["leaves"]
+    ckpt_dir = os.path.join(directory, f"ckpt_{step:08d}")
+    flat_like = _flatten(like_tree)
+    flat_shard = _flatten(shardings)
+    _validate_keys(list(leaves.keys()), list(flat_like.keys()),
+                   where=ckpt_dir)
+    for k, ref in flat_like.items():
+        _validate_leaf(k, tuple(leaves[k]["shape"]), leaves[k]["dtype"],
+                       ref, where=ckpt_dir)
+
+    files: Dict[str, Any] = {}
+    for k in leaves:
+        for sh in leaves[k]["shards"]:
+            if sh["file"] not in files:
+                fpath = os.path.join(ckpt_dir, sh["file"])
+                if not os.path.exists(fpath):
+                    raise ValueError(
+                        f"sharded checkpoint {ckpt_dir!r} is missing shard "
+                        f"file {sh['file']!r} named by its manifest")
+                files[sh["file"]] = np.load(fpath)
+
+    out = {}
+    for k, ref in flat_like.items():
+        rec = leaves[k]
+        shape = tuple(rec["shape"])
+        dtype = np.dtype(rec["dtype"])
+        sharding = flat_shard[k]
+
+        def cb(index, rec=rec, shape=shape, dtype=dtype):
+            box = _norm_index(tuple(index), shape)
+            return _assemble_box(box, rec, files, dtype)
+
+        out[k] = jax.make_array_from_callback(shape, sharding, cb)
+    leaves_order = _leaf_keys_in_order(like_tree)
+    treedef = jax.tree_util.tree_structure(like_tree)
+    return jax.tree_util.tree_unflatten(treedef, [out[k] for k in leaves_order])
+
+
+# ---------------------------------------------------------------------------
+# Step discovery
+# ---------------------------------------------------------------------------
+
+def _payload_exists(directory: str, step: int) -> bool:
+    if os.path.exists(os.path.join(directory, f"ckpt_{step:08d}.npz")):
+        return True
+    return os.path.exists(
+        os.path.join(directory, f"ckpt_{step:08d}", "manifest.json"))
+
+
+def available_steps(directory: str) -> List[int]:
+    """Steps with a completed (marked + payload-present) checkpoint."""
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for f in os.listdir(directory):
+        if f.startswith("ckpt_") and f.endswith(".done"):
+            try:
+                step = int(f[5:13])
+            except ValueError:
+                continue
+            if _payload_exists(directory, step):
+                steps.append(step)
+    return sorted(steps)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    """Newest *completed* step — checkpoints without a ``ckpt_*.done``
+    marker (a mid-save kill) are never resumed from."""
+    steps = available_steps(directory)
+    return steps[-1] if steps else None

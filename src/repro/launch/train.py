@@ -1,12 +1,20 @@
 """Training launcher.
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-moe-30b-a3b \
-        --steps 50 --reduced --seq 128 --batch 8
+        --steps 50 --reduced --seq 128 --batch 8 \
+        --ckpt-dir /tmp/ckpt --ckpt-every 20 --resume
 
 ``--reduced`` runs the smoke-sized variant on host devices (the only real
 execution possible in this CPU container); without it the full config is
 *lowered and compiled* for the production mesh and the launcher prints the
 dry-run analysis instead of executing (no TPU attached).
+
+Checkpointing uses the elastic sharded format (checkpoint/store.py):
+``--ckpt-every N`` saves params + ZeRO-1 optimizer state every N steps
+(async, committed by a background thread, crash-safe tmp+rename+done
+marker); ``--resume`` restores the newest completed step — the restore
+reshands through the folded-mesh specs, so resuming under a different
+mapping or world size than the saving run is supported.
 """
 import argparse
 import time
@@ -21,6 +29,15 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50,
+                    help="save every N steps when --ckpt-dir is set")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest completed checkpoint in "
+                         "--ckpt-dir (elastic: the saving run may have "
+                         "used a different mapping/world size)")
+    ap.add_argument("--master-weights", action="store_true",
+                    help="ZeRO-1 fp32 master copy in the optimizer state "
+                         "(params stored in compute dtype)")
     ap.add_argument("--multi-pod", action="store_true")
     args = ap.parse_args()
 
@@ -43,27 +60,57 @@ def main() -> None:
     from repro.train.loop import (batch_shardings, init_train_state,
                                   make_train_step)
 
+    from repro.train.loop import restore_train_state, save_train_state
+
+    import dataclasses
     cfg = reduced(get_config(args.arch))
     moe = PM(1, 8, 1) if cfg.moe is not None else PM(2, 2, 2)
+    if cfg.moe is not None and cfg.moe.n_experts % 8:
+        # reduced() caps n_experts at 4; the EP8 fold needs E % EP == 0
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, n_experts=8))
     fm = build_folded_mesh(ParallelConfig(attn=PM(2, 2, 2), moe=moe))
-    params, opt = init_train_state(jax.random.PRNGKey(0), cfg, fm)
-    step = make_train_step(cfg, fm, adamw.AdamWConfig(
-        lr=args.lr, warmup_steps=10, decay_steps=args.steps))
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, warmup_steps=10,
+                                decay_steps=args.steps,
+                                master_weights=args.master_weights)
+    start = 0
+    if args.resume and args.ckpt_dir:
+        last = store.latest_step(args.ckpt_dir)
+        if last is not None:
+            params, opt = restore_train_state(args.ckpt_dir, last, cfg, fm,
+                                              opt_cfg)
+            start = last
+            print(f"resumed step {last} from {args.ckpt_dir} "
+                  f"(elastic restore onto {fm.describe()})")
+    if start == 0:
+        params, opt = init_train_state(jax.random.PRNGKey(0), cfg, fm,
+                                       opt_cfg)
+    step = make_train_step(cfg, fm, opt_cfg)
     data = SyntheticTokens(DataConfig(seq_len=args.seq,
                                       global_batch=args.batch,
                                       vocab_size=cfg.vocab_size))
+    for _ in range(start):   # replay the deterministic stream to `start`
+        next(data)
     bs = batch_shardings(cfg, fm)
+    pending = None
     t0 = time.time()
-    for i, nb in zip(range(args.steps), data):
+    for i, nb in zip(range(start, args.steps), data):
         nb = materialize_batch(cfg, nb)
         batch = {k: jax.device_put(v, bs[k]) for k, v in nb.items() if k in bs}
         params, opt, m = step(params, opt, batch)
         if i % 10 == 0 or i == args.steps - 1:
             print(f"step {i:4d} loss={float(m['loss']):.4f} "
                   f"gnorm={float(m['grad_norm']):.2f} "
-                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
-        if args.ckpt_dir and (i + 1) % 50 == 0:
-            store.save(args.ckpt_dir, i + 1, {"params": params})
+                  f"({(time.time()-t0)/(i-start+1):.2f}s/step)")
+        if args.ckpt_dir and (i + 1) % max(args.ckpt_every, 1) == 0:
+            if pending is not None:
+                pending.wait()       # one save in flight at a time
+            pending = save_train_state(args.ckpt_dir, i + 1, params, opt,
+                                       block=False)
+    if pending is not None:
+        pending.wait()
+    if args.ckpt_dir and store.latest_step(args.ckpt_dir) != args.steps:
+        save_train_state(args.ckpt_dir, args.steps, params, opt)
 
 
 if __name__ == "__main__":

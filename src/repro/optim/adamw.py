@@ -1,19 +1,49 @@
-"""AdamW with distributed (ZeRO-1/3) state sharding.
+"""AdamW with ZeRO-1 distributed state sharding over the folded mesh.
 
-Optimizer moments and fp32 master weights live with the same *store-mode*
-sharding as the parameters (FSDP atoms included), so per-device optimizer
-memory is `state / (dp × model)`. The update is purely elementwise —
-no collectives of its own; GSPMD keeps it fully local to each shard.
+Optimizer state lives sharded over the *data-parallel fold atoms*:
+
+* Moments (``mu``/``nu``) and the optional fp32 master-weight copy start
+  from the parameter's *store-mode* sharding (``models.sharding`` RULES —
+  FSDP atoms included when ``pcfg.fsdp``) and are additionally partitioned
+  over the DP atoms of the owning side of the fold: attention-side leaves
+  over ``attn.dp``, expert leaves (``experts/``, ``moe/shared/``) over the
+  MoE-side ``edp`` atoms. Per-device optimizer memory is therefore
+  ``state / (dp × model)`` even for leaves the store rules replicate
+  (norms, biases, the router) — the ZeRO-1 contract.
+* With ``AdamWConfig.master_weights`` the fp32 source of truth moves into
+  ``AdamWState.master`` (DP-sharded) and the parameters the train loop
+  carries can stay in the compute dtype; the update reads the master,
+  steps it in fp32, and emits params as a cast of the new master. The
+  math is identical to the fp32-params path, so fp32 trajectories are
+  bitwise unchanged.
+
+The update itself is purely elementwise — GSPMD inserts the ZeRO
+gather/scatter collectives implied by the sharding mismatch between
+gradients (store sharding) and optimizer state (DP-sharded).
+
+``adamw_state_specs`` exposes the state partition specs as plain data so
+the param↔optimizer-state sharding consistency is inspectable and
+testable (tests/test_checkpoint.py), and so the elastic checkpoint can
+reassemble state onto a different mapping (checkpoint/store.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
+import re
 from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.folding import FoldedMesh
 
 Array = jax.Array
+
+# Leaf paths whose optimizer state shards over the MoE-side edp atoms
+# instead of the attention-side dp atoms (mirrors the efsdp store rules).
+_MOE_SIDE = re.compile(r"experts/|moe/shared/")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,12 +57,18 @@ class AdamWConfig:
     warmup_steps: int = 100
     decay_steps: int = 10_000
     min_lr_ratio: float = 0.1
+    # ZeRO-1 fp32 master copy: the fp32 source of truth lives DP-sharded in
+    # AdamWState.master and train-loop params may be stored in the compute
+    # dtype. Off = params are the fp32 masters (seed behavior).
+    master_weights: bool = False
 
 
 class AdamWState(NamedTuple):
     step: Array
     mu: Any
     nu: Any
+    # fp32 master params (ZeRO-1); None when params are the fp32 masters.
+    master: Any = None
 
 
 def schedule(cfg: AdamWConfig, step: Array) -> Array:
@@ -45,11 +81,15 @@ def schedule(cfg: AdamWConfig, step: Array) -> Array:
     return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
 
 
-def init(params) -> AdamWState:
+def init(params, *, master_weights: bool = False) -> AdamWState:
     zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    master = None
+    if master_weights:
+        master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
     return AdamWState(step=jnp.int32(0),
                       mu=jax.tree.map(zeros, params),
-                      nu=jax.tree.map(zeros, params))
+                      nu=jax.tree.map(zeros, params),
+                      master=master)
 
 
 def global_norm(tree) -> Array:
@@ -59,7 +99,13 @@ def global_norm(tree) -> Array:
 
 def update(cfg: AdamWConfig, grads, state: AdamWState, params,
            ) -> Tuple[Any, AdamWState, Dict[str, Array]]:
-    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    """One AdamW step. Returns (new_params, new_state, metrics).
+
+    With ``state.master`` present the fp32 master is the source of truth:
+    params are only read for their dtype, and the returned params are the
+    stepped master cast back per leaf. Without it (seed behavior) the
+    params themselves are treated as fp32 masters.
+    """
     gnorm = global_norm(grads)
     scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) if cfg.grad_clip else 1.0
     step = state.step + 1
@@ -67,24 +113,143 @@ def update(cfg: AdamWConfig, grads, state: AdamWState, params,
     b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
     b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
 
-    def upd(p, g, m, v):
+    def upd(p, g, m, v, w):
         g = g.astype(jnp.float32) * scale
         m = cfg.b1 * m + (1 - cfg.b1) * g
         v = cfg.b2 * v + (1 - cfg.b2) * g * g
         mhat = m / b1c
         vhat = v / b2c
         delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        master = p.astype(jnp.float32) if w is None else w
         if p.ndim >= 2:  # decoupled weight decay on matrices only
-            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
-        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+            delta = delta + cfg.weight_decay * master
+        new_master = master - lr * delta
+        return new_master.astype(p.dtype), m, v, new_master
 
     flat_p, treedef = jax.tree.flatten(params)
     flat_g = treedef.flatten_up_to(grads)
     flat_m = treedef.flatten_up_to(state.mu)
     flat_v = treedef.flatten_up_to(state.nu)
-    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    flat_w = (treedef.flatten_up_to(state.master)
+              if state.master is not None else [None] * len(flat_p))
+    out = [upd(p, g, m, v, w)
+           for p, g, m, v, w in zip(flat_p, flat_g, flat_m, flat_v, flat_w)]
     new_p = treedef.unflatten([o[0] for o in out])
     new_m = treedef.unflatten([o[1] for o in out])
     new_v = treedef.unflatten([o[2] for o in out])
-    return new_p, AdamWState(step, new_m, new_v), {
+    new_w = (treedef.unflatten([o[3] for o in out])
+             if state.master is not None else None)
+    return new_p, AdamWState(step, new_m, new_v, new_w), {
         "grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 partition specs
+# ---------------------------------------------------------------------------
+
+def _atoms_of(entry) -> Tuple[str, ...]:
+    if entry is None:
+        return ()
+    return (entry,) if isinstance(entry, str) else tuple(entry)
+
+
+def zero1_spec(path: str, spec: P, shape: Tuple[int, ...],
+               fm: FoldedMesh) -> P:
+    """Compose one store-mode param spec with the DP fold atoms.
+
+    The owning side's DP atoms (``moe.edp`` for expert leaves, ``attn.dp``
+    otherwise) are appended to the first dimension they divide — on top of
+    whatever model-parallel (tp/ep/etp/pp) sharding the store rule already
+    placed there. Leaves whose store spec already contains a DP atom
+    (FSDP-sharded matrices) pass through unchanged: they are already
+    ZeRO-partitioned at rest. Leaves with no divisible dim (tiny scalars)
+    stay replicated — the documented residue of the memory math.
+    """
+    moe_side = bool(_MOE_SIDE.search(path))
+    atoms = fm.axis("moe", "edp") if moe_side else fm.axis("attn", "dp")
+    if not atoms:
+        return spec
+    entries = list(tuple(spec)) + [None] * (len(shape) - len(spec))
+    used = set()
+    for e in entries:
+        used.update(_atoms_of(e))
+    if used & set(atoms):
+        return P(*entries)
+    dp_size = math.prod(fm.mesh.shape[a] for a in atoms)
+    for i, dim in enumerate(shape):
+        cur = math.prod(fm.mesh.shape[a] for a in _atoms_of(entries[i]))
+        if dim % (cur * dp_size) == 0:
+            entries[i] = _atoms_of(entries[i]) + tuple(atoms)
+            break
+    return P(*entries)
+
+
+def _as_folded_mesh(fm_or_pcfg) -> FoldedMesh:
+    if isinstance(fm_or_pcfg, FoldedMesh):
+        return fm_or_pcfg
+    from repro.core.folding import build_folded_mesh
+    return build_folded_mesh(fm_or_pcfg)
+
+
+def adamw_state_specs(params, fm_or_pcfg, *,
+                      master_weights: bool = False) -> AdamWState:
+    """AdamWState-shaped pytree of :class:`PartitionSpec` for the state.
+
+    ``params`` may be arrays or ``ShapeDtypeStruct``; ``fm_or_pcfg`` a
+    :class:`FoldedMesh` or a :class:`ParallelConfig` (the mesh is built).
+    ``mu``/``nu``/``master`` share one spec per leaf: the param's
+    store-mode spec composed with the ZeRO-1 DP partitioning
+    (:func:`zero1_spec`); ``step`` is replicated.
+    """
+    from repro.models.sharding import param_specs
+    fm = _as_folded_mesh(fm_or_pcfg)
+    store = param_specs(params, fm, mode="store")
+
+    def one(path, leaf, spec):
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        shape = leaf.shape if hasattr(leaf, "shape") else ()
+        return zero1_spec(pstr, spec, tuple(shape), fm)
+
+    tree = jax.tree_util.tree_map_with_path(one, params, store)
+    return AdamWState(step=P(), mu=tree, nu=tree,
+                      master=tree if master_weights else None)
+
+
+def state_shardings(params, fm: FoldedMesh, *,
+                    master_weights: bool = False) -> AdamWState:
+    """``adamw_state_specs`` resolved to NamedShardings on ``fm.mesh``."""
+    specs = adamw_state_specs(params, fm, master_weights=master_weights)
+    to_sh = lambda s: NamedSharding(fm.mesh, s)
+    return AdamWState(step=to_sh(specs.step),
+                      mu=jax.tree.map(to_sh, specs.mu),
+                      nu=jax.tree.map(to_sh, specs.nu),
+                      master=(jax.tree.map(to_sh, specs.master)
+                              if specs.master is not None else None))
+
+
+def zero1_state_bytes(params, fm: FoldedMesh, *,
+                      master_weights: bool = True) -> Dict[str, int]:
+    """Global vs per-device optimizer-state bytes under the ZeRO-1 specs.
+
+    Returns ``{"global": ..., "per_device": ..., "replicated": ...}`` where
+    ``replicated`` counts bytes of leaves no DP atom could divide (the
+    residue that stays on every device).
+    """
+    specs = adamw_state_specs(params, fm, master_weights=master_weights)
+    n_state = 3 if master_weights else 2  # mu, nu(, master) — all fp32
+    acc = {"global": 0, "per_device": 0, "replicated": 0}
+
+    def one(leaf, spec):
+        n = math.prod(leaf.shape) if getattr(leaf, "shape", ()) else 1
+        shard = math.prod(
+            fm.mesh.shape[a] for e in tuple(spec) for a in _atoms_of(e))
+        nbytes = n * 4 * n_state
+        acc["global"] += nbytes
+        acc["per_device"] += nbytes // max(shard, 1)
+        if shard == 1:
+            acc["replicated"] += nbytes
+        return None
+
+    jax.tree.map(one, params, specs.mu)
+    return acc

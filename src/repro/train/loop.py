@@ -17,7 +17,7 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.configs.base import ModelConfig
 from repro.core import pipeline as pl
@@ -128,9 +128,7 @@ def make_train_step(cfg: ModelConfig, fm: FoldedMesh,
             metrics.update(opt_m)
             return new_params, new_opt, metrics
 
-        pshard = param_shardings_fp32(cfg, fm)
-        oshard = adamw.AdamWState(
-            step=NamedSharding(fm.mesh, P()), mu=pshard, nu=pshard)
+        pshard, oshard = train_state_shardings(cfg, fm, opt_cfg)
         return jax.jit(
             pp_step,
             in_shardings=(pshard, oshard, batch_shardings(cfg, fm)),
@@ -182,10 +180,7 @@ def make_train_step(cfg: ModelConfig, fm: FoldedMesh,
         metrics.update(opt_m)
         return new_params, new_opt, metrics
 
-    pshard = param_shardings_fp32(cfg, fm)
-    oshard = adamw.AdamWState(
-        step=NamedSharding(fm.mesh, P()),
-        mu=pshard, nu=pshard)
+    pshard, oshard = train_state_shardings(cfg, fm, opt_cfg)
     bshard = batch_shardings(cfg, fm)
     mshard = None  # metrics replicated
 
@@ -203,18 +198,97 @@ def param_shardings_fp32(cfg: ModelConfig, fm: FoldedMesh):
     return param_shardings(shapes, fm, mode="store")
 
 
-def init_train_state(key, cfg: ModelConfig, fm: FoldedMesh):
+def train_state_shardings(cfg: ModelConfig, fm: FoldedMesh,
+                          opt_cfg: Optional[adamw.AdamWConfig] = None):
+    """(param shardings, ZeRO-1 optimizer-state shardings) for one mapping.
+
+    Params use the store-mode RULES; optimizer moments and the optional
+    fp32 master copy are additionally partitioned over the DP/eDP fold
+    atoms (``adamw.adamw_state_specs``). This is the sharding contract
+    both the train step and the elastic checkpoint restore target.
+    """
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    shapes = jax.eval_shape(lambda k: init_lm(k, cfg), jax.random.PRNGKey(0))
+    pshard = param_shardings(shapes, fm, mode="store")
+    oshard = adamw.state_shardings(shapes, fm,
+                                   master_weights=opt_cfg.master_weights)
+    return pshard, oshard
+
+
+def train_state_structs(cfg: ModelConfig, fm: FoldedMesh,
+                        opt_cfg: Optional[adamw.AdamWConfig] = None):
+    """ShapeDtypeStruct trees of (params, opt_state) as stored at rest.
+
+    With ``master_weights`` the at-rest params are the compute-dtype cast
+    (the fp32 source of truth lives in ``opt_state.master``).
+    """
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    shapes = jax.eval_shape(lambda k: init_lm(k, cfg), jax.random.PRNGKey(0))
+    like_o = jax.eval_shape(
+        lambda p: adamw.init(p, master_weights=opt_cfg.master_weights), shapes)
+    like_p = (jax.eval_shape(lambda p: cast_params(p, cfg), shapes)
+              if opt_cfg.master_weights else shapes)
+    return like_p, like_o
+
+
+def init_train_state(key, cfg: ModelConfig, fm: FoldedMesh,
+                     opt_cfg: Optional[adamw.AdamWConfig] = None):
     """Initialize (params, opt_state) directly with store shardings.
 
     With pipeline stages the layer-stack dim is initialized pp-replicated
-    and then resharded (see ``sharding.strip_stack_pp`` for why).
+    and then resharded (see ``sharding.strip_stack_pp`` for why). With
+    ``opt_cfg.master_weights`` the returned params are the compute-dtype
+    copy and the fp32 masters live DP-sharded in ``opt_state.master``.
     """
     from repro.models.sharding import strip_stack_pp
-    pshard = param_shardings_fp32(cfg, fm)
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    pshard, oshard = train_state_shardings(cfg, fm, opt_cfg)
     init_shard = strip_stack_pp(pshard, fm)
     params = jax.jit(lambda k: init_lm(k, cfg), out_shardings=init_shard)(key)
     if init_shard is not pshard:
         params = jax.device_put(params, pshard)
-    opt = jax.jit(adamw.init, out_shardings=adamw.AdamWState(
-        step=NamedSharding(fm.mesh, P()), mu=pshard, nu=pshard))(params)
+    opt = jax.jit(
+        lambda p: adamw.init(p, master_weights=opt_cfg.master_weights),
+        out_shardings=oshard)(params)
+    if opt_cfg.master_weights:
+        params = jax.jit(lambda p: cast_params(p, cfg),
+                         out_shardings=pshard)(params)
     return params, opt
+
+
+# ---------------------------------------------------------------------------
+# Elastic checkpointing (checkpoint/store.py sharded format)
+# ---------------------------------------------------------------------------
+
+def save_train_state(directory: str, step: int, params, opt_state, *,
+                     meta=None, block: bool = True):
+    """Checkpoint (params, opt_state) in the elastic sharded format.
+
+    ``block=False`` returns a ``store.PendingSave`` — the device→host
+    shard copies are taken before returning, so the step loop may donate
+    the state immediately while a background thread commits the files.
+    """
+    from repro.checkpoint import store
+    return store.save_sharded(directory, step,
+                              {"params": params, "opt": opt_state},
+                              meta=meta, block=block)
+
+
+def restore_train_state(directory: str, step: int, cfg: ModelConfig,
+                        fm: FoldedMesh,
+                        opt_cfg: Optional[adamw.AdamWConfig] = None):
+    """Restore (params, opt_state) onto ``fm`` — which may be a different
+    mapping or world size than the run that saved the checkpoint.
+
+    Target shardings are rebuilt from the *target* mapping's store rules
+    and ZeRO-1 state specs; every leaf is reassembled from the source
+    shard index (``store.restore_sharded``), so a tp/ep/pp/dp regrouping
+    or a grown/shrunk world restores without any collective traffic.
+    """
+    from repro.checkpoint import store
+    like_p, like_o = train_state_structs(cfg, fm, opt_cfg)
+    pshard, oshard = train_state_shardings(cfg, fm, opt_cfg)
+    out = store.restore_sharded(directory, step,
+                                {"params": like_p, "opt": like_o},
+                                {"params": pshard, "opt": oshard})
+    return out["params"], out["opt"]

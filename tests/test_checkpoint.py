@@ -1,0 +1,382 @@
+"""Checkpoint store + ZeRO-1 AdamW baseline behavior.
+
+Fast tests (no model compiles): legacy round-trip and its failure modes,
+crash-safety of the tmp+rename+marker commit, the elastic sharded format
+on same/different meshes, and the AdamW ZeRO-1 state-spec contract
+(``adamw_state_specs`` consistency with the store-mode param specs —
+the Megatron ``dist_checkpointing/test_optimizer.py`` shape).
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import store
+from repro.configs import get_config, reduced
+from repro.configs.base import ParallelConfig, ParallelMappingSpec as PM
+from repro.core.folding import build_folded_mesh
+from repro.models.sharding import param_specs
+from repro.models.transformer import init_lm
+from repro.optim import adamw
+
+
+def _tree():
+    return {
+        "w": jnp.arange(32, dtype=jnp.float32).reshape(8, 4),
+        "emb": jnp.arange(16, dtype=jnp.bfloat16).reshape(8, 2),
+        "nested": {"step": jnp.int32(7),
+                   "scales": [jnp.ones(3, jnp.float32),
+                              jnp.zeros((2, 2), jnp.float32)]},
+    }
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert np.asarray(x).dtype == np.asarray(y).dtype
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# Legacy whole-tree format
+# ---------------------------------------------------------------------------
+
+def test_legacy_roundtrip_identity(tmp_path):
+    tree = _tree()
+    path = store.save(str(tmp_path), 3, tree)
+    assert os.path.exists(path)
+    assert store.latest_step(str(tmp_path)) == 3
+    restored = store.restore(str(tmp_path), 3, jax.tree.map(jnp.zeros_like, tree))
+    _assert_trees_equal(restored, tree)  # incl. bf16 through the npz V2 view
+
+
+def test_legacy_restore_names_missing_and_extra_keys(tmp_path):
+    store.save(str(tmp_path), 1, {"a": jnp.ones(2), "b": jnp.ones(2)})
+    like = {"a": jnp.ones(2), "c": jnp.ones(2)}
+    with pytest.raises(ValueError) as ei:
+        store.restore(str(tmp_path), 1, like)
+    msg = str(ei.value)
+    assert "missing from checkpoint" in msg and "'c'" in msg
+    assert "extra in checkpoint" in msg and "'b'" in msg
+
+
+def test_legacy_restore_rejects_dtype_and_shape_mismatch(tmp_path):
+    store.save(str(tmp_path), 1, {"a": jnp.ones((4, 2), jnp.float32)})
+    with pytest.raises(ValueError, match="no implicit cast"):
+        store.restore(str(tmp_path), 1, {"a": jnp.ones((4, 2), jnp.bfloat16)})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        store.restore(str(tmp_path), 1, {"a": jnp.ones((2, 4), jnp.float32)})
+
+
+def test_legacy_restore_missing_step_is_valueerror(tmp_path):
+    with pytest.raises(ValueError, match="no legacy checkpoint"):
+        store.restore(str(tmp_path), 9, {"a": jnp.ones(2)})
+
+
+# ---------------------------------------------------------------------------
+# Crash safety + step discovery
+# ---------------------------------------------------------------------------
+
+def test_latest_step_edge_cases(tmp_path):
+    assert store.latest_step(str(tmp_path / "does-not-exist")) is None
+    assert store.latest_step(str(tmp_path)) is None          # empty dir
+    # stray tmp files from a killed save are invisible
+    (tmp_path / ".tmp.ckpt_00000005.npz").write_bytes(b"partial")
+    assert store.latest_step(str(tmp_path)) is None
+    # a payload without its .done marker (mid-save kill) is never resumed
+    (tmp_path / "ckpt_00000005.npz").write_bytes(b"torn write")
+    assert store.latest_step(str(tmp_path)) is None
+    # a marker whose payload vanished is ignored too
+    (tmp_path / "ckpt_00000009.done").write_text("{}")
+    assert store.latest_step(str(tmp_path)) is None
+    store.save(str(tmp_path), 2, {"a": jnp.ones(2)})
+    store.save(str(tmp_path), 7, {"a": jnp.ones(2)})
+    assert store.available_steps(str(tmp_path)) == [2, 7]
+    assert store.latest_step(str(tmp_path)) == 7
+
+
+def test_save_crash_leaves_no_visible_checkpoint(tmp_path, monkeypatch):
+    """Simulate a kill mid-payload-write: the npz writer dies after emitting
+    partial bytes. No final file, no marker — latest_step stays at the last
+    completed step."""
+    store.save(str(tmp_path), 1, {"a": jnp.ones(2)})
+
+    def torn_savez(f, **arrays):
+        f.write(b"PK\x03\x04 partial")
+        raise OSError("disk full")
+
+    monkeypatch.setattr(store.np, "savez", torn_savez)
+    with pytest.raises(OSError):
+        store.save(str(tmp_path), 2, {"a": jnp.ones(2)})
+    monkeypatch.undo()
+    assert not (tmp_path / "ckpt_00000002.npz").exists()
+    assert not (tmp_path / "ckpt_00000002.done").exists()
+    assert store.latest_step(str(tmp_path)) == 1
+    # and the torn tmp debris does not break a later, healthy save
+    store.save(str(tmp_path), 2, {"a": jnp.full(2, 5.0)})
+    assert store.latest_step(str(tmp_path)) == 2
+
+
+# ---------------------------------------------------------------------------
+# Elastic sharded format
+# ---------------------------------------------------------------------------
+
+def _fm(attn, moe, world=None):
+    devs = None
+    if world is not None:
+        devs = np.asarray(jax.devices()[:world])
+    return build_folded_mesh(ParallelConfig(attn=PM(*attn), moe=PM(*moe)),
+                             devices=devs)
+
+
+def _sharded_tree(fm):
+    mk = lambda shape, dt, *axes: jax.device_put(
+        np.arange(np.prod(shape)).reshape(shape).astype(dt),
+        NamedSharding(fm.mesh, P(*axes)))
+    return {
+        "w": mk((8, 8), np.float32, fm.axis("attn", "dp"), fm.axis("attn", "tp")),
+        "e": mk((8, 4), "bfloat16", fm.axis("moe", "ep")),
+        "n": mk((16,), np.float32),                       # replicated
+        "step": jnp.int32(11),
+    }
+
+
+def test_sharded_roundtrip_same_mapping(tmp_path):
+    fm = _fm((2, 2, 2), (1, 4, 2))
+    tree = _sharded_tree(fm)
+    final = store.save_sharded(str(tmp_path), 4, tree, meta={"note": "hi"})
+    assert store.latest_step(str(tmp_path)) == 4
+    man = store.read_manifest(str(tmp_path), 4)
+    assert man["format"] == store.FORMAT and man["meta"]["note"] == "hi"
+    # the manifest records the folded-mesh spec per leaf
+    assert man["leaves"]["w"]["spec"] == \
+        store.spec_to_json(P(fm.axis("attn", "dp"), fm.axis("attn", "tp")))
+    assert os.path.exists(os.path.join(final, "shards_00000.npz"))
+    shardings = jax.tree.map(lambda a: a.sharding, tree)
+    restored = store.restore_sharded(str(tmp_path), 4, tree, shardings)
+    _assert_trees_equal(restored, tree)
+    assert restored["w"].sharding == tree["w"].sharding
+
+
+@pytest.mark.parametrize("target", [
+    ((4, 1, 2), (2, 2, 2), None),   # same world, regrouped fold
+    ((2, 1, 2), (1, 2, 2), 4),      # shrink 8 → 4 devices
+    ((2, 1, 1), (1, 2, 1), 2),      # shrink 8 → 2 devices
+])
+def test_sharded_restore_onto_different_mapping(tmp_path, target):
+    src = _fm((2, 2, 2), (1, 4, 2))
+    tree = _sharded_tree(src)
+    host = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
+    store.save_sharded(str(tmp_path), 1, tree)
+
+    attn, moe, world = target
+    dst = _fm(attn, moe, world)
+    tgt_shardings = {
+        "w": NamedSharding(dst.mesh, P(dst.axis("attn", "dp"),
+                                       dst.axis("attn", "tp"))),
+        "e": NamedSharding(dst.mesh, P(dst.axis("moe", "ep"))),
+        "n": NamedSharding(dst.mesh, P(dst.axis("attn", "dp"))),
+        "step": NamedSharding(dst.mesh, P()),
+    }
+    like = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(np.shape(a), a.dtype), tree)
+    restored = store.restore_sharded(str(tmp_path), 1, like, tgt_shardings)
+    # bitwise vs. direct device_put of the host value onto the target
+    for k in host:
+        direct = jax.device_put(host[k], tgt_shardings[k])
+        np.testing.assert_array_equal(np.asarray(jax.device_get(restored[k])),
+                                      np.asarray(jax.device_get(direct)))
+        assert restored[k].sharding == tgt_shardings[k]
+
+
+def test_sharded_async_save_and_error_propagation(tmp_path, monkeypatch):
+    fm = _fm((2, 2, 2), (2, 2, 2))
+    tree = _sharded_tree(fm)
+    pending = store.save_sharded(str(tmp_path), 2, tree, block=False)
+    assert isinstance(pending, store.PendingSave)
+    path = pending.wait()
+    assert os.path.isdir(path) and store.latest_step(str(tmp_path)) == 2
+    pending.wait()  # idempotent
+
+    def boom(f, **arrays):
+        raise OSError("backing store gone")
+
+    monkeypatch.setattr(store.np, "savez", boom)
+    failing = store.save_sharded(str(tmp_path), 3, tree, block=False)
+    with pytest.raises(OSError, match="backing store gone"):
+        failing.wait()
+    monkeypatch.undo()
+    assert store.latest_step(str(tmp_path)) == 2  # failed step invisible
+
+
+def test_sharded_restore_validation_errors(tmp_path):
+    fm = _fm((2, 2, 2), (2, 2, 2))
+    tree = _sharded_tree(fm)
+    store.save_sharded(str(tmp_path), 1, tree)
+    shardings = jax.tree.map(lambda a: a.sharding, tree)
+
+    with pytest.raises(ValueError, match="no sharded checkpoint"):
+        store.restore_sharded(str(tmp_path), 99, tree, shardings)
+    bad_like = dict(tree)
+    bad_like["extra_leaf"] = jnp.ones(2)
+    del bad_like["n"]
+    with pytest.raises(ValueError) as ei:
+        store.restore_sharded(
+            str(tmp_path), 1, bad_like,
+            {**shardings, "extra_leaf": shardings["step"]})
+    assert "'extra_leaf'" in str(ei.value) and "'n'" in str(ei.value)
+    wrong_dtype = {**tree, "w": tree["w"].astype(jnp.bfloat16)}
+    with pytest.raises(ValueError, match="no implicit cast"):
+        store.restore_sharded(str(tmp_path), 1, wrong_dtype, shardings)
+    # a shard file the manifest names must exist
+    os.remove(os.path.join(str(tmp_path), "ckpt_00000001",
+                           "shards_00000.npz"))
+    with pytest.raises(ValueError, match="missing shard file"):
+        store.restore_sharded(str(tmp_path), 1, tree, shardings)
+
+
+def test_spec_json_roundtrip():
+    for spec in (P(), P(None, "f0"), P(("f0", "f1"), None, "f2"),
+                 P(("pp",), ("f0", "f1", "f2"))):
+        # compare in normalized JSON form — PartitionSpec.__eq__ does not
+        # identify ('f0',) with 'f0' on this jax version
+        back = store.spec_from_json(store.spec_to_json(spec))
+        assert store.spec_to_json(back) == store.spec_to_json(spec)
+    assert json.dumps(store.spec_to_json(P(("f0", "f1"))))  # JSON-able
+
+
+# ---------------------------------------------------------------------------
+# AdamW: master weights + ZeRO-1 state specs
+# ---------------------------------------------------------------------------
+
+def _opt_cfg(**kw):
+    kw.setdefault("lr", 1e-2)
+    kw.setdefault("warmup_steps", 2)
+    kw.setdefault("decay_steps", 20)
+    return adamw.AdamWConfig(**kw)
+
+
+def test_master_weights_fp32_trajectory_bitwise():
+    """With fp32 params the master path is algebraically the same update —
+    the trajectories must be bitwise identical."""
+    params = {"w": jnp.linspace(-1, 1, 24, dtype=jnp.float32).reshape(6, 4),
+              "b": jnp.zeros(4, jnp.float32)}
+    cfg = _opt_cfg()
+    p0, s0 = dict(params), adamw.init(params)
+    p1, s1 = dict(params), adamw.init(params, master_weights=True)
+    assert s0.master is None and s1.master is not None
+    for t in range(5):
+        g = jax.tree.map(lambda p: jnp.cos(p + t).astype(p.dtype), params)
+        p0, s0, _ = adamw.update(cfg, g, s0, p0)
+        p1, s1, _ = adamw.update(cfg, g, s1, p1)
+    for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(p1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(s1.master)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_master_weights_bf16_params_follow_fp32_master():
+    """bf16 params + fp32 master: the master integrates updates a bf16-only
+    trajectory would lose to rounding, and emitted params are its cast."""
+    w0 = jnp.full((8, 8), 1.0, jnp.float32)
+    cfg = _opt_cfg(lr=1e-5, weight_decay=0.0, warmup_steps=0, grad_clip=0.0)
+    p = {"w": w0.astype(jnp.bfloat16)}
+    st = adamw.init(p, master_weights=True)
+    for _ in range(4):
+        p, st, _ = adamw.update(cfg, {"w": jnp.ones_like(w0)}, st, p)
+    master = np.asarray(st.master["w"])
+    assert master.dtype == np.float32
+    assert (master < 1.0).all()                      # steps accumulated
+    np.testing.assert_array_equal(
+        np.asarray(p["w"]), master.astype("bfloat16"))
+
+
+def _dp_atoms(fm):
+    return set(fm.axis("attn", "dp")) | set(fm.axis("moe", "edp"))
+
+
+def _entry_atoms(e):
+    if e is None:
+        return ()
+    return (e,) if isinstance(e, str) else tuple(e)
+
+
+@pytest.mark.parametrize("fixture", ["fm222", "fm_folded", "fm_ep8"])
+def test_zero1_state_specs_consistent_with_param_specs(fixture, request):
+    """The param↔optimizer-state sharding consistency contract: every
+    state-leaf spec extends the param's store spec only by DP/eDP atoms,
+    keeps divisibility, and FSDP leaves pass through unchanged."""
+    fm = request.getfixturevalue(fixture)
+    cfg = reduced(get_config("dbrx-132b"))
+    shapes = jax.eval_shape(lambda k: init_lm(k, cfg), jax.random.PRNGKey(0))
+    pspecs = param_specs(shapes, fm, mode="store")
+    specs = adamw.adamw_state_specs(shapes, fm, master_weights=True)
+    assert specs.step == P()
+    assert jax.tree.structure(specs.mu) == jax.tree.structure(shapes)
+    assert specs.mu == specs.nu == specs.master
+    dp_atoms = _dp_atoms(fm)
+
+    def check(leaf, pspec, mspec):
+        pe, me = tuple(pspec), tuple(mspec)
+        assert len(me) <= leaf.ndim
+        for i, m_entry in enumerate(me):
+            p_atoms = _entry_atoms(pe[i]) if i < len(pe) else ()
+            m_atoms = _entry_atoms(m_entry)
+            # store atoms survive as a prefix; additions are DP atoms only
+            assert m_atoms[:len(p_atoms)] == p_atoms, (pspec, mspec)
+            assert set(m_atoms[len(p_atoms):]) <= dp_atoms, (pspec, mspec)
+            shard = int(np.prod([fm.mesh.shape[a] for a in m_atoms] or [1]))
+            assert leaf.shape[i] % shard == 0, (leaf.shape, mspec)
+        # FSDP leaves (store spec already DP-sharded) pass through
+        store_atoms = {a for e in pe for a in _entry_atoms(e)}
+        if store_atoms & dp_atoms:
+            assert me == pe
+
+    jax.tree.map(check, shapes, pspecs, specs.mu)
+
+
+def test_zero1_specs_shard_replicated_leaves(fm222):
+    """The point of ZeRO-1: leaves the store rules replicate (norm scales)
+    get DP-partitioned optimizer state when divisible."""
+    cfg = reduced(get_config("dbrx-132b"))
+    shapes = jax.eval_shape(lambda k: init_lm(k, cfg), jax.random.PRNGKey(0))
+    pspecs = param_specs(shapes, fm222, mode="store")
+    specs = adamw.adamw_state_specs(shapes, fm222)
+    dp = set(_dp_atoms(fm222))
+    gained = 0
+
+    def count(leaf, pspec, mspec):
+        nonlocal gained
+        p_atoms = {a for e in tuple(pspec) for a in _entry_atoms(e)}
+        m_atoms = {a for e in tuple(mspec) for a in _entry_atoms(e)}
+        if not p_atoms & dp and m_atoms & dp:
+            gained += 1
+
+    jax.tree.map(count, shapes, pspecs, specs.mu)
+    assert gained > 0
+
+
+def test_adamw_state_specs_accepts_parallel_config(fm_folded):
+    cfg = reduced(get_config("dbrx-132b"))
+    shapes = jax.eval_shape(lambda k: init_lm(k, cfg), jax.random.PRNGKey(0))
+    via_fm = adamw.adamw_state_specs(shapes, fm_folded)
+    via_pcfg = adamw.adamw_state_specs(shapes, fm_folded.pcfg)
+    assert via_fm.mu == via_pcfg.mu
+
+
+def test_zero1_state_bytes(fm222):
+    cfg = reduced(get_config("dbrx-132b"))
+    shapes = jax.eval_shape(lambda k: init_lm(k, cfg), jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+    acct = adamw.zero1_state_bytes(shapes, fm222, master_weights=True)
+    assert acct["global"] == n_params * 4 * 3       # mu, nu, master — fp32
+    assert acct["replicated"] <= acct["per_device"] <= acct["global"]
+    # sharding must buy at least the DP factor on the bulk of the state
+    assert acct["per_device"] < acct["global"] // 2
+    no_master = adamw.zero1_state_bytes(shapes, fm222, master_weights=False)
+    assert no_master["global"] == n_params * 4 * 2

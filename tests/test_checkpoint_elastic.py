@@ -1,0 +1,300 @@
+"""Elastic restart parity — the checkpoint system's headline contract.
+
+Train N steps on mapping A, checkpoint (params + ZeRO-1 optimizer state),
+restore onto mapping B — a different tp/ep/pp/dp regrouping and/or a
+different world size — continue training, and require the loss/param
+trajectory to match the uninterrupted mapping-A run to ≤1e-6 in fp32.
+
+Restore itself is bitwise (index arithmetic in ``store.restore_sharded``,
+no collectives); the tolerance absorbs only mapping B's different
+reduction orders. fp32 + ``deterministic_router`` + dropless (the PR 2
+cross-mapping parity prerequisites) keep those reorderings tiny; grad
+clipping is disabled so a ~1e-8 difference in the global norm cannot
+rescale every gradient.
+
+The env-gated ``ELASTIC_SWEEP`` test extends the hand-picked pairs to
+regroup pairs derived from every production ``_TABLE`` row (scaled to
+≤8 devices by ``hlo_audit.probe_spec``) — the nightly CI job.
+"""
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.slow  # multi-minute model builds/compiles
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ParallelConfig, ParallelMappingSpec as PM
+from repro.core.folding import build_folded_mesh
+from repro.data.pipeline import DataConfig, SyntheticTokens, materialize_batch
+from repro.optim import adamw
+from repro.train.loop import (batch_shardings, init_train_state,
+                              make_train_step, restore_train_state,
+                              save_train_state)
+
+B, S = 8, 64
+TOTAL, CUT = 6, 3     # train 6 steps; checkpoint + switch mappings after 3
+ATOL = 1e-6
+
+
+def _cfg(arch):
+    cfg = dataclasses.replace(reduced(get_config(arch)), dtype="float32")
+    if cfg.moe is not None:
+        # aux_loss_coef=0: the load-balancing loss is *defined* per routing
+        # group (sub-sequence semantics, router.py), so its value — and its
+        # gradient — legitimately changes when the mapping changes the token
+        # grouping. Cross-mapping trajectory parity is only meaningful for
+        # the mapping-independent terms (ce + z), which are exact.
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, dropless=True, n_experts=8, deterministic_router=True,
+            aux_loss_coef=0.0))
+    return cfg
+
+
+def _opt():
+    return adamw.AdamWConfig(lr=1e-3, warmup_steps=2, decay_steps=TOTAL,
+                             grad_clip=0.0, master_weights=True)
+
+
+def _fm(attn, moe, *, pp=1, microbatch=0, remat="full"):
+    pcfg = ParallelConfig(attn=PM(*attn), moe=PM(*moe), pp=pp,
+                          microbatch=microbatch, remat=remat)
+    world = PM(*attn).size * pp
+    devs = (np.asarray(jax.devices()[:world])
+            if world < len(jax.devices()) else None)
+    return build_folded_mesh(pcfg, devices=devs)
+
+
+def _run(cfg, fm, state, start, stop, opt_cfg):
+    """Advance (params, opt) from step ``start`` to ``stop`` on ``fm``,
+    replaying the deterministic synthetic stream. Returns per-step losses."""
+    params, opt = state
+    step = make_train_step(cfg, fm, opt_cfg, donate=False)
+    data = SyntheticTokens(DataConfig(seq_len=S, global_batch=B,
+                                      vocab_size=cfg.vocab_size))
+    for _ in range(start):
+        next(data)
+    bs = batch_shardings(cfg, fm)
+    losses = []
+    for _, nb in zip(range(start, stop), data):
+        nb = materialize_batch(cfg, nb)
+        batch = {k: jax.device_put(v, bs[k]) for k, v in nb.items() if k in bs}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    return (params, opt), losses
+
+
+def _host(tree):
+    return [np.asarray(jax.device_get(l)) for l in jax.tree.leaves(tree)]
+
+
+def _assert_parity(state_a, losses_a, state_b, losses_b, label, *,
+                   loss_atol=ATOL, param_atol=ATOL):
+    np.testing.assert_allclose(losses_b, losses_a, atol=loss_atol, rtol=0,
+                               err_msg=f"{label}: continued losses diverged")
+    (pa, oa), (pb, ob) = state_a, state_b
+    for x, y in zip(_host(pa), _host(pb)):
+        np.testing.assert_allclose(
+            y.astype(np.float32), x.astype(np.float32), atol=param_atol,
+            rtol=0, err_msg=f"{label}: final params diverged")
+    assert int(jax.device_get(ob.step)) == int(jax.device_get(oa.step))
+    for x, y in zip(_host(oa.mu), _host(ob.mu)):
+        np.testing.assert_allclose(y, x, atol=param_atol, rtol=0,
+                                   err_msg=f"{label}: optimizer mu diverged")
+    for x, y in zip(_host(oa.master), _host(ob.master)):
+        np.testing.assert_allclose(y, x, atol=param_atol, rtol=0,
+                                   err_msg=f"{label}: fp32 masters diverged")
+
+
+def _restart_parity(tmp_path, arch, fm_a, fm_b, label, *,
+                    loss_atol=ATOL, param_atol=ATOL):
+    cfg, opt_cfg = _cfg(arch), _opt()
+    key = jax.random.PRNGKey(0)
+
+    # Reference: uninterrupted TOTAL steps on mapping A.
+    ref = init_train_state(key, cfg, fm_a, opt_cfg)
+    ref, ref_pre = _run(cfg, fm_a, ref, 0, CUT, opt_cfg)
+    ref, ref_post = _run(cfg, fm_a, ref, CUT, TOTAL, opt_cfg)
+
+    # Interrupted: CUT steps on A → sharded checkpoint → restore onto B
+    # (different fold / world size) → continue to TOTAL.
+    st = init_train_state(key, cfg, fm_a, opt_cfg)
+    st, pre = _run(cfg, fm_a, st, 0, CUT, opt_cfg)
+    # same mapping, same data → the prefix must agree exactly
+    np.testing.assert_allclose(pre, ref_pre, atol=ATOL, rtol=0)
+    save_train_state(str(tmp_path), CUT, st[0], st[1])
+    restored = restore_train_state(str(tmp_path), CUT, cfg, fm_b, opt_cfg)
+    st_b, post = _run(cfg, fm_b, restored, CUT, TOTAL, opt_cfg)
+    _assert_parity(ref, ref_post, st_b, post, label,
+                   loss_atol=loss_atol, param_atol=param_atol)
+
+
+PAIRS = {
+    # same world (8), dp/cp and edp/ep/etp regrouped
+    "moe-regroup": ("dbrx-132b",
+                    dict(attn=(2, 2, 2), moe=(1, 4, 2)),
+                    dict(attn=(4, 1, 2), moe=(2, 2, 2))),
+    # world shrinks 8 → 4 (fewer hosts than the saving run)
+    "shrink-8to4": ("dbrx-132b",
+                    dict(attn=(2, 2, 2), moe=(1, 4, 2)),
+                    dict(attn=(2, 1, 2), moe=(1, 2, 2))),
+    # world grows 2 → 8
+    "grow-2to8": ("dbrx-132b",
+                  dict(attn=(2, 1, 1), moe=(1, 2, 1)),
+                  dict(attn=(2, 2, 2), moe=(1, 4, 2))),
+    # dense model, tp regrouped into dp (tp 2 → 1)
+    "dense-tp-regroup": ("llama3.2-1b",
+                         dict(attn=(2, 2, 2), moe=(2, 2, 2)),
+                         dict(attn=(4, 2, 1), moe=(4, 2, 1))),
+}
+
+
+@pytest.mark.parametrize("name", sorted(PAIRS))
+def test_restart_parity_across_mappings(tmp_path, name):
+    arch, a, b = PAIRS[name]
+    _restart_parity(tmp_path, arch, _fm(**a), _fm(**b), name)
+
+
+def test_restart_pp_regroup_is_bitwise(tmp_path):
+    """pp=2 (layer stack sharded over pp atoms) → pp=1 on half the world:
+    the checkpoint reshards the pp-partitioned stack leaves bitwise —
+    params and the full ZeRO-1 optimizer state restore exactly."""
+    cfg, opt_cfg = _cfg("dbrx-132b"), _opt()
+    fm_a = _fm((2, 1, 2), (1, 2, 2), pp=2, microbatch=2)
+    fm_b = _fm((2, 1, 2), (1, 2, 2), pp=1, microbatch=2)
+    st = init_train_state(jax.random.PRNGKey(0), cfg, fm_a, opt_cfg)
+    st, _ = _run(cfg, fm_a, st, 0, 2, opt_cfg)
+    save_train_state(str(tmp_path), 2, st[0], st[1])
+    rp, ro = restore_train_state(str(tmp_path), 2, cfg, fm_b, opt_cfg)
+    for x, y in zip(_host(st[0]), _host(rp)):
+        np.testing.assert_array_equal(y, x)
+    for src, dst in ((st[1].mu, ro.mu), (st[1].nu, ro.nu),
+                     (st[1].master, ro.master)):
+        for x, y in zip(_host(src), _host(dst)):
+            np.testing.assert_array_equal(y, x)
+    assert int(jax.device_get(ro.step)) == 2
+
+
+def test_restart_parity_pp_fold_regroup_trajectory(tmp_path):
+    """Checkpoint under pp=2, restore under pp=2 with the in-stage fold
+    regrouped and the world shrunk 8 → 4. The 1F1B executor is unchanged,
+    so the per-microbatch gradient graphs are identical and the strict
+    ≤1e-6 criterion of the non-pp pairs applies."""
+    fm_a = _fm((2, 1, 2), (1, 2, 2), pp=2, microbatch=2)
+    fm_b = _fm((1, 1, 2), (1, 2, 1), pp=2, microbatch=2)
+    _restart_parity(tmp_path, "dbrx-132b", fm_a, fm_b, "pp-fold-regroup")
+
+
+def test_restart_pp_executor_swap_trajectory(tmp_path):
+    """Continue after a pp 2 → 1 restore: the executor swaps (1F1B
+    schedule → accumulation scan). The restore itself is bitwise (test
+    above), but the two executors are *different fp32 computation
+    graphs* whose gradients differ at the reassociation floor (~1e-7
+    absolute), and Adam's per-element ``m/(sqrt(v)+eps)`` normalizer
+    turns a 1e-7 absolute perturbation on a near-zero-gradient element
+    into an O(lr) parameter delta. Losses hold the strict ≤1e-6 bound in
+    the early-schedule regime test_pipeline certifies pp↔pp1 parity in;
+    params get a commensurately relaxed bound — still three orders of
+    magnitude tighter than any real restore bug. Dense model: an MoE
+    router would additionally flip near-tied top-k picks under the same
+    noise (discrete sensitivity, not checkpoint error)."""
+    cfg = dataclasses.replace(
+        reduced(get_config("llama3.2-1b"), n_layers=8, d_model=64,
+                n_heads=2, n_kv_heads=2, d_ff=128, vocab_size=256),
+        dtype="float32")
+    opt_cfg = adamw.AdamWConfig(grad_clip=0.0, master_weights=True)
+    fm_a = _fm((2, 1, 2), (1, 2, 2), pp=2, microbatch=2, remat="none")
+    fm_b = _fm((2, 1, 2), (1, 2, 2), pp=1, microbatch=2, remat="none")
+
+    key = jax.random.PRNGKey(0)
+    ref = init_train_state(key, cfg, fm_a, opt_cfg)
+    ref, ref_pre = _run(cfg, fm_a, ref, 0, CUT, opt_cfg)
+    ref, ref_post = _run(cfg, fm_a, ref, CUT, TOTAL, opt_cfg)
+    st = init_train_state(key, cfg, fm_a, opt_cfg)
+    st, pre = _run(cfg, fm_a, st, 0, CUT, opt_cfg)
+    np.testing.assert_allclose(pre, ref_pre, atol=ATOL, rtol=0)
+    save_train_state(str(tmp_path), CUT, st[0], st[1])
+    restored = restore_train_state(str(tmp_path), CUT, cfg, fm_b, opt_cfg)
+    st_b, post = _run(cfg, fm_b, restored, CUT, TOTAL, opt_cfg)
+    np.testing.assert_allclose(post, ref_post, atol=ATOL, rtol=0,
+                               err_msg="executor-swap: losses diverged")
+    for x, y in zip(_host(ref[0]), _host(st_b[0])):
+        np.testing.assert_allclose(
+            y, x, atol=5e-5, rtol=0,
+            err_msg="executor-swap: params diverged beyond the Adam "
+                    "amplification bound")
+
+
+# ---------------------------------------------------------------------------
+# Nightly sweep: regroup pairs derived from every production mapping row
+# ---------------------------------------------------------------------------
+
+# zamba2's SSM blocks are not yet mapping-independent: the same params
+# and batch produce a loss differing by ~1e-3 (and gnorm by ~50%) between
+# the cp1/tp1 and cp2/tp2 folds — the under-annotated scan shardings the
+# PR 7 audit's `ssm-reshard` family flagged (GSPMD reports involuntary
+# full rematerializations around every SSM layer). That is a model-layer
+# gap, independent of checkpointing; excluded here until the ROADMAP
+# "sequence-sharding the SSM scan" item lands.
+_MAPPING_DEPENDENT_FORWARD = {"zamba2-2.7b"}
+
+
+def _table_pairs():
+    """One regroup pair per arch: the production *train* mapping → the
+    most-regrouped other production mapping of the same arch (prefill /
+    decode rows — a different but equally valid fold, possibly on a
+    different world size), both scaled to ≤8-device probes by
+    ``hlo_audit.probe_spec``. Archs whose rows collapse to a single
+    distinct probe mapping are skipped."""
+    from repro.analysis.hlo_audit import probe_spec
+    from repro.configs.shapes import get_shape
+    from repro.launch.mappings import _TABLE
+
+    by_arch = {}
+    for arch, shape_name in sorted(_TABLE):
+        try:
+            spec = probe_spec(arch, shape_name)
+        except ValueError:
+            continue
+        rec = by_arch.setdefault(arch, {"train": None, "maps": {}})
+        rec["maps"][(spec.attn, spec.moe)] = spec
+        if get_shape(shape_name).kind == "train" and rec["train"] is None:
+            rec["train"] = spec
+    pairs = []
+    for arch, rec in sorted(by_arch.items()):
+        sa = rec["train"]
+        if sa is None or arch in _MAPPING_DEPENDENT_FORWARD:
+            continue
+        others = [s for key, s in sorted(rec["maps"].items())
+                  if key != (sa.attn, sa.moe)]
+        if not others:
+            continue
+        sb = max(others, key=lambda s: sum(
+            x != y for x, y in zip(sa.attn + sa.moe, s.attn + s.moe)))
+        pairs.append((arch, sa, sb))
+    return pairs
+
+
+@pytest.mark.skipif(not os.environ.get("ELASTIC_SWEEP"),
+                    reason="nightly sweep — set ELASTIC_SWEEP=1")
+def test_table_regroup_sweep(tmp_path):
+    pairs = _table_pairs()
+    assert pairs, "no regroupable _TABLE probe pairs found"
+    for i, (arch, sa, sb) in enumerate(pairs):
+        label = f"{arch}: {sa.label()} -> {sb.label()}"
+        print(f"[elastic-sweep {i + 1}/{len(pairs)}] {label}", flush=True)
+        # microbatch off on both sides: the sweep isolates the checkpoint
+        # reshard (accumulation-order changes are covered by test_train).
+        # cp/dp regroups legitimately reorder attention / batch
+        # reductions, perturbing losses by a few fp32 ulps (~5e-7 at
+        # loss ~5) and gradients at the reassociation floor — which
+        # Adam's normalizer scales up to O(lr) on near-zero-gradient
+        # elements (see test_restart_pp_executor_swap_trajectory). The
+        # breadth sweep therefore gets a few-ulp loss allowance and the
+        # Adam-amplification param bound; the hand-picked PAIRS above
+        # hold the strict ≤1e-6 gate.
+        _restart_parity(tmp_path / str(i), arch,
+                        _fm(sa.attn, sa.moe), _fm(sb.attn, sb.moe), label,
+                        loss_atol=5e-6, param_atol=5e-5)
