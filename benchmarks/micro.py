@@ -133,6 +133,55 @@ def main() -> None:
     emit("micro/pallas_flash_interpret_S256", timeit(fa, q2, k2, k2),
          "flash fwd kernel (interpret)")
 
+    # Serving engine: continuous batching over a mixed-length request set,
+    # paged vs dense KV. us_per_call = one full drain (prefill + decode,
+    # steady schedule, post-compile); derived carries the tokens/s and the
+    # reserved-KV-bytes ratchet surface (paged pool sized to the admitted
+    # mix must stay under 50% of the dense batch x cache_len reservation).
+    import time
+
+    from repro.configs import get_config, reduced
+    from repro.models.transformer import init_lm
+    from repro.serve import Engine, EngineConfig, Request
+    from repro.serve.cache import kv_bytes_dense, kv_bytes_paged, pages_for
+
+    cfg_s = reduced(get_config("llama3.2-1b"))
+    fm_s = build_folded_mesh(ParallelConfig(attn=PM(1, 1, 1), moe=PM(1, 1, 1)),
+                             devices=devices[:1])
+    params_s = init_lm(jax.random.PRNGKey(7), cfg_s)
+    lens, s_max, page, max_new = (17, 13, 9, 8), 64, 8, 8
+    n_pages = 1 + sum(pages_for(n + max_new, s_max, page) for n in lens)
+    rng_s = np.random.default_rng(0)
+    prompts_s = [rng_s.integers(0, cfg_s.vocab_size, (n,)).astype(np.int32)
+                 for n in lens]
+
+    def drain_once(cache):
+        eng = Engine(cfg_s, fm_s, params_s, EngineConfig(
+            max_batch=4, s_max=s_max, cache=cache, page_size=page,
+            n_pages=n_pages if cache == "paged" else None, prefill_chunk=8))
+        for p in prompts_s:
+            eng.submit(Request(prompt=p, max_new_tokens=max_new))
+        res = eng.drain()
+        return sum(r.tokens.size for r in res.values()), eng.stats[-1]
+
+    for cache in ("paged", "dense"):
+        drain_once(cache)                      # compile
+        ts, n_tok, last = [], 0, None
+        for _ in range(3):
+            t0 = time.perf_counter()
+            n_tok, last = drain_once(cache)
+            ts.append(time.perf_counter() - t0)
+        ts.sort()
+        us = ts[len(ts) // 2] * 1e6
+        emit(f"micro/serve_drain_{cache}_mixed4_llama",
+             us, f"tokens_per_s={n_tok / (us / 1e6):.1f};"
+                 f"kv_bytes_reserved={last.kv_bytes_reserved}")
+    reserved = kv_bytes_paged(cfg_s, n_pages, page)
+    dense_b = kv_bytes_dense(cfg_s, len(lens), s_max)
+    emit("micro/serve_kv_reserved_paged_vs_dense", 0.0,
+         f"n_pages={n_pages};paged_bytes={reserved};dense_bytes={dense_b};"
+         f"ratio={reserved / dense_b:.3f}")
+
 
 if __name__ == "__main__":
     main()

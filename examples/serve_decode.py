@@ -1,4 +1,9 @@
-"""Batched serving demo: KV-cache decode with sliding-window + SSM archs.
+"""Continuous-batching serving demo: paged KV cache + chunked prefill.
+
+More requests than decode slots are submitted with mixed-length prompts;
+the engine admits/evicts per step, interleaves exact-length prefill chunks
+with batched decode, and reports per-step ``StepStats`` (page occupancy,
+routed-expert load for MoE archs).
 
     PYTHONPATH=src python examples/serve_decode.py [--arch llama3.2-1b]
 """
@@ -15,7 +20,9 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.configs.base import ParallelConfig, ParallelMappingSpec as PM
 from repro.core.folding import build_folded_mesh
-from repro.serve.engine import build_session
+from repro.models.sharding import param_shardings
+from repro.models.transformer import init_lm
+from repro.serve import Engine, EngineConfig, Request
 
 
 def main():
@@ -23,7 +30,8 @@ def main():
     ap.add_argument("--arch", default="llama3.2-1b",
                     choices=["llama3.2-1b", "xlstm-125m", "zamba2-2.7b",
                              "qwen3-moe-30b-a3b"])
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=4, help="decode slots")
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--window", type=int, default=0,
                     help="sliding-window size (ring-buffer KV cache)")
@@ -36,18 +44,44 @@ def main():
                           moe=PM(dp=2, inner=2, tp=2))
     fm = build_folded_mesh(pcfg)
 
-    sess = build_session(jax.random.PRNGKey(0), cfg, fm,
-                         batch=args.batch, s_max=64)
+    key = jax.random.PRNGKey(0)
+    pshard = param_shardings(
+        jax.eval_shape(lambda k: init_lm(k, cfg), key), fm, mode="store")
+    params = jax.jit(lambda k: init_lm(k, cfg), out_shardings=pshard)(key)
+
+    # zamba2's shared-attention cache is per-repeat → dense mode.
+    cache = "dense" if cfg.shared_attention_every else "paged"
+    eng = Engine(cfg, fm, params, EngineConfig(
+        max_batch=args.batch, s_max=64, cache=cache, page_size=8,
+        prefill_chunk=8))
+
     rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab_size, (args.batch, 8)).astype(np.int32)
-    print(f"{args.arch}: prefill {prompts.shape} then decode {args.tokens}…")
+    rids = []
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              (int(rng.integers(4, 17)),)).astype(np.int32)
+        rids.append(eng.submit(Request(prompt=prompt,
+                                       max_new_tokens=args.tokens,
+                                       temperature=0.8, seed=i)))
+    print(f"{args.arch}: {args.requests} requests over {args.batch} slots "
+          f"({cache} cache)…")
     t0 = time.time()
-    out = sess.generate(prompts, n_tokens=args.tokens, temperature=0.8)
+    results = eng.drain()
     dt = time.time() - t0
-    print(f"generated {out.shape} in {dt:.1f}s "
-          f"({args.batch*args.tokens/dt:.1f} tok/s batch throughput)")
-    for row in out[:2]:
-        print("  ", row.tolist())
+
+    n_tok = sum(r.tokens.size for r in results.values())
+    print(f"generated {n_tok} tokens in {dt:.1f}s ({n_tok/dt:.1f} tok/s)")
+    for st in eng.stats[:3]:
+        print(f"  step {st.step}: admitted={st.admitted} "
+              f"prefill={st.prefill_tokens} decode={st.decode_tokens} "
+              f"pages={st.pages_in_use}/{st.pages_total}")
+    last_moe = next((s.expert_load for s in reversed(eng.stats)
+                     if s.expert_load is not None), None)
+    if last_moe is not None:
+        print("  routed-expert load (last MoE step):",
+              last_moe.astype(int).tolist())
+    for rid in rids[:2]:
+        print("  ", results[rid].tokens.tolist())
 
 
 if __name__ == "__main__":

@@ -212,8 +212,9 @@ def lower_probe(spec: ProbeSpec):
 
     if shape.kind == "train":
         opt_sds = jax.eval_shape(adamw.init, params_sds)
-        oshard = adamw.AdamWState(step=NamedSharding(fm.mesh, P()),
-                                  mu=pshard, nu=pshard)
+        # ZeRO-1 contract: moments are additionally partitioned over the
+        # DP/eDP fold atoms — must match make_train_step's in_shardings.
+        oshard = adamw.state_shardings(params_sds, fm)
         opt_in = jax.tree.map(
             lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
             opt_sds, oshard)

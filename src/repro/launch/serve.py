@@ -48,16 +48,26 @@ def main() -> None:
     from repro.configs import get_config, reduced
     from repro.configs.base import ParallelConfig, ParallelMappingSpec as PM
     from repro.core.folding import build_folded_mesh
-    from repro.serve.engine import build_session
+    from repro.models.sharding import param_shardings
+    from repro.models.transformer import init_lm
+    from repro.serve import Engine, EngineConfig, Request
 
     cfg = reduced(get_config(args.arch))
     fm = build_folded_mesh(ParallelConfig(attn=PM(2, 2, 2), moe=PM(2, 2, 2)))
-    sess = build_session(jax.random.PRNGKey(0), cfg, fm, batch=args.batch,
-                         s_max=64)
-    prompts = np.random.default_rng(0).integers(
-        0, cfg.vocab_size, (args.batch, 8)).astype(np.int32)
-    out = sess.generate(prompts, n_tokens=args.tokens)
-    print("generated:", out.tolist())
+    key = jax.random.PRNGKey(0)
+    pshard = param_shardings(
+        jax.eval_shape(lambda k: init_lm(k, cfg), key), fm, mode="store")
+    params = jax.jit(lambda k: init_lm(k, cfg), out_shardings=pshard)(key)
+    cache = "dense" if cfg.shared_attention_every else "paged"
+    eng = Engine(cfg, fm, params, EngineConfig(
+        max_batch=args.batch, s_max=64, cache=cache, page_size=8,
+        prefill_chunk=8))
+    rng = np.random.default_rng(0)
+    rids = [eng.submit(Request(
+        prompt=rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32),
+        max_new_tokens=args.tokens)) for _ in range(args.batch)]
+    results = eng.drain()
+    print("generated:", [results[r].tokens.tolist() for r in rids])
 
 
 if __name__ == "__main__":

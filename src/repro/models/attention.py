@@ -32,7 +32,8 @@ from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 from repro.core.folding import (FoldedMesh, cp_ring_axes, zigzag_inverse_perm,
                                 zigzag_perm)
-from repro.models.attn_core import blockwise_attention, ring_attention
+from repro.models.attn_core import (_merge_partials, blockwise_attention,
+                                    ring_attention)
 from repro.models.common import apply_mrope, apply_rope, dense_init
 from repro.models.sharding import constrain, wconstrain
 
@@ -232,45 +233,14 @@ def cp_kv_stats(cfg: ModelConfig, seq_len: int, batch_per_rank: int, cp: int,
 
 
 # ---------------------------------------------------------------------------
-# Decode (one token, CP-sharded KV cache)
+# Decode + chunked prefill (CP-sharded KV cache, contiguous or paged)
 # ---------------------------------------------------------------------------
 
-def attention_decode(
-    p: Dict[str, Array],
-    x: Array,
-    cache_k: Array,
-    cache_v: Array,
-    step: Array,
-    cfg: ModelConfig,
-    fm: FoldedMesh,
-    *,
-    window: int = 0,
-) -> Tuple[Array, Array, Array]:
-    """One decode step.
-
-    ``x``: (B, 1, D); ``cache_k/v``: (B, Hkv, S_max, hd) sharded
-    (dp, tp, cp, -); ``step``: scalar int32 — current position (uniform
-    across the batch). Returns (y, new_cache_k, new_cache_v).
-    """
-    hd = cfg.resolved_head_dim
-    B = x.shape[0]
-    S_max = cache_k.shape[2]
-    window = window or cfg.sliding_window
-
-    pos = jnp.full((B, 1), step, jnp.int32)
-    q, k_new, v_new = _project_qkv(p, x, x, pos, pos, cfg, fm)
-    q = q.transpose(0, 2, 1, 3)                       # (B, H, 1, hd)
-    k_new = k_new.transpose(0, 2, 1, 3)               # (B, Hkv, 1, hd)
-    v_new = v_new.transpose(0, 2, 1, 3)
-
-    # Ring-buffer insert for sliding windows; plain insert otherwise.
-    slot = step % S_max if window else jnp.minimum(step, S_max - 1)
-    cache_k = jax.lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype),
-                                           (0, 0, slot, 0))
-    cache_v = jax.lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype),
-                                           (0, 0, slot, 0))
-
+def _decode_axes(cfg: ModelConfig, fm: FoldedMesh, B: int):
+    """shard_map axes for the decode/prefill paths, divisibility-guarded."""
     dp_a = fm.axis("attn", "dp") or None
+    if dp_a and B % math.prod(fm.mesh.shape[a] for a in dp_a):
+        dp_a = None  # batch smaller than DP: keep it replicated
     cp_a = fm.axis("attn", "cp")
     tp_a = fm.axis("attn", "tp")
     tp_q = tp_a if (tp_a and cfg.n_heads % fm.tp == 0) else None
@@ -279,16 +249,91 @@ def attention_decode(
         # Manual GQA slicing across replicated KV is not supported; keep q
         # replicated too (config validation steers away from this).
         tp_q = None
+    return dp_a, cp_a, tp_q, tp_kv
 
-    # Cache slot positions: slot index -> absolute position.
-    slots = jnp.arange(S_max, dtype=jnp.int32)
+
+def _positions_for(step: Array, B: int, C: int) -> Array:
+    """(B, C) absolute positions from a scalar or (B,) base ``step``."""
+    base = jnp.asarray(step, jnp.int32)
+    if base.ndim == 0:
+        base = jnp.broadcast_to(base, (B,))
+    return base[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+
+
+def _cache_kv_positions(pos: Array, L: int, window: int) -> Array:
+    """Absolute position of every cache slot, per batch row → (B, L).
+
+    Non-window caches store position ``s`` at slot ``s`` (slots beyond the
+    newest query position are causal-masked). Ring-buffer caches map each
+    slot to the most recent absolute position congruent to it mod ``L``;
+    unwritten slots get ``last + 1`` and are causal-masked.
+    """
+    B = pos.shape[0]
+    slots = jnp.arange(L, dtype=jnp.int32)
     if window:
-        # Most recent absolute position congruent to the slot (mod S_max).
-        cand = step - ((step - slots) % S_max)
-        kvp = jnp.where(cand >= 0, cand, step + 1)  # unwritten slot → causal-masked
-    else:
-        kvp = slots                                  # slots beyond step are causal-masked
-    kv_pos = jnp.broadcast_to(kvp, (B, S_max))
+        last = pos[:, -1:]                              # (B, 1) newest position
+        cand = last - ((last - slots[None, :]) % L)
+        return jnp.where(cand >= 0, cand, last + 1)
+    return jnp.broadcast_to(slots, (B, L))
+
+
+def _cache_attend(q, cache_k, cache_v, pos, kv_pos, cfg: ModelConfig,
+                  fm: FoldedMesh, *, window: int) -> Array:
+    """Flash-decode of C query tokens against a realized (B, Hkv, L, hd) cache.
+
+    ``q``: (B, H, C, hd); ``pos``: (B, C) absolute query positions;
+    ``kv_pos``: (B, L). The cache is CP-sharded on L. Merge strategy:
+
+    * C == 1 (decode) or C % cp != 0 — every rank computes partials for all
+      queries against its KV shard; merge via the LSE pmax/psum combine.
+    * C > 1 with C % cp == 0 — ring-CP prefill: queries shard over the CP
+      atoms and *rotate* around the ring (KV stays resident), merging
+      partials online. Per-rank q traffic is O(C/cp) per hop instead of
+      every rank computing all C queries — the long-prompt path.
+
+    Both strategies produce the same merged (m, l, acc) up to the exact
+    order of ``_merge_partials`` applications; C == 1 keeps the historical
+    pmax/psum form bitwise.
+    """
+    B, H, C, hd = q.shape
+    dp_a, cp_a, tp_q, tp_kv = _decode_axes(cfg, fm, B)
+    cp = fm.cp
+    ring = bool(cp_a) and cp > 1 and C > 1 and C % cp == 0
+
+    if ring:
+        ring_axes = cp_ring_axes(fm)
+
+        def local_ring(q_l, k_l, v_l, pos_l, kvp_l):
+            from repro.compat import ring_permute
+
+            def partial(qc, pc):
+                return blockwise_attention(
+                    qc, k_l, v_l, pc, kvp_l, causal=True, window=window,
+                    block_kv=min(1024, k_l.shape[2]), return_partial=True)
+
+            acc, m, l = partial(q_l, pos_l)
+            for _ in range(cp - 1):
+                q_l, pos_l, m, l, acc = (
+                    ring_permute(t, ring_axes) for t in (q_l, pos_l, m, l, acc))
+                acc_s, m_s, l_s = partial(q_l, pos_l)
+                m, l, acc = _merge_partials(m, l, acc, m_s, l_s, acc_s)
+            # One final rotation lands each query shard's accumulators back
+            # on the rank that owns that shard of the output.
+            m, l, acc = (ring_permute(t, ring_axes) for t in (m, l, acc))
+            return (acc / jnp.maximum(l[..., None], 1e-30)).astype(q_l.dtype)
+
+        return shard_map(
+            local_ring,
+            mesh=fm.mesh,
+            in_specs=(
+                P(dp_a, tp_q, cp_a, None),
+                P(dp_a, tp_kv, cp_a or None, None),
+                P(dp_a, tp_kv, cp_a or None, None),
+                P(dp_a, cp_a),
+                P(dp_a, cp_a or None),
+            ),
+            out_specs=P(dp_a, tp_q, cp_a, None),
+        )(q, cache_k, cache_v, pos, kv_pos)
 
     def local(q_l, k_l, v_l, pos_l, kvp_l):
         acc, m, l = blockwise_attention(
@@ -301,7 +346,7 @@ def attention_decode(
             acc = jax.lax.psum(acc * scale[..., None], cp_a)
         return (acc / jnp.maximum(l[..., None], 1e-30)).astype(q_l.dtype)
 
-    out = shard_map(
+    return shard_map(
         local,
         mesh=fm.mesh,
         in_specs=(
@@ -314,7 +359,119 @@ def attention_decode(
         out_specs=P(dp_a, tp_q, None, None),
     )(q, cache_k, cache_v, pos, kv_pos)
 
-    out = out.transpose(0, 2, 1, 3).reshape(B, 1, cfg.q_dim)
+
+def _attn_output(out: Array, p, cfg: ModelConfig, fm: FoldedMesh) -> Array:
+    """(B, H, C, hd) attention output → (B, C, D) through the out-proj."""
+    B, _, C, _ = out.shape
+    out = out.transpose(0, 2, 1, 3).reshape(B, C, cfg.q_dim)
     wo = wconstrain(p["wo"].astype(out.dtype), fm, "tp", "fsdp")
     y = jnp.einsum("bsh,hd->bsd", out, wo)
-    return constrain(y, fm, "attn", "dp", None, None), cache_k, cache_v
+    return constrain(y, fm, "attn", "dp", None, None)
+
+
+def attention_decode(
+    p: Dict[str, Array],
+    x: Array,
+    cache_k: Array,
+    cache_v: Array,
+    step: Array,
+    cfg: ModelConfig,
+    fm: FoldedMesh,
+    *,
+    window: int = 0,
+) -> Tuple[Array, Array, Array]:
+    """Decode step / prefill chunk against a contiguous per-slot cache.
+
+    ``x``: (B, C, D) — C = 1 for decode, C > 1 for a chunked-prefill
+    segment; ``cache_k/v``: (B, Hkv, S_max, hd) sharded (dp, tp, cp, -);
+    ``step``: scalar int32 (uniform base position) or (B,) int32 per-row
+    base positions — token c of row b sits at absolute position
+    ``step[b] + c``. Returns (y, new_cache_k, new_cache_v).
+    """
+    B, C, _ = x.shape
+    S_max = cache_k.shape[2]
+    window = window or cfg.sliding_window
+
+    step = jnp.asarray(step, jnp.int32)
+    pos = _positions_for(step, B, C)
+    q, k_new, v_new = _project_qkv(p, x, x, pos, pos, cfg, fm)
+    q = q.transpose(0, 2, 1, 3)                       # (B, H, C, hd)
+
+    if step.ndim == 0 and (C == 1 or not window):
+        # Uniform base and a contiguous slot run: one dynamic-update-slice
+        # (the historical single-token decode write, kept bitwise + fast).
+        kc = k_new.transpose(0, 2, 1, 3)              # (B, Hkv, C, hd)
+        vc = v_new.transpose(0, 2, 1, 3)
+        slot = step % S_max if window else jnp.minimum(step, S_max - 1)
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, kc.astype(cache_k.dtype), (0, 0, slot, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, vc.astype(cache_v.dtype), (0, 0, slot, 0))
+    else:
+        # Per-row bases (continuous batching) or a multi-token window write:
+        # scatter each token into its ring/append slot.
+        slots = pos % S_max if window else jnp.minimum(pos, S_max - 1)
+        b_ix = jnp.arange(B, dtype=jnp.int32)[:, None]
+        cache_k = cache_k.at[b_ix, :, slots, :].set(
+            k_new.astype(cache_k.dtype))              # value: (B, C, Hkv, hd)
+        cache_v = cache_v.at[b_ix, :, slots, :].set(
+            v_new.astype(cache_v.dtype))
+
+    kv_pos = _cache_kv_positions(pos, S_max, window)
+    out = _cache_attend(q, cache_k, cache_v, pos, kv_pos, cfg, fm,
+                        window=window)
+    return _attn_output(out, p, cfg, fm), cache_k, cache_v
+
+
+def attention_decode_paged(
+    p: Dict[str, Array],
+    x: Array,
+    pool_k: Array,
+    pool_v: Array,
+    block_tables: Array,
+    step: Array,
+    cfg: ModelConfig,
+    fm: FoldedMesh,
+    *,
+    window: int = 0,
+) -> Tuple[Array, Array, Array]:
+    """Decode step / prefill chunk against a paged (block) KV pool.
+
+    ``pool_k/v``: (P, Hkv, page, hd) — P fixed-size pages shared by all
+    requests; ``block_tables``: (B, n_pg) int32 physical page ids per
+    logical page (page 0 is the engine's scratch page — inactive rows point
+    every entry there); ``step``: scalar or (B,) base positions.
+
+    The pool is gathered into a contiguous (B, Hkv, L, hd) view with
+    L = n_pg·page, so the attention math — blocking, masking, CP merge — is
+    exactly the dense path's: masked slots are exact no-ops in the online
+    softmax, hence bitwise parity with a dense cache of the same L.
+    """
+    B, C, _ = x.shape
+    page = pool_k.shape[2]
+    n_pg = block_tables.shape[1]
+    L = n_pg * page
+    window = window or cfg.sliding_window
+
+    step = jnp.asarray(step, jnp.int32)
+    pos = _positions_for(step, B, C)
+    q, k_new, v_new = _project_qkv(p, x, x, pos, pos, cfg, fm)
+    q = q.transpose(0, 2, 1, 3)                       # (B, H, C, hd)
+
+    # Scatter the new tokens into their pages: logical slot → (page, offset)
+    # via the block table. k_new/v_new: (B, C, Hkv, hd).
+    lslot = pos % L if window else jnp.minimum(pos, L - 1)
+    lpage, off = lslot // page, lslot % page
+    phys = jnp.take_along_axis(block_tables, lpage, axis=1)   # (B, C)
+    pool_k = pool_k.at[phys, :, off, :].set(k_new.astype(pool_k.dtype))
+    pool_v = pool_v.at[phys, :, off, :].set(v_new.astype(pool_v.dtype))
+
+    # Gather each request's pages into a contiguous cache view.
+    def view(pool):
+        g = pool[block_tables]                        # (B, n_pg, Hkv, page, hd)
+        return g.transpose(0, 2, 1, 3, 4).reshape(B, -1, L, pool.shape[-1])
+
+    kv_pos = _cache_kv_positions(pos, L, window)
+    out = _cache_attend(q, view(pool_k), view(pool_v), pos, kv_pos, cfg, fm,
+                        window=window)
+    return _attn_output(out, p, cfg, fm), pool_k, pool_v

@@ -177,10 +177,15 @@ def _mamba2_state(cfg, fm, B, s_max, dtype):
 
 
 def _decode_mamba2(p, x, state, step, cfg, fm, ctx):
+    # chunk = C: single-token decode keeps the per-token recurrence
+    # (chunk=1, the historical path, bitwise); a C-token prefill chunk runs
+    # one quadratic SSD block. The serve engine keeps the chunking schedule
+    # identical on both sides of its parity gates — chunked-scan numerics
+    # depend on the chunk split.
     h = norm_apply(cfg.norm, x, p["norm1"])
     y, conv_tail, h_final = _mamba2_core(p, h, cfg, fm,
                                          conv_state=state["conv"],
-                                         h0=state["h"], chunk=1)
+                                         h0=state["h"], chunk=x.shape[1])
     return x + y, {"conv": conv_tail.astype(state["conv"].dtype), "h": h_final}
 
 
@@ -254,8 +259,9 @@ def _mlstm_state(cfg, fm, B, s_max, dtype):
 
 
 def _decode_mlstm(p, x, state, step, cfg, fm, ctx):
+    # chunk = C — see _decode_mamba2 on chunk-schedule parity.
     h = norm_apply(cfg.norm, x, p["norm1"])
-    y, h_final = _mlstm_core(p, h, cfg, h0=state["h"], chunk=1)
+    y, h_final = _mlstm_core(p, h, cfg, h0=state["h"], chunk=x.shape[1])
     return x + y, {"h": h_final}
 
 
@@ -325,11 +331,20 @@ def _slstm_state(cfg, fm, B, s_max, dtype):
 
 
 def _decode_slstm(p, x, state, step, cfg, fm, ctx):
+    """Sequential cell over the C chunk tokens from the carried state."""
     h = norm_apply(cfg.norm, x, p["norm1"])
-    xt = jnp.einsum("bsd,de->bse", h, p["w_x"].astype(h.dtype))[:, 0]
-    c, n, hh, m = _slstm_cell(p, xt, (state["c"], state["n"], state["h"], state["m"]), cfg)
-    y = jnp.einsum("bd,de->be", hh.astype(x.dtype), p["w_proj_down"].astype(x.dtype))
-    return x + y[:, None], {"c": c, "n": n, "h": hh, "m": m}
+    xt = jnp.einsum("bsd,de->bse", h, p["w_x"].astype(h.dtype))
+
+    def cell(carry, x_t):
+        new = _slstm_cell(p, x_t, carry, cfg)
+        return new, new[2]
+
+    (c, n, hh, m), hs = jax.lax.scan(
+        cell, (state["c"], state["n"], state["h"], state["m"]),
+        xt.transpose(1, 0, 2))
+    y = jnp.einsum("bsd,de->bse", hs.transpose(1, 0, 2).astype(x.dtype),
+                   p["w_proj_down"].astype(x.dtype))
+    return x + y, {"c": c, "n": n, "h": hh, "m": m}
 
 
 register_block("mamba2", {"init": _init_mamba2, "apply": _apply_mamba2,

@@ -18,7 +18,8 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.folding import FoldedMesh
 from repro.core.moe_layer import init_moe, moe_block
-from repro.models.attention import attention, attention_decode, init_attention
+from repro.models.attention import (attention, attention_decode,
+                                    attention_decode_paged, init_attention)
 from repro.models.common import norm_apply, norm_init
 from repro.models.ffn import ffn, init_ffn
 from repro.models.sharding import constrain
@@ -42,6 +43,10 @@ def _acc_aux(a: AuxDict, b: AuxDict) -> AuxDict:
 #   apply(p, x, pos, cfg, fm, ctx) -> (x, aux)            [train/prefill]
 #   init_state(cfg, fm, B, s_max, dtype) -> state          [decode]
 #   decode(p, x, state, step, cfg, fm, ctx) -> (x, state)
+#   decode_paged (optional, KV-bearing kinds only):
+#     (p, x, state, step, cfg, fm, ctx) -> (x, state, expert_counts|None)
+#     ``ctx["block_tables"]`` maps logical pages to pool pages and
+#     ``ctx["token_mask"]`` flags live batch rows (serve engine).
 # ``ctx`` carries cross-attention inputs for enc-dec models.
 # ---------------------------------------------------------------------------
 
@@ -63,12 +68,18 @@ def _apply_dense(p, x, pos, cfg, fm, ctx):
     return x, _zero_aux()
 
 
+def _fits(fm, side, sym, dim) -> bool:
+    atoms = fm.axis(side, sym)
+    return not atoms or dim % math.prod(fm.mesh.shape[a] for a in atoms) == 0
+
+
 def _dense_state(cfg, fm, B, s_max, dtype):
     hd = cfg.resolved_head_dim
     shape = (B, cfg.n_kv_heads, s_max, hd)
-    sh = fm.sharding("attn", "dp",
+    sh = fm.sharding("attn",
+                     "dp" if _fits(fm, "attn", "dp", B) else None,
                      "tp" if cfg.n_kv_heads % max(fm.tp, 1) == 0 else None,
-                     "cp", None)
+                     "cp" if _fits(fm, "attn", "cp", s_max) else None, None)
     z = jnp.zeros(shape, dtype)
     return {"k": jax.lax.with_sharding_constraint(z, sh),
             "v": jax.lax.with_sharding_constraint(z, sh)}
@@ -112,6 +123,58 @@ def _decode_moe(p, x, state, step, cfg, fm, ctx):
     return x + y, state
 
 
+def _expert_token_counts(h: Array, w_gate: Array, cfg: ModelConfig,
+                         token_mask) -> Array:
+    """Routed-assignment histogram (E,) mirroring ``router.route``'s top-k.
+
+    The serve engine's per-step expert-load signal (StepStats.expert_load,
+    MoETuner's placement input). Mirrors the selection — deterministic
+    quantized top-k when configured, probability top-k otherwise — without
+    the capacity/drop machinery: this counts *assignments*, the load a
+    placement policy balances against.
+    """
+    from repro.core.router import deterministic_top_k
+
+    mcfg = cfg.moe
+    B, C, D = h.shape
+    logits = jnp.einsum("td,de->te", h.reshape(B * C, D).astype(jnp.float32),
+                        w_gate.astype(jnp.float32))
+    if mcfg.deterministic_router:
+        top_i = deterministic_top_k(logits, mcfg.top_k, mcfg.router_quantum)
+    else:
+        _, top_i = jax.lax.top_k(jax.nn.softmax(logits, axis=-1), mcfg.top_k)
+    one = jax.nn.one_hot(top_i, mcfg.n_experts, dtype=jnp.float32).sum(axis=1)
+    if token_mask is not None:
+        rows = jnp.broadcast_to(token_mask.astype(jnp.float32)[:, None],
+                                (B, C)).reshape(-1)
+        one = one * rows[:, None]
+    return one.sum(axis=0)
+
+
+def _decode_dense_paged(p, x, state, step, cfg, fm, ctx):
+    h = norm_apply(cfg.norm, x, p["norm1"])
+    y, state["k"], state["v"] = attention_decode_paged(
+        p["attn"], h, state["k"], state["v"], ctx["block_tables"], step,
+        cfg, fm)
+    x = x + y
+    h = norm_apply(cfg.norm, x, p["norm2"])
+    x = x + ffn(p["mlp"], h, cfg, fm)
+    return x, state, None
+
+
+def _decode_moe_paged(p, x, state, step, cfg, fm, ctx):
+    h = norm_apply(cfg.norm, x, p["norm1"])
+    y, state["k"], state["v"] = attention_decode_paged(
+        p["attn"], h, state["k"], state["v"], ctx["block_tables"], step,
+        cfg, fm)
+    x = x + y
+    h = norm_apply(cfg.norm, x, p["norm2"])
+    y, _ = moe_block(p["moe"], h, cfg, fm)
+    counts = _expert_token_counts(h, p["moe"]["router"], cfg,
+                                  ctx.get("token_mask"))
+    return x + y, state, counts
+
+
 def _init_dense_x(key, cfg, dtype):
     """Decoder block with cross-attention (whisper)."""
     p = _init_dense(key, cfg, dtype)
@@ -150,17 +213,17 @@ def _decode_dense_x(p, x, state, step, cfg, fm, ctx):
     # Cross attention against precomputed encoder KV (non-causal, full src).
     h = norm_apply(cfg.norm, x, p["norm_x"])
     from repro.models.attn_core import blockwise_attention
-    B = h.shape[0]
+    B, C = h.shape[:2]
     hd = cfg.resolved_head_dim
     q = jnp.einsum("bsd,dh->bsh", h, p["xattn"]["wq"].astype(h.dtype))
     if cfg.qkv_bias:
         q = q + p["xattn"]["bq"].astype(h.dtype)
-    q = q.reshape(B, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    q = q.reshape(B, C, cfg.n_heads, hd).transpose(0, 2, 1, 3)
     src = state["xk"].shape[2]
-    qp = jnp.zeros((B, 1), jnp.int32)
+    qp = jnp.zeros((B, C), jnp.int32)
     kp = jnp.broadcast_to(jnp.arange(src, dtype=jnp.int32), (B, src))
     o = blockwise_attention(q, state["xk"], state["xv"], qp, kp, causal=False)
-    o = o.transpose(0, 2, 1, 3).reshape(B, 1, cfg.q_dim)
+    o = o.transpose(0, 2, 1, 3).reshape(B, C, cfg.q_dim)
     x = x + jnp.einsum("bsh,hd->bsd", o, p["xattn"]["wo"].astype(o.dtype))
     h = norm_apply(cfg.norm, x, p["norm2"])
     x = x + ffn(p["mlp"], h, cfg, fm)
@@ -169,9 +232,11 @@ def _decode_dense_x(p, x, state, step, cfg, fm, ctx):
 
 BLOCKS: Dict[str, Dict[str, Callable]] = {
     "dense": {"init": _init_dense, "apply": _apply_dense,
-              "state": _dense_state, "decode": _decode_dense},
+              "state": _dense_state, "decode": _decode_dense,
+              "decode_paged": _decode_dense_paged},
     "moe": {"init": _init_moe_block, "apply": _apply_moe,
-            "state": _dense_state, "decode": _decode_moe},
+            "state": _dense_state, "decode": _decode_moe,
+            "decode_paged": _decode_moe_paged},
     "dense_x": {"init": _init_dense_x, "apply": _apply_dense_x,
                 "state": _dense_x_state, "decode": _decode_dense_x},
 }
@@ -401,64 +466,109 @@ def init_decode_state(cfg: ModelConfig, fm: FoldedMesh, B: int, s_max: int,
     return state
 
 
+# The state stack rides the decode scan CARRY with in-place
+# dynamic-update-slice writes (per-repeat index). Passing it as xs/ys
+# would make XLA materialize a fresh copy of every KV cache each step —
+# a full cache read+write per token (§Perf iteration H1).
+def _stack_index(stack, i):
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+        stack)
+
+
+def _stack_write(stack, i, new):
+    return jax.tree.map(
+        lambda a, s: jax.lax.dynamic_update_index_in_dim(
+            a, s.astype(a.dtype), i, 0), stack, new)
+
+
+# KV-cache leaves are exempt from the inactive-row freeze below: an
+# inactive row writes at its *own next* position, which is overwritten with
+# the real projection before that slot ever becomes attendable (a position
+# is only visible once the request itself has written it).
+_CACHE_LEAVES = ("k", "v", "xk", "xv")
+
+
+def _freeze_inactive(old, new, token_mask):
+    """where(token_mask, new, old) per leaf — recurrent state of inactive
+    batch rows must not advance on the garbage tokens the serve engine pads
+    a partially-filled decode batch with."""
+    def one(path, o, n):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name in _CACHE_LEAVES:
+            return n
+        m = token_mask.reshape((-1,) + (1,) * (n.ndim - 1)) > 0
+        return jnp.where(m, n, o.astype(n.dtype))
+    return jax.tree_util.tree_map_with_path(one, old, new)
+
+
+def decode_positions(state_step: Array, positions, B: int, C: int) -> Array:
+    """(B, C) absolute positions: explicit per-row bases or the step counter."""
+    base = jnp.asarray(state_step if positions is None else positions,
+                       jnp.int32)
+    if base.ndim == 0:
+        base = jnp.broadcast_to(base, (B,))
+    return base[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+
+
 def decode_step(params: Dict, state: Dict, tokens: Array, cfg: ModelConfig,
-                fm: FoldedMesh) -> Tuple[Array, Dict]:
-    """One token for the whole batch. tokens: (B, 1) int32."""
+                fm: FoldedMesh, positions=None,
+                token_mask=None) -> Tuple[Array, Dict]:
+    """Decode step / prefill chunk for the whole batch. tokens: (B, C) int32
+    (C = 1 decode, C > 1 a chunked-prefill segment — the cache fills for
+    all C positions and logits come back for each).
+
+    ``positions``: optional (B,) int32 per-row base positions (continuous
+    batching: rows at heterogeneous depths); default is the carried uniform
+    ``state["step"]`` counter. ``token_mask``: optional (B,) — rows with 0
+    keep their recurrent state frozen (see ``_freeze_inactive``).
+    """
     import repro.models.ssm_blocks  # noqa: F401
 
-    B = tokens.shape[0]
+    B, C = tokens.shape
     dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
     step = state["step"]
+    base = jnp.asarray(step if positions is None else positions, jnp.int32)
 
     x = params["embed"][tokens].astype(dt)
     if cfg.name.startswith("gemma"):
         x = x * jnp.asarray(math.sqrt(cfg.d_model), dt)
-    if cfg.rope_kind == "none" and not cfg.is_encoder_decoder:
-        x = x + _sinusoid(jnp.full((B, 1), step, dtype=jnp.int32),
+    if cfg.rope_kind == "none" or cfg.is_encoder_decoder:
+        x = x + _sinusoid(decode_positions(step, positions, B, C),
                           cfg.d_model).astype(dt)
-    if cfg.is_encoder_decoder:
-        x = x + _sinusoid(jnp.full((B, 1), step, dtype=jnp.int32),
-                          cfg.d_model).astype(dt)
-    x = constrain(x, fm, "attn", "dp", None, None)
+    # Batches smaller than the DP degree (single-slot prefill) stay
+    # replicated — same guard as the decode-path shard_map axes.
+    dp_atoms = fm.axis("attn", "dp")
+    dp_sym = None if (dp_atoms and B % math.prod(
+        fm.mesh.shape[a] for a in dp_atoms)) else "dp"
+    x = constrain(x, fm, "attn", dp_sym, None, None)
 
     _, cycle = model_cycle(cfg)
 
     ctx: Dict[str, Any] = {}
 
-    # The state stack rides the scan CARRY with in-place
-    # dynamic-update-slice writes (per-repeat index). Passing it as xs/ys
-    # would make XLA materialize a fresh copy of every KV cache each step —
-    # a full cache read+write per token (§Perf iteration H1).
-    def _index(stack, i):
-        return jax.tree.map(
-            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
-            stack)
-
-    def _write(stack, i, new):
-        return jax.tree.map(
-            lambda a, s: jax.lax.dynamic_update_index_in_dim(
-                a, s.astype(a.dtype), i, 0), stack, new)
-
     def body(carry, inp):
         h, cycle_stack, shared_stack = carry
         layer_params, i = inp
-        layer_state = _index(cycle_stack, i)
+        layer_state = _stack_index(cycle_stack, i)
         new_state = {}
         for j, kind in enumerate(cycle):
             h, st = BLOCKS[kind]["decode"](layer_params[f"b{j}"], h,
-                                           dict(layer_state[f"b{j}"]), step,
+                                           dict(layer_state[f"b{j}"]), base,
                                            cfg, fm, ctx)
+            if token_mask is not None:
+                st = _freeze_inactive(layer_state[f"b{j}"], st, token_mask)
             new_state[f"b{j}"] = st
-        cycle_stack = _write(cycle_stack, i, new_state)
+        cycle_stack = _stack_write(cycle_stack, i, new_state)
         if cfg.shared_attention_every:
-            sh = _index(shared_stack, i)
+            sh = _stack_index(shared_stack, i)
             hh = norm_apply(cfg.norm, h, params["shared"]["norm1"])
             y, sh["k"], sh["v"] = attention_decode(
-                params["shared"]["attn"], hh, sh["k"], sh["v"], step, cfg, fm)
+                params["shared"]["attn"], hh, sh["k"], sh["v"], base, cfg, fm)
             h = h + y
             hh = norm_apply(cfg.norm, h, params["shared"]["norm2"])
             h = h + ffn(params["shared"]["mlp"], hh, cfg, fm)
-            shared_stack = _write(shared_stack, i, sh)
+            shared_stack = _stack_write(shared_stack, i, sh)
         return (h, cycle_stack, shared_stack), None
 
     state = dict(state)
@@ -471,7 +581,7 @@ def decode_step(params: Dict, state: Dict, tokens: Array, cfg: ModelConfig,
             for j, kind in enumerate(cycle):
                 h, st = BLOCKS[kind]["decode"](layer_params[f"b{j}"], h,
                                                dict(layer_state[f"b{j}"]),
-                                               step, cfg, fm, ctx)
+                                               base, cfg, fm, ctx)
                 new_state[f"b{j}"] = st
             return h, new_state
 
@@ -493,5 +603,5 @@ def decode_step(params: Dict, state: Dict, tokens: Array, cfg: ModelConfig,
     if head is None:
         head = params["embed"].T
     logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
-    state["step"] = step + 1
-    return constrain(logits, fm, "attn", "dp", None, "tp"), state
+    state["step"] = step + C
+    return constrain(logits, fm, "attn", dp_sym, None, "tp"), state

@@ -1,0 +1,13 @@
+"""Serving: continuous batching + paged KV + chunked ring-CP prefill.
+
+Public API: ``Engine`` (submit/step/drain) configured by ``EngineConfig``,
+fed ``Request``s, returning ``GenerationResult``s with per-step
+``StepStats``. ``ServeSession``/``build_session`` are deprecated shims.
+"""
+from repro.serve.cache import (BlockAllocator, init_paged_state,
+                               kv_bytes_dense, kv_bytes_paged, pages_for)
+from repro.serve.engine import (Engine, EngineConfig, GenerationResult,
+                                ServeSession, build_session, cache_len_for,
+                                make_prefill_step, make_serve_step,
+                                reject_pipelined_mapping, state_shardings)
+from repro.serve.scheduler import Request, Scheduler, StepStats

@@ -1,0 +1,140 @@
+"""Paged (block) KV cache: fixed-size pages + per-request block tables.
+
+Layout (vLLM-style, folded onto the repo's stacked decode state):
+
+* Every KV-bearing layer owns a **pool** of ``n_pages`` fixed-size pages,
+  stacked over cycle repeats: ``(n_rep, n_pages, Hkv, page_size, hd)``.
+* A request holds a host-side **block table** — logical page → physical
+  page — and its cache view is the gather ``pool[block_table]`` reshaped to
+  a contiguous ``(Hkv, L, hd)`` run with ``L = n_slot_pages · page_size``.
+  Masked (unwritten/stale) slots are exact no-ops in the online softmax, so
+  the view attends bitwise-identically to a dense cache of the same ``L``
+  (``models/attention.py::attention_decode_paged``).
+* **Page 0 is the scratch page**: never allocated, block-table rows of
+  inactive batch slots point every entry there, so padded decode rows
+  scatter their garbage K/V somewhere no live request ever reads.
+
+SSM and sliding-window state stay O(1)/O(window) per slot behind the same
+interface: recurrent leaves are per-slot ``(n_rep, max_batch, ...)`` arrays
+(nothing to page), and ring-buffer caches wrap their *logical* slots mod
+``cache_len`` so a window arch only ever touches ``window/page_size`` pages
+per request.
+
+>>> a = BlockAllocator(4)           # pages 1..3 allocatable, 0 is scratch
+>>> a.alloc(), a.alloc()
+(1, 2)
+>>> a.free([1]); a.alloc(), a.alloc()
+(3, 1)
+>>> a.alloc() is None, a.n_free, a.in_use
+(True, 0, 3)
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from typing import Dict, Iterable, Optional
+
+SCRATCH_PAGE = 0
+
+
+class BlockAllocator:
+    """Free-list allocator over ``n_pages`` physical pages.
+
+    Page ``SCRATCH_PAGE`` (0) is reserved; pages are handed out and reused
+    in FIFO order, so allocation is deterministic given the request
+    arrival/free order — part of the engine's reproducibility contract.
+    """
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError(f"n_pages must be >= 2 (one scratch + one real), got {n_pages}")
+        self.n_pages = n_pages
+        self._free = deque(range(1, n_pages))
+
+    def alloc(self) -> Optional[int]:
+        """One physical page id, or None when the pool is exhausted."""
+        return self._free.popleft() if self._free else None
+
+    def free(self, pages: Iterable[int]) -> None:
+        for p in pages:
+            if not 0 < p < self.n_pages:
+                raise ValueError(f"bad page id {p}")
+            self._free.append(p)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return (self.n_pages - 1) - self.n_free
+
+
+def n_kv_layers(cfg) -> int:
+    """KV-bearing layers (full depth, not the scan cycle)."""
+    return sum(1 for b in cfg.blocks() if b in ("dense", "moe"))
+
+
+def kv_bytes_dense(cfg, batch: int, cache_len: int, *,
+                   dtype_bytes: int = 2) -> int:
+    """Bytes a dense decode cache reserves: every slot holds ``cache_len``."""
+    hd = cfg.resolved_head_dim
+    return n_kv_layers(cfg) * 2 * cfg.n_kv_heads * hd * dtype_bytes \
+        * batch * cache_len
+
+
+def kv_bytes_paged(cfg, n_pages: int, page_size: int, *,
+                   dtype_bytes: int = 2) -> int:
+    """Bytes the paged pools reserve (scratch page included)."""
+    hd = cfg.resolved_head_dim
+    return n_kv_layers(cfg) * 2 * cfg.n_kv_heads * hd * dtype_bytes \
+        * n_pages * page_size
+
+
+def init_paged_state(cfg, fm, *, max_batch: int, n_pages: int,
+                     page_size: int, dtype=None) -> Dict:
+    """Decode state with paged KV pools.
+
+    Same tree shape as ``init_decode_state`` except KV leaves become pools
+    ``(n_rep, n_pages, Hkv, page_size, hd)`` indexed by block tables instead
+    of per-slot ``(n_rep, B, Hkv, s_max, hd)`` caches. Recurrent (SSM)
+    leaves keep their per-slot ``(n_rep, max_batch, ...)`` layout.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    import repro.models.ssm_blocks  # registers SSM kinds  # noqa: F401
+    from repro.models.transformer import BLOCKS, model_cycle
+
+    if dtype is None:
+        dtype = jnp.bfloat16
+    blocks, cycle = model_cycle(cfg)
+    n_rep = len(blocks) // len(cycle)
+    hd = cfg.resolved_head_dim
+
+    tp_ok = cfg.n_kv_heads % max(fm.tp, 1) == 0
+    pool_sh = fm.sharding("attn", None, None, "tp" if tp_ok else None,
+                          None, None)
+
+    def stack(tree):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_rep,) + a.shape), tree)
+
+    state: Dict = {"cycle": {}}
+    for i, kind in enumerate(cycle):
+        if "decode_paged" in BLOCKS[kind]:
+            def pool():
+                # Distinct buffers — k/v must not alias (donation safety).
+                z = jnp.zeros((n_rep, n_pages, cfg.n_kv_heads, page_size, hd),
+                              dtype)
+                return jax.lax.with_sharding_constraint(z, pool_sh)
+            state["cycle"][f"b{i}"] = {"k": pool(), "v": pool()}
+        else:
+            one = BLOCKS[kind]["state"](cfg, fm, max_batch, page_size, dtype)
+            state["cycle"][f"b{i}"] = stack(one)
+    return state
+
+
+def pages_for(total_len: int, cache_len: int, page_size: int) -> int:
+    """Physical pages one request needs over its whole lifetime."""
+    return math.ceil(min(total_len, cache_len) / page_size)

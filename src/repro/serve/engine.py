@@ -1,20 +1,33 @@
-"""Serving engine: prefill + KV-cache decode for all architecture families.
+"""Production serving engine: continuous batching over paged or dense KV.
 
-* ``make_prefill_step`` — full-sequence forward (the prefill_32k shape);
-  parallel over DP×CP×TP like training, minus backward/optimizer.
-* ``make_serve_step``  — ONE new token against a KV cache of ``s_max``
-  (the decode_32k / long_500k shapes). Attention archs use the CP-sharded
-  flash-decode path; SSM archs carry O(1) recurrent state; sliding-window
-  archs use a ring-buffer cache of ``window`` slots, making 500K-token
-  decode O(window).
-* ``ServeSession`` — a small batched-request driver for the examples:
-  sequential cache-fill prefill (chunked prefill is future §Perf work) and
-  greedy/temperature generation.
+Three layers (``docs/serving.md`` has the full picture):
+
+* ``serve.cache``     — paged KV pools, block allocator, byte accounting.
+* ``serve.scheduler`` — host-side request lifecycle: admit / chunked
+  prefill / batched decode / recompute preemption, per-step ``StepStats``.
+* ``serve.engine``    — this module: the jitted device steps and the
+  :class:`Engine` front (``submit()`` / ``step()`` / ``drain()``).
+
+One ``Engine.step()`` = admit new requests + at most one **exact-length
+prefill chunk** (a single slot, interleaved so long prompts never stall
+running streams) + one **batched decode** over every active slot. Prefill
+chunks with C > 1 run through the same ``decode_step`` cache-fill path and
+ride the CP fold as a ring pass (``models/attention.py::_cache_attend``),
+so a cp≥2 mapping shards long-prompt prefill attention across the ring.
+
+SSM archs keep O(1) recurrent slots and sliding-window archs O(window)
+ring slots behind the same interface — only full-attention KV is paged.
+
+Legacy surface kept for the v0 examples/tests: ``make_prefill_step``,
+``make_serve_step``, ``state_shardings``, and the deprecated
+``ServeSession`` / ``build_session`` shims over :class:`Engine`.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+import math
+import warnings
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,9 +36,15 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core.folding import FoldedMesh
-from repro.models.sharding import param_shardings
-from repro.models.transformer import (apply_lm, decode_step, init_decode_state,
-                                      init_lm)
+from repro.models.common import norm_apply
+from repro.models.sharding import constrain, param_shardings
+from repro.models.transformer import (BLOCKS, _CACHE_LEAVES, _freeze_inactive,
+                                      _sinusoid, _stack_index, _stack_write,
+                                      apply_lm, decode_positions, decode_step,
+                                      init_decode_state, init_lm, model_cycle)
+from repro.serve.cache import (init_paged_state, kv_bytes_dense,
+                               kv_bytes_paged)
+from repro.serve.scheduler import Request, Scheduler, StepStats, _Run
 
 Array = jax.Array
 
@@ -64,6 +83,11 @@ def cache_len_for(cfg: ModelConfig, seq_len: int) -> int:
 
 
 def make_prefill_step(cfg: ModelConfig, fm: FoldedMesh):
+    """Full-sequence logits-only forward (the prefill_32k dryrun shape).
+
+    Never fills a decode cache — cache-fill prefill is ``decode_step`` with
+    C > 1 (what :class:`Engine` and ``ServeSession.prefill`` run).
+    """
     reject_pipelined_mapping(fm, "make_prefill_step")
 
     def prefill(params, batch):
@@ -103,8 +127,8 @@ def state_shardings(cfg: ModelConfig, fm: FoldedMesh, state_shapes):
         def fit(dim, axes):
             if axes is None:
                 return None
-            import math as _m
-            sz = _m.prod(fm.mesh.shape[a] for a in ((axes,) if isinstance(axes, str) else axes))
+            sz = math.prod(fm.mesh.shape[a]
+                           for a in ((axes,) if isinstance(axes, str) else axes))
             return axes if dim % sz == 0 else None
 
         if name in ("k", "v", "xk", "xv"):       # (n_rep?, B, Hkv, S, hd)
@@ -126,9 +150,438 @@ def state_shardings(cfg: ModelConfig, fm: FoldedMesh, state_shapes):
     return jax.tree_util.tree_map_with_path(spec_for, state_shapes)
 
 
+# ---------------------------------------------------------------------------
+# Engine API
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Serving knobs, orthogonal to the model/parallelism configs."""
+
+    max_batch: int = 4            # decode slots (continuous-batching width)
+    s_max: int = 256              # max context (prompt + generated) per slot
+    prefill_chunk: int = 32       # tokens per prefill chunk (exact-length)
+    cache: str = "paged"          # "paged" | "dense"
+    page_size: int = 16           # KV tokens per page (paged mode)
+    n_pages: Optional[int] = None  # pool size; default fits max_batch fully
+    preempt: bool = True          # recompute-preempt on page-pool pressure
+    compute_dtype: str = "bfloat16"
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    """Completed request: the generated tokens plus provenance."""
+
+    request_id: int
+    tokens: np.ndarray            # (n_generated,) int32, prompt excluded
+    prompt_len: int
+    finished: bool
+    preemptions: int
+    # fp32 logits after the last prompt token (first sample's input) — the
+    # ring-CP/paged parity hook: invariant across cache layout and mapping.
+    last_prefill_logits: Optional[np.ndarray] = None
+
+
+def _paged_forward(params: Dict, state: Dict, tokens: Array, positions: Array,
+                   block_tables: Array, token_mask: Array, cfg: ModelConfig,
+                   fm: FoldedMesh) -> Tuple[Array, Dict, Optional[Array]]:
+    """``decode_step`` twin over paged KV pools.
+
+    Differences: KV-bearing kinds read/write shared pools through per-row
+    block tables (``BLOCKS[kind]["decode_paged"]``); per-step routed-token
+    counts (E,) accumulate across MoE layers; positions are always explicit
+    (no carried step counter); no shared-attention or enc-dec branches —
+    :class:`Engine` validation rejects those configs for paged mode.
+    """
+    import repro.models.ssm_blocks  # registers SSM kinds  # noqa: F401
+
+    B, C = tokens.shape
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    base = jnp.asarray(positions, jnp.int32)
+
+    x = params["embed"][tokens].astype(dt)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dt)
+    if cfg.rope_kind == "none":
+        x = x + _sinusoid(decode_positions(base, base, B, C),
+                          cfg.d_model).astype(dt)
+    dp_atoms = fm.axis("attn", "dp")
+    dp_sym = None if (dp_atoms and B % math.prod(
+        fm.mesh.shape[a] for a in dp_atoms)) else "dp"
+    x = constrain(x, fm, "attn", dp_sym, None, None)
+
+    _, cycle = model_cycle(cfg)
+    has_moe = any(k == "moe" for k in cycle)
+    n_experts = cfg.moe.n_experts if has_moe else 1
+    ctx: Dict[str, Any] = {"block_tables": block_tables,
+                           "token_mask": token_mask}
+
+    def body(carry, inp):
+        h, cycle_stack, counts = carry
+        layer_params, i = inp
+        layer_state = _stack_index(cycle_stack, i)
+        new_state = {}
+        for j, kind in enumerate(cycle):
+            fns = BLOCKS[kind]
+            if "decode_paged" in fns:
+                h, st, cnt = fns["decode_paged"](
+                    layer_params[f"b{j}"], h, dict(layer_state[f"b{j}"]),
+                    base, cfg, fm, ctx)
+                if cnt is not None:
+                    counts = counts + cnt
+            else:
+                # Recurrent kinds: per-slot state, same fns as dense mode;
+                # inactive rows must not advance on the padded tokens.
+                h, st = fns["decode"](layer_params[f"b{j}"], h,
+                                      dict(layer_state[f"b{j}"]), base,
+                                      cfg, fm, ctx)
+                st = _freeze_inactive(layer_state[f"b{j}"], st, token_mask)
+            new_state[f"b{j}"] = st
+        return (h, _stack_write(cycle_stack, i, new_state), counts), None
+
+    n_rep = jax.tree.leaves(params["cycle"])[0].shape[0]
+    (x, new_cycle, counts), _ = jax.lax.scan(
+        body, (x, state["cycle"], jnp.zeros((n_experts,), jnp.float32)),
+        (params["cycle"], jnp.arange(n_rep, dtype=jnp.int32)))
+
+    x = norm_apply(cfg.norm, x, params["final_norm"])
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    logits = constrain(logits, fm, "attn", dp_sym, None, "tp")
+    return logits, {"cycle": new_cycle}, (counts if has_moe else None)
+
+
+def _slice_slot(state: Dict, slot: Array, *, paged: bool) -> Dict:
+    """Batch-slice one slot out of the decode state (prefill runs B=1).
+
+    Paged pools are shared across slots and pass through whole; the scalar
+    step counter (dense mode) is untouched."""
+    def one(path, a):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name == "step" or (paged and name in _CACHE_LEAVES):
+            return a
+        return jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1)
+    return jax.tree_util.tree_map_with_path(one, state)
+
+
+def _write_slot(state: Dict, slot: Array, new: Dict, *, paged: bool) -> Dict:
+    def one(path, a, s):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name == "step":
+            return a
+        if paged and name in _CACHE_LEAVES:
+            return s        # shared pool — already updated through pages
+        return jax.lax.dynamic_update_slice_in_dim(a, s.astype(a.dtype),
+                                                   slot, axis=1)
+    return jax.tree_util.tree_map_with_path(one, state, new)
+
+
+def _reset_fresh_request(sliced: Dict, fresh: Dict, base: Array) -> Dict:
+    """Zero a slot's recurrent state when a request starts (base == 0).
+
+    KV leaves skip the reset: dense caches are overwritten position-by-
+    position before any stale slot becomes attendable, and paged rows read
+    only through the request's own (freshly allocated) pages."""
+    def one(path, leaf, init):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name == "step" or name in _CACHE_LEAVES:
+            return leaf
+        return jnp.where(base == 0, init.astype(leaf.dtype), leaf)
+    return jax.tree_util.tree_map_with_path(one, sliced, fresh)
+
+
+def _fresh_slot_paged(sliced: Dict, cfg: ModelConfig, fm: FoldedMesh,
+                      page_size: int, dtype) -> Dict:
+    """B=1 zero-state tree matching a paged sliced slot (pools pass through
+    — they are exempt from the reset anyway)."""
+    blocks, cycle = model_cycle(cfg)
+    n_rep = len(blocks) // len(cycle)
+    out: Dict[str, Any] = {"cycle": {}}
+    for i, kind in enumerate(cycle):
+        if "decode_paged" in BLOCKS[kind]:
+            out["cycle"][f"b{i}"] = sliced["cycle"][f"b{i}"]
+        else:
+            one = BLOCKS[kind]["state"](cfg, fm, 1, page_size, dtype)
+            out["cycle"][f"b{i}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_rep,) + a.shape), one)
+    return out
+
+
+# FoldedMesh is a plain (unhashable) dataclass, so jitted step functions are
+# memoized per (cfg, id(fm), …); the closures keep fm alive, so the id
+# stays valid for the cache's lifetime.
+_JIT_CACHE: Dict[tuple, tuple] = {}
+
+
+def _engine_fns(cfg: ModelConfig, fm: FoldedMesh, *, cache_len: int,
+                page_size: int, paged: bool, bf16: bool):
+    key = (cfg, id(fm), cache_len, page_size, paged, bf16)
+    if key in _JIT_CACHE:
+        return _JIT_CACHE[key]
+
+    dt = jnp.bfloat16 if bf16 else jnp.float32
+
+    def cast(params):
+        if not bf16:
+            return params
+        return jax.tree.map(
+            lambda p: p.astype(jnp.bfloat16)
+            if (p.dtype == jnp.float32 and p.ndim >= 2) else p, params)
+
+    if paged:
+        def decode(params, state, tokens, positions, block_tables, token_mask):
+            logits, state, counts = _paged_forward(
+                cast(params), state, tokens, positions, block_tables,
+                token_mask, cfg, fm)
+            return logits[:, -1].astype(jnp.float32), state, counts
+
+        def prefill(params, state, tokens, base, slot, block_row):
+            sliced = _slice_slot(state, slot, paged=True)
+            fresh = _fresh_slot_paged(sliced, cfg, fm, page_size, dt)
+            sliced = _reset_fresh_request(sliced, fresh, base)
+            logits, sliced, counts = _paged_forward(
+                cast(params), sliced, tokens, base[None], block_row[None],
+                jnp.ones((1,), jnp.int32), cfg, fm)
+            return (logits[:, -1].astype(jnp.float32),
+                    _write_slot(state, slot, sliced, paged=True), counts)
+    else:
+        def decode(params, state, tokens, positions, token_mask):
+            logits, state = decode_step(cast(params), state, tokens, cfg, fm,
+                                        positions=positions,
+                                        token_mask=token_mask)
+            return logits[:, -1].astype(jnp.float32), state
+
+        def prefill(params, state, tokens, base, slot):
+            sliced = _slice_slot(state, slot, paged=False)
+            fresh = init_decode_state(cfg, fm, 1, cache_len, dt)
+            sliced = _reset_fresh_request(sliced, fresh, base)
+            logits, sliced = decode_step(cast(params), sliced, tokens, cfg, fm,
+                                         positions=base[None])
+            return (logits[:, -1].astype(jnp.float32),
+                    _write_slot(state, slot, sliced, paged=False))
+
+    fns = (jax.jit(prefill, donate_argnums=(1,)),
+           jax.jit(decode, donate_argnums=(1,)))
+    _JIT_CACHE[key] = fns
+    return fns
+
+
+class Engine:
+    """Continuous-batching serving engine.
+
+    >>> # eng = Engine(cfg, fm, params, EngineConfig(max_batch=4))
+    >>> # rid = eng.submit(Request(prompt=ids, max_new_tokens=16))
+    >>> # results = eng.drain()            # {rid: GenerationResult}
+
+    ``step()`` runs one scheduler tick (admit + one prefill chunk + one
+    batched decode) and returns its :class:`StepStats`; ``drain()`` steps
+    until idle. Decoder-only models, pp=1 mappings only.
+    """
+
+    def __init__(self, cfg: ModelConfig, fm: FoldedMesh, params: Dict,
+                 ecfg: Optional[EngineConfig] = None):
+        ecfg = ecfg or EngineConfig()
+        reject_pipelined_mapping(fm, "Engine")
+        if ecfg.cache not in ("paged", "dense"):
+            raise ValueError(f"EngineConfig.cache must be 'paged' or "
+                             f"'dense', got {ecfg.cache!r}")
+        if cfg.is_encoder_decoder:
+            raise ValueError(
+                "Engine serves decoder-only models; enc-dec (whisper) needs "
+                "an encoder pass + cross-KV prefill that lives in apply_lm")
+        self.paged = ecfg.cache == "paged"
+        if self.paged and cfg.shared_attention_every:
+            raise ValueError(
+                "paged KV does not support shared_attention_every (zamba2): "
+                "the shared block's cache is per-repeat, not per-layer — "
+                "use EngineConfig(cache='dense')")
+        if ecfg.compute_dtype not in ("bfloat16", "float32"):
+            raise ValueError(f"bad compute_dtype {ecfg.compute_dtype!r}")
+
+        self.cfg, self.fm, self.params, self.ecfg = cfg, fm, params, ecfg
+        self.cache_len = cache_len_for(cfg, ecfg.s_max)
+        page_size = ecfg.page_size if self.paged else 0
+        n_slot_pages = self.cache_len // page_size if self.paged else 0
+        n_pages = (ecfg.n_pages if ecfg.n_pages is not None
+                   else ecfg.max_batch * n_slot_pages + 1)
+        self._sched = Scheduler(
+            max_batch=ecfg.max_batch, cache_len=self.cache_len,
+            prefill_chunk=ecfg.prefill_chunk, page_size=page_size,
+            n_pages=n_pages if self.paged else 0,
+            window=cfg.sliding_window or 0, preempt=ecfg.preempt)
+
+        dt = jnp.bfloat16 if ecfg.compute_dtype == "bfloat16" else jnp.float32
+        if self.paged:
+            self.state = init_paged_state(
+                cfg, fm, max_batch=ecfg.max_batch, n_pages=n_pages,
+                page_size=page_size, dtype=dt)
+        else:
+            self.state = init_decode_state(cfg, fm, ecfg.max_batch,
+                                           self.cache_len, dt)
+        self._prefill_fn, self._decode_fn = _engine_fns(
+            cfg, fm, cache_len=self.cache_len, page_size=page_size,
+            paged=self.paged, bf16=ecfg.compute_dtype == "bfloat16")
+        self._results: Dict[int, GenerationResult] = {}
+        self._next_rid = 0
+        self.stats: List[StepStats] = []
+
+    @property
+    def scheduler(self) -> Scheduler:
+        return self._sched
+
+    def submit(self, request: Request) -> int:
+        """Queue a request; returns its id (drain() keys results by it)."""
+        rid = self._next_rid
+        self._next_rid += 1
+        run = _Run(rid=rid, req=request,
+                   tokens=[int(t) for t in request.prompt],
+                   prompt_len=int(request.prompt.size))
+        self._sched.submit(run)
+        return rid
+
+    def _sample(self, run: _Run, logits_row: np.ndarray) -> int:
+        if run.req.temperature <= 0:
+            return int(np.argmax(logits_row))
+        # Per-(request, position) key: invariant to batching/preemption.
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(run.req.seed), run.rid),
+            run.n_generated)
+        return int(jax.random.categorical(
+            key, jnp.asarray(logits_row) / run.req.temperature))
+
+    def step(self) -> StepStats:
+        """One scheduler tick; returns the step's observability record."""
+        s = self._sched
+        s.step_count += 1
+        admitted = [r.rid for r in s.admit()]
+        preempted: List[int] = []
+        finished: List[int] = []
+        counts = None
+        prefill_tokens = decode_tokens = 0
+
+        pf = s.next_prefill()
+        if pf is not None:
+            run, c, pre = pf
+            preempted += [r.rid for r in pre]
+            toks = jnp.asarray(
+                np.asarray(run.tokens[run.pos:run.pos + c], np.int32)[None])
+            base, slot = jnp.int32(run.pos), jnp.int32(run.slot)
+            if self.paged:
+                row = jnp.asarray(s.block_row(run))
+                last, self.state, cnt = self._prefill_fn(
+                    self.params, self.state, toks, base, slot, row)
+                if cnt is not None:
+                    counts = cnt if counts is None else counts + cnt
+            else:
+                last, self.state = self._prefill_fn(
+                    self.params, self.state, toks, base, slot)
+            run.pos += c
+            prefill_tokens = c
+            if not run.prefilling:
+                lg = np.asarray(last[0])
+                if run.n_generated == 0:
+                    # First token comes straight off the prefill logits; a
+                    # preempted run re-prefills but must NOT re-sample.
+                    run.last_prefill_logits = lg
+                    run.tokens.append(self._sample(run, lg))
+
+        plan, pre2 = s.decode_plan()
+        preempted += [r.rid for r in pre2]
+        plan = [r for r in plan if not r.done]
+        if plan:
+            B = self.ecfg.max_batch
+            toks = np.zeros((B, 1), np.int32)
+            pos = np.zeros((B,), np.int32)
+            mask = np.zeros((B,), np.int32)
+            rows = (np.zeros((B, s.n_slot_pages), np.int32)
+                    if self.paged else None)
+            if not self.paged:
+                # Inactive dense rows write garbage K/V at their own next
+                # position — overwritten by their next prefill chunk before
+                # the slot ever becomes attendable (cache-leaf note on
+                # transformer._freeze_inactive).
+                for r in s.slots:
+                    if r is not None:
+                        pos[r.slot] = r.pos
+            for r in plan:
+                toks[r.slot, 0] = r.tokens[r.pos]
+                pos[r.slot] = r.pos
+                mask[r.slot] = 1
+                if self.paged:
+                    rows[r.slot] = s.block_row(r)
+            if self.paged:
+                logits, self.state, cnt = self._decode_fn(
+                    self.params, self.state, jnp.asarray(toks),
+                    jnp.asarray(pos), jnp.asarray(rows), jnp.asarray(mask))
+                if cnt is not None:
+                    counts = cnt if counts is None else counts + cnt
+            else:
+                logits, self.state = self._decode_fn(
+                    self.params, self.state, jnp.asarray(toks),
+                    jnp.asarray(pos), jnp.asarray(mask))
+            lg = np.asarray(logits)
+            for r in plan:
+                r.tokens.append(self._sample(r, lg[r.slot]))
+                r.pos += 1
+                decode_tokens += 1
+
+        for r in [x for x in s.slots if x]:
+            if r.done and not r.prefilling:
+                finished.append(r.rid)
+                self._results[r.rid] = GenerationResult(
+                    request_id=r.rid,
+                    tokens=np.asarray(r.tokens[r.prompt_len:], np.int32),
+                    prompt_len=r.prompt_len, finished=True,
+                    preemptions=r.preemptions,
+                    last_prefill_logits=r.last_prefill_logits)
+                s.finish(r)
+
+        dtype_bytes = 2 if self.ecfg.compute_dtype == "bfloat16" else 4
+        if self.paged:
+            reserved = kv_bytes_paged(self.cfg, s.alloc.n_pages, s.page_size,
+                                      dtype_bytes=dtype_bytes)
+            pages_in_use, pages_total = s.alloc.in_use, s.alloc.n_pages - 1
+        else:
+            reserved = kv_bytes_dense(self.cfg, self.ecfg.max_batch,
+                                      self.cache_len, dtype_bytes=dtype_bytes)
+            pages_in_use = pages_total = 0
+        st = StepStats(
+            step=s.step_count, admitted=admitted, finished=finished,
+            preempted=preempted, n_running=s.n_running, n_waiting=s.n_waiting,
+            prefill_tokens=prefill_tokens, decode_tokens=decode_tokens,
+            pages_in_use=pages_in_use, pages_total=pages_total,
+            kv_bytes_reserved=reserved,
+            kv_bytes_dense=kv_bytes_dense(self.cfg, self.ecfg.max_batch,
+                                          self.cache_len,
+                                          dtype_bytes=dtype_bytes),
+            expert_load=np.asarray(counts) if counts is not None else None)
+        self.stats.append(st)
+        return st
+
+    def drain(self, max_steps: int = 100_000) -> Dict[int, GenerationResult]:
+        """Step until every submitted request finishes; results by id."""
+        n = 0
+        while not self._sched.idle:
+            self.step()
+            n += 1
+            if n > max_steps:
+                raise RuntimeError(f"drain exceeded {max_steps} steps — "
+                                   "scheduler wedged?")
+        return dict(self._results)
+
+
+# ---------------------------------------------------------------------------
+# Deprecated v0 surface (thin shims over Engine)
+# ---------------------------------------------------------------------------
+
 @dataclasses.dataclass
 class ServeSession:
-    """Batched greedy/temperature generation over a decode step."""
+    """Deprecated: use :class:`Engine` (``EngineConfig`` + ``Request`` +
+    ``submit()``/``step()``/``drain()``). Kept so the v0 examples and tests
+    keep running; ``generate`` now drives a dense-cache Engine internally
+    (and therefore no longer mutates ``self.state``)."""
 
     cfg: ModelConfig
     fm: FoldedMesh
@@ -139,6 +592,10 @@ class ServeSession:
     _step_fn: object = None
 
     def __post_init__(self):
+        warnings.warn(
+            "ServeSession is deprecated; use repro.serve.engine.Engine "
+            "(EngineConfig + submit()/step()/drain()) instead.",
+            DeprecationWarning, stacklevel=2)
         reject_pipelined_mapping(self.fm, "ServeSession")
         if self.state is None:
             self.state = init_decode_state(self.cfg, self.fm, self.batch,
@@ -146,34 +603,30 @@ class ServeSession:
         self._step_fn = jax.jit(make_serve_step(self.cfg, self.fm))
 
     def prefill(self, prompts: np.ndarray) -> Array:
-        """Sequential cache-fill prefill. prompts: (B, S_p) int32."""
-        logits = None
-        for t in range(prompts.shape[1]):
-            logits, self.state = self._step_fn(
-                self.params, self.state, jnp.asarray(prompts[:, t:t + 1]))
-        return logits
+        """Batched cache-fill prefill: ONE chunked decode_step call over
+        (B, S_p) — replaces the v0 per-token Python loop."""
+        logits, self.state = self._step_fn(self.params, self.state,
+                                           jnp.asarray(prompts))
+        return logits[:, -1:]
 
     def generate(self, prompts: np.ndarray, n_tokens: int, *,
                  temperature: float = 0.0, seed: int = 0) -> np.ndarray:
-        logits = self.prefill(prompts)
-        key = jax.random.PRNGKey(seed)
-        out = []
-        tok = None
-        for i in range(n_tokens):
-            if temperature > 0:
-                key, sk = jax.random.split(key)
-                tok = jax.random.categorical(sk, logits[:, -1] / temperature)[:, None]
-            else:
-                tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-            tok = tok.astype(jnp.int32)
-            out.append(np.asarray(tok))
-            logits, self.state = self._step_fn(self.params, self.state, tok)
-        return np.concatenate(out, axis=1)
+        prompts = np.asarray(prompts, np.int32)
+        eng = Engine(self.cfg, self.fm, self.params, EngineConfig(
+            max_batch=self.batch, s_max=self.s_max, cache="dense",
+            prefill_chunk=max(1, int(prompts.shape[1]))))
+        rids = [eng.submit(Request(prompt=prompts[b], max_new_tokens=n_tokens,
+                                   temperature=temperature, seed=seed))
+                for b in range(prompts.shape[0])]
+        res = eng.drain()
+        return np.stack([res[r].tokens for r in rids], axis=0)
 
 
 def build_session(key, cfg: ModelConfig, fm: FoldedMesh, *, batch: int,
                   s_max: int) -> ServeSession:
+    """Deprecated: init params and wrap them in a :class:`ServeSession`."""
     pshard = param_shardings(
         jax.eval_shape(lambda k: init_lm(k, cfg), key), fm, mode="store")
     params = jax.jit(lambda k: init_lm(k, cfg), out_shardings=pshard)(key)
-    return ServeSession(cfg=cfg, fm=fm, params=params, s_max=s_max, batch=batch)
+    return ServeSession(cfg=cfg, fm=fm, params=params, s_max=s_max,
+                        batch=batch)

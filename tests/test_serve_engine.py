@@ -1,0 +1,251 @@
+"""Serving-engine behaviour: paged-vs-dense bitwise parity, ring-CP
+prefill, preemption transparency, expert-load accounting, API contract.
+
+The bitwise contract: for greedy decoding, a request served through
+continuous batching + paged KV + chunked prefill produces tokens
+**identical** to the same request served alone against a dense cache —
+across attention, SSM (recurrent), and sliding-window archs, and across
+CP folds. Masked KV slots are exact no-ops in the online softmax and SSM
+chunk schedules are held identical, so this is equality, not tolerance.
+"""
+import dataclasses
+from functools import lru_cache
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ParallelConfig, ParallelMappingSpec as PM
+from repro.core.folding import build_folded_mesh
+from repro.models.transformer import init_lm
+from repro.serve import Engine, EngineConfig, Request
+from repro.serve.cache import kv_bytes_dense, kv_bytes_paged, pages_for
+from repro.serve.engine import ServeSession
+
+
+@lru_cache
+def fm1():
+    return build_folded_mesh(ParallelConfig(attn=PM(1, 1, 1), moe=PM(1, 1, 1)))
+
+
+@lru_cache
+def fm_cp2():
+    return build_folded_mesh(ParallelConfig(attn=PM(1, 2, 1), moe=PM(1, 2, 1)))
+
+
+def arch_cfg(name):
+    if name == "llama-swa":
+        return dataclasses.replace(reduced(get_config("llama3.2-1b")),
+                                   sliding_window=16)
+    return reduced(get_config(name))
+
+
+@lru_cache
+def built(name):
+    cfg = arch_cfg(name)
+    return cfg, init_lm(jax.random.PRNGKey(0), cfg)
+
+
+def prompts_for(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+            for n in lens]
+
+
+_BASELINE = {}
+
+
+def serial_dense_tokens(name, fm, req, s_max=64, chunk=4):
+    """One-request-at-a-time dense-cache reference (memoized per prompt)."""
+    key = (name, id(fm), req.prompt.tobytes(), req.max_new_tokens, s_max)
+    if key not in _BASELINE:
+        cfg, params = built(name)
+        e = Engine(cfg, fm, params, EngineConfig(
+            max_batch=1, s_max=s_max, cache="dense", prefill_chunk=chunk))
+        rid = e.submit(req)
+        _BASELINE[key] = e.drain()[rid].tokens
+    return _BASELINE[key]
+
+
+# ---- paged vs dense bitwise parity ---------------------------------------
+
+def _parity_case(name, fm, s_max=64):
+    cfg, params = built(name)
+    reqs = [Request(prompt=p, max_new_tokens=6)
+            for p in prompts_for(cfg, (5, 13, 3))]
+    eng = Engine(cfg, fm, params, EngineConfig(
+        max_batch=3, s_max=s_max, cache="paged", page_size=8,
+        prefill_chunk=4))
+    rids = [eng.submit(r) for r in reqs]
+    res = eng.drain()
+    for r, rid in zip(reqs, rids):
+        ref = serial_dense_tokens(name, fm1(), r, s_max=s_max)
+        assert np.array_equal(ref, res[rid].tokens), (name, ref, res[rid].tokens)
+
+
+def test_paged_matches_serial_dense_attention():
+    """Fast-gate leg: the flagship parity on the attention arch."""
+    _parity_case("llama3.2-1b", fm1())
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["xlstm-125m", "llama-swa"])
+def test_paged_matches_serial_dense_ssm_and_window(name):
+    _parity_case(name, fm1())
+
+
+@pytest.mark.slow
+def test_paged_parity_on_cp2_fold():
+    """Continuous batching on a cp≥2 fold (ring-CP chunked prefill) still
+    reproduces the cp=1 serial-dense tokens bitwise."""
+    _parity_case("llama3.2-1b", fm_cp2())
+
+
+@pytest.mark.slow
+def test_ring_cp_prefill_logits_match_cp1():
+    cfg, params = built("llama3.2-1b")
+    req = Request(prompt=prompts_for(cfg, (12,))[0], max_new_tokens=4)
+    out = {}
+    for tag, fm in (("cp1", fm1()), ("cp2", fm_cp2())):
+        e = Engine(cfg, fm, params, EngineConfig(
+            max_batch=2, s_max=64, cache="paged", page_size=8,
+            prefill_chunk=4, compute_dtype="float32"))
+        rid = e.submit(req)
+        out[tag] = e.drain()[rid]
+    np.testing.assert_allclose(out["cp1"].last_prefill_logits,
+                               out["cp2"].last_prefill_logits,
+                               rtol=1e-5, atol=1e-5)
+    assert np.array_equal(out["cp1"].tokens, out["cp2"].tokens)
+
+
+# ---- preemption ----------------------------------------------------------
+
+@pytest.mark.slow
+def test_preemption_is_output_transparent():
+    """A tiny page pool forces a recompute preemption mid-stream; greedy
+    outputs must be unchanged (re-prefill recomputes identical KV)."""
+    name = "llama3.2-1b"
+    cfg, params = built(name)
+    reqs = [Request(prompt=p, max_new_tokens=16)
+            for p in prompts_for(cfg, (6, 7), seed=2)]
+    eng = Engine(cfg, fm1(), params, EngineConfig(
+        max_batch=2, s_max=32, cache="paged", page_size=4, n_pages=10,
+        prefill_chunk=4))
+    rids = [eng.submit(r) for r in reqs]
+    res = eng.drain()
+    assert sum(res[r].preemptions for r in rids) > 0, \
+        "pool sized to force preemption but none fired"
+    for r, rid in zip(reqs, rids):
+        ref = serial_dense_tokens(name, fm1(), r, s_max=32)
+        assert np.array_equal(ref, res[rid].tokens)
+
+
+# ---- random arrival/length mixes (hypothesis) ----------------------------
+
+@pytest.mark.slow
+def test_random_arrival_mix_matches_serial_baseline():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    name = "llama3.2-1b"
+    cfg, params = built(name)
+    pool = {n: prompts_for(cfg, (n,), seed=n)[0] for n in (3, 5, 8)}
+
+    @settings(max_examples=6, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 5),          # arrival step
+                              st.sampled_from([3, 5, 8]),  # prompt len
+                              st.sampled_from([3, 5])),    # max_new
+                    min_size=1, max_size=5))
+    def run(plan):
+        eng = Engine(cfg, fm1(), params, EngineConfig(
+            max_batch=2, s_max=32, cache="paged", page_size=8,
+            prefill_chunk=4))
+        pending = sorted(enumerate(plan), key=lambda t: t[1][0])
+        rids = {}
+        t = 0
+        while pending or not eng.scheduler.idle:
+            while pending and pending[0][1][0] <= t:
+                i, (_, n, m) = pending.pop(0)
+                rids[i] = (eng.submit(Request(prompt=pool[n],
+                                              max_new_tokens=m)), n, m)
+            eng.step()
+            t += 1
+            assert t < 500
+        res = eng.drain()
+        for rid, n, m in rids.values():
+            ref = serial_dense_tokens(
+                name, fm1(), Request(prompt=pool[n], max_new_tokens=m),
+                s_max=32)
+            assert np.array_equal(ref, res[rid].tokens)
+
+    run()
+
+
+# ---- expert load ---------------------------------------------------------
+
+@pytest.mark.slow
+def test_expert_load_counts_routed_tokens():
+    cfg, params = built("qwen3-moe-30b-a3b")
+    n_moe = sum(1 for b in cfg.blocks() if b == "moe")
+    eng = Engine(cfg, fm1(), params, EngineConfig(
+        max_batch=2, s_max=32, cache="paged", page_size=8, prefill_chunk=4))
+    for p in prompts_for(cfg, (5, 3)):
+        eng.submit(Request(prompt=p, max_new_tokens=4))
+    eng.drain()
+    assert any(st.expert_load is not None for st in eng.stats)
+    for st in eng.stats:
+        if st.expert_load is None:
+            continue
+        assert st.expert_load.shape == (cfg.moe.n_experts,)
+        active = st.prefill_tokens + st.decode_tokens
+        assert st.expert_load.sum() == pytest.approx(
+            active * cfg.moe.top_k * n_moe)
+
+
+# ---- memory accounting ---------------------------------------------------
+
+def test_paged_reserves_under_half_of_dense():
+    """Acceptance: mixed-length batch, pool sized to need, < 50% of the
+    dense batch × cache_len_for(s_max) reservation (pure accounting)."""
+    cfg = arch_cfg("llama3.2-1b")
+    s_max, page, max_new = 256, 16, 16
+    lens = (17, 63, 9, 40)
+    n_pages = 1 + sum(pages_for(n + max_new, s_max, page) for n in lens)
+    reserved = kv_bytes_paged(cfg, n_pages, page)
+    dense = kv_bytes_dense(cfg, len(lens), s_max)
+    assert reserved < 0.5 * dense, (reserved, dense)
+
+
+# ---- API contract / validation -------------------------------------------
+
+def test_engine_rejects_invalid_configs():
+    cfg = arch_cfg("llama3.2-1b")
+    with pytest.raises(ValueError, match="pp=1/vpp=1"):
+        Engine(cfg, build_folded_mesh(ParallelConfig(
+            attn=PM(2, 1, 2), moe=PM(2, 1, 2), pp=2)), {}, EngineConfig())
+    with pytest.raises(ValueError, match="decoder-only"):
+        Engine(reduced(get_config("whisper-small")), fm1(), {}, EngineConfig())
+    with pytest.raises(ValueError, match="shared_attention_every"):
+        Engine(reduced(get_config("zamba2-2.7b")), fm1(), {},
+               EngineConfig(cache="paged"))
+    with pytest.raises(ValueError, match="'paged' or 'dense'"):
+        Engine(cfg, fm1(), {}, EngineConfig(cache="mmap"))
+    with pytest.raises(ValueError, match="compute_dtype"):
+        Engine(cfg, fm1(), {}, EngineConfig(cache="dense",
+                                            compute_dtype="fp8"))
+
+
+def test_servesession_is_deprecated_shim():
+    cfg, params = built("llama3.2-1b")
+    with pytest.warns(DeprecationWarning, match="Engine"):
+        sess = ServeSession(cfg=cfg, fm=fm1(), params=params, s_max=32,
+                            batch=2)
+    prompts = np.stack([p[:4] for p in prompts_for(cfg, (4, 4), seed=3)])
+    out = sess.generate(prompts, n_tokens=4)
+    assert out.shape == (2, 4)
+    for b in range(2):
+        ref = serial_dense_tokens("llama3.2-1b", fm1(),
+                                  Request(prompt=prompts[b],
+                                          max_new_tokens=4), s_max=32)
+        assert np.array_equal(ref, out[b])
