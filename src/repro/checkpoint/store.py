@@ -20,6 +20,21 @@ be resumed from):
   (:func:`jax.make_array_from_callback`), so only the bytes a host needs
   are assembled — the elastic-restart path (docs/checkpointing.md).
 
+Integrity (docs/resilience.md): every shard record carries a sha256 of
+its raw bytes; :func:`verify_checkpoint` re-hashes a step end to end and
+returns the problems it finds (missing/unreadable files, digest
+mismatches, shape drift), :func:`quarantine` marks a step as corrupt so
+:func:`latest_step` / :func:`available_steps` skip it, and
+``latest_step(directory, verified=True)`` walks newest-first, verifying
+and quarantining as it goes, until it finds a step that checks out — the
+supervisor's restore anchor. ``restore_sharded(..., verify=True)``
+refuses (and quarantines) a corrupt step, naming the fallback. A
+truncated/bit-flipped npz never surfaces as a raw ``zlib``/``BadZipFile``
+traceback: every read is wrapped to raise a ``ValueError`` naming the
+file, step, and suggested fallback step. :func:`gc_steps` deletes the
+oldest completed steps past a retention budget — never the newest good
+one, never quarantined dirs (kept as forensic evidence).
+
 Shard ownership: for every distinct index box of a leaf, the device with
 the smallest id holding it is the owner (replica de-duplication); the
 owner's process writes that box. On a single host this degenerates to
@@ -28,10 +43,13 @@ one.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
 import threading
+import zlib
+import zipfile
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -39,6 +57,57 @@ import numpy as np
 
 FORMAT = "repro-elastic-v1"
 _TMP_PREFIX = ".tmp."
+
+# Exceptions numpy's lazy zip reader raises on a truncated / bit-flipped
+# npz; all converted into naming ValueErrors by _load_npz/_read_entry.
+_CORRUPT_NPZ_ERRORS = (zipfile.BadZipFile, zlib.error, KeyError, EOFError,
+                       OSError, ValueError)
+
+
+def _digest(arr: np.ndarray) -> str:
+    """sha256 of a host array's raw bytes (dtype-view safe: the bf16 void
+    round trip hashes identically)."""
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
+
+
+def _fallback_step(directory: str, step: int) -> Optional[int]:
+    older = [s for s in available_steps(directory) if s < step]
+    return max(older) if older else None
+
+
+def _corrupt_msg(directory: str, step: int, what: str) -> str:
+    fb = _fallback_step(directory, step)
+    hint = (f"suggested fallback: step {fb} "
+            "(latest_step(directory, verified=True) finds it automatically)"
+            if fb is not None else "no older completed step to fall back to")
+    return (f"checkpoint step {step} in {directory!r} is corrupt or "
+            f"truncated: {what}; {hint}")
+
+
+def _load_npz(path: str, *, directory: str, step: int):
+    """np.load that surfaces container corruption as a naming ValueError."""
+    try:
+        data = np.load(path)
+        data.files  # force the central-directory read
+        return data
+    except _CORRUPT_NPZ_ERRORS as e:
+        raise ValueError(_corrupt_msg(
+            directory, step,
+            f"cannot read {os.path.basename(path)!r} "
+            f"({type(e).__name__}: {e})")) from e
+
+
+def _read_entry(npz, key: str, *, file: str, directory: str, step: int
+                ) -> np.ndarray:
+    """Read one npz member, converting decompression/zip errors into a
+    ValueError naming the file, step, and fallback step."""
+    try:
+        return npz[key]
+    except _CORRUPT_NPZ_ERRORS as e:
+        raise ValueError(_corrupt_msg(
+            directory, step,
+            f"entry {key!r} of {file!r} unreadable "
+            f"({type(e).__name__}: {e})")) from e
 
 
 # ---------------------------------------------------------------------------
@@ -165,7 +234,8 @@ def save(directory: str, step: int, tree) -> str:
     arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
     _atomic_write_npz(path, arrays)
-    manifest = {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+    manifest = {k: {"shape": list(v.shape), "dtype": str(v.dtype),
+                    "sha256": _digest(v)}
                 for k, v in arrays.items()}
     _atomic_write_json(os.path.join(directory, f"ckpt_{step:08d}.json"),
                        manifest)
@@ -215,7 +285,7 @@ def restore(directory: str, step: int, like_tree, shardings=None):
     if not os.path.exists(path):
         raise ValueError(f"no legacy checkpoint for step {step} in "
                          f"{directory!r} (expected {path!r})")
-    data = np.load(path)
+    data = _load_npz(path, directory=directory, step=step)
     man_path = os.path.join(directory, f"ckpt_{step:08d}.json")
     man = {}
     if os.path.exists(man_path):
@@ -225,11 +295,13 @@ def restore(directory: str, step: int, like_tree, shardings=None):
     _validate_keys(list(data.keys()), list(flat_like.keys()), where=path)
     flat_shard = _flatten(shardings) if shardings is not None else {}
     out = {}
+    fname = os.path.basename(path)
     for k, ref in flat_like.items():
         # npz loses extension dtypes (bf16 → V2); the manifest keeps the
         # true dtype and the byte view restores it.
-        true_dtype = np.dtype(man.get(k, {}).get("dtype", str(data[k].dtype)))
-        arr = _undo_void(data[k], true_dtype)
+        raw = _read_entry(data, k, file=fname, directory=directory, step=step)
+        true_dtype = np.dtype(man.get(k, {}).get("dtype", str(raw.dtype)))
+        arr = _undo_void(raw, true_dtype)
         _validate_leaf(k, arr.shape, arr.dtype, ref, where=path)
         if k in flat_shard:
             out[k] = jax.device_put(arr, flat_shard[k])
@@ -331,6 +403,11 @@ def save_sharded(directory: str, step: int, tree, *,
                 "key": npz_key,
                 "start": [b[0] for b in rec["box"]],
                 "stop": [b[1] for b in rec["box"]],
+                # Integrity digest of the raw shard bytes. None when the
+                # owner is another host (its digest is unknowable here);
+                # verify_checkpoint skips digestless shards with a note.
+                "sha256": (_digest(rec["data"])
+                           if rec["data"] is not None else None),
             })
             if rec["proc"] == proc:
                 assert rec["data"] is not None, (key, i)
@@ -389,12 +466,18 @@ def read_manifest(directory: str, step: int) -> Dict:
 
 
 def _assemble_box(target_box: Tuple[Tuple[int, int], ...],
-                  rec: Dict, files: Dict[str, Any],
-                  dtype: np.dtype) -> np.ndarray:
+                  rec: Dict, files: Dict[str, Any], dtype: np.dtype, *,
+                  directory: str, step: int) -> np.ndarray:
     """Stitch one target index box from the overlapping source shards."""
     shape = tuple(stop - start for start, stop in target_box)
     out = np.empty(shape, dtype=dtype)
     filled = 0
+
+    def read(sh):
+        return _undo_void(
+            _read_entry(files[sh["file"]], sh["key"], file=sh["file"],
+                        directory=directory, step=step), dtype)
+
     for sh in rec["shards"]:
         src_start, src_stop = sh["start"], sh["stop"]
         ov = [(max(a0, b0), min(a1, b1))
@@ -402,7 +485,7 @@ def _assemble_box(target_box: Tuple[Tuple[int, int], ...],
                                             zip(src_start, src_stop))]
         if any(o1 <= o0 for o0, o1 in ov):
             continue
-        src = _undo_void(files[sh["file"]][sh["key"]], dtype)
+        src = read(sh)
         dst_idx = tuple(slice(o0 - t0, o1 - t0)
                         for (o0, o1), (t0, _) in zip(ov, target_box))
         src_idx = tuple(slice(o0 - s0, o1 - s0)
@@ -411,8 +494,7 @@ def _assemble_box(target_box: Tuple[Tuple[int, int], ...],
         filled += int(np.prod([o1 - o0 for o0, o1 in ov]))
     want = int(np.prod(shape)) if shape else 1
     if not shape:  # scalar: a single covering shard
-        sh0 = rec["shards"][0]
-        out[()] = _undo_void(files[sh0["file"]][sh0["key"]], dtype)
+        out[()] = read(rec["shards"][0])
         filled = 1
     if filled != want:
         raise ValueError(
@@ -421,7 +503,8 @@ def _assemble_box(target_box: Tuple[Tuple[int, int], ...],
     return out
 
 
-def restore_sharded(directory: str, step: int, like_tree, shardings):
+def restore_sharded(directory: str, step: int, like_tree, shardings, *,
+                    verify: bool = False):
     """Restore a sharded checkpoint onto a (possibly different) mapping.
 
     ``like_tree`` supplies the target tree structure/dtypes (arrays or
@@ -434,7 +517,18 @@ def restore_sharded(directory: str, step: int, like_tree, shardings):
 
     Validates the manifest against ``like_tree`` first: missing/extra
     leaves and dtype/shape mismatches raise a naming ``ValueError``.
+    ``verify=True`` re-hashes every shard digest first; a step that fails
+    is quarantined and the error names the suggested fallback step.
     """
+    if verify:
+        problems = verify_checkpoint(directory, step)
+        if problems:
+            quarantine(directory, step, problems)
+            shown = "; ".join(problems[:4])
+            if len(problems) > 4:
+                shown += f" (+{len(problems) - 4} more)"
+            raise ValueError(_corrupt_msg(
+                directory, step, f"verify_checkpoint found: {shown}"))
     manifest = read_manifest(directory, step)
     leaves = manifest["leaves"]
     ckpt_dir = os.path.join(directory, f"ckpt_{step:08d}")
@@ -452,10 +546,12 @@ def restore_sharded(directory: str, step: int, like_tree, shardings):
             if sh["file"] not in files:
                 fpath = os.path.join(ckpt_dir, sh["file"])
                 if not os.path.exists(fpath):
-                    raise ValueError(
-                        f"sharded checkpoint {ckpt_dir!r} is missing shard "
-                        f"file {sh['file']!r} named by its manifest")
-                files[sh["file"]] = np.load(fpath)
+                    raise ValueError(_corrupt_msg(
+                        directory, step,
+                        f"missing shard file {sh['file']!r} named by its "
+                        "manifest"))
+                files[sh["file"]] = _load_npz(fpath, directory=directory,
+                                              step=step)
 
     out = {}
     for k, ref in flat_like.items():
@@ -466,7 +562,8 @@ def restore_sharded(directory: str, step: int, like_tree, shardings):
 
         def cb(index, rec=rec, shape=shape, dtype=dtype):
             box = _norm_index(tuple(index), shape)
-            return _assemble_box(box, rec, files, dtype)
+            return _assemble_box(box, rec, files, dtype,
+                                 directory=directory, step=step)
 
         out[k] = jax.make_array_from_callback(shape, sharding, cb)
     leaves_order = _leaf_keys_in_order(like_tree)
@@ -475,7 +572,7 @@ def restore_sharded(directory: str, step: int, like_tree, shardings):
 
 
 # ---------------------------------------------------------------------------
-# Step discovery
+# Step discovery, verification, quarantine, GC
 # ---------------------------------------------------------------------------
 
 def _payload_exists(directory: str, step: int) -> bool:
@@ -485,8 +582,30 @@ def _payload_exists(directory: str, step: int) -> bool:
         os.path.join(directory, f"ckpt_{step:08d}", "manifest.json"))
 
 
-def available_steps(directory: str) -> List[int]:
-    """Steps with a completed (marked + payload-present) checkpoint."""
+def _quarantine_path(directory: str, step: int) -> str:
+    return os.path.join(directory, f"ckpt_{step:08d}.quarantined")
+
+
+def is_quarantined(directory: str, step: int) -> bool:
+    return os.path.exists(_quarantine_path(directory, step))
+
+
+def quarantine(directory: str, step: int, reasons) -> str:
+    """Mark ``step`` corrupt: ``available_steps``/``latest_step`` skip it,
+    :func:`gc_steps` never deletes it (forensic evidence). Idempotent."""
+    if isinstance(reasons, str):
+        reasons = [reasons]
+    path = _quarantine_path(directory, step)
+    _atomic_write_json(path, {"step": step, "reasons": list(reasons)})
+    return path
+
+
+def available_steps(directory: str, *,
+                    include_quarantined: bool = False) -> List[int]:
+    """Steps with a completed (marked + payload-present) checkpoint.
+
+    Quarantined steps are excluded unless ``include_quarantined=True``.
+    """
     if not os.path.isdir(directory):
         return []
     steps = []
@@ -496,13 +615,159 @@ def available_steps(directory: str) -> List[int]:
                 step = int(f[5:13])
             except ValueError:
                 continue
-            if _payload_exists(directory, step):
-                steps.append(step)
+            if not _payload_exists(directory, step):
+                continue
+            if not include_quarantined and is_quarantined(directory, step):
+                continue
+            steps.append(step)
     return sorted(steps)
 
 
-def latest_step(directory: str) -> Optional[int]:
+def verify_checkpoint(directory: str, step: int) -> List[str]:
+    """Re-hash a completed step end to end; return the problems found.
+
+    An empty list means the step checks out. Checks, per format:
+
+    * manifest readable (valid JSON / npz container opens);
+    * every shard file named by the manifest exists and its npz central
+      directory reads;
+    * every manifest key is present in its file;
+    * each shard's bytes decompress and its shape matches the manifest
+      box (legacy: the recorded shape);
+    * each shard's sha256 matches the recorded digest. Digestless shards
+      (written by a non-addressable host) still get the read/shape checks,
+      just not the hash comparison.
+    """
+    problems: List[str] = []
+    legacy_npz = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    ckpt_dir = os.path.join(directory, f"ckpt_{step:08d}")
+
+    def try_read(npz, key, file):
+        try:
+            return _read_entry(npz, key, file=file, directory=directory,
+                               step=step)
+        except ValueError as e:
+            problems.append(str(e.args[0]) if e.args else str(e))
+            return None
+
+    if os.path.isdir(ckpt_dir):
+        try:
+            manifest = read_manifest(directory, step)
+        except (ValueError, json.JSONDecodeError) as e:
+            return [f"manifest unreadable: {e}"]
+        files: Dict[str, Any] = {}
+        bad_files = set()
+        for key, rec in sorted(manifest["leaves"].items()):
+            for sh in rec["shards"]:
+                fname = sh["file"]
+                if fname in bad_files:
+                    continue
+                if fname not in files:
+                    fpath = os.path.join(ckpt_dir, fname)
+                    if not os.path.exists(fpath):
+                        problems.append(f"missing shard file {fname!r}")
+                        bad_files.add(fname)
+                        continue
+                    try:
+                        files[fname] = _load_npz(fpath, directory=directory,
+                                                 step=step)
+                    except ValueError as e:
+                        problems.append(str(e.args[0]) if e.args else str(e))
+                        bad_files.add(fname)
+                        continue
+                if sh["key"] not in files[fname].files:
+                    problems.append(
+                        f"entry {sh['key']!r} missing from {fname!r}")
+                    continue
+                arr = try_read(files[fname], sh["key"], fname)
+                if arr is None:
+                    continue
+                want_shape = tuple(b1 - b0 for b0, b1
+                                   in zip(sh["start"], sh["stop"]))
+                if tuple(arr.shape) != want_shape:
+                    problems.append(
+                        f"shard {sh['key']!r} of {fname!r} has shape "
+                        f"{tuple(arr.shape)}, manifest box says {want_shape}")
+                    continue
+                if sh.get("sha256") is not None \
+                        and _digest(arr) != sh["sha256"]:
+                    problems.append(
+                        f"sha256 mismatch for shard {sh['key']!r} of "
+                        f"{fname!r} (leaf {key!r})")
+    elif os.path.exists(legacy_npz):
+        try:
+            data = _load_npz(legacy_npz, directory=directory, step=step)
+        except ValueError as e:
+            return [str(e.args[0]) if e.args else str(e)]
+        man_path = os.path.join(directory, f"ckpt_{step:08d}.json")
+        man = {}
+        if os.path.exists(man_path):
+            try:
+                with open(man_path) as f:
+                    man = json.load(f)
+            except json.JSONDecodeError as e:
+                return [f"legacy manifest unreadable: {e}"]
+        fname = os.path.basename(legacy_npz)
+        for k in sorted(set(data.files) | set(man.keys())):
+            if k not in data.files:
+                problems.append(f"entry {k!r} missing from {fname!r}")
+                continue
+            arr = try_read(data, k, fname)
+            if arr is None:
+                continue
+            rec = man.get(k, {})
+            if rec.get("shape") is not None \
+                    and tuple(arr.shape) != tuple(rec["shape"]):
+                problems.append(
+                    f"entry {k!r} of {fname!r} has shape {tuple(arr.shape)},"
+                    f" manifest says {tuple(rec['shape'])}")
+                continue
+            if rec.get("sha256") is not None and _digest(arr) != rec["sha256"]:
+                problems.append(f"sha256 mismatch for entry {k!r} of {fname!r}")
+    else:
+        problems.append("no payload (neither sharded dir nor legacy npz)")
+    return problems
+
+
+def latest_step(directory: str, *, verified: bool = False) -> Optional[int]:
     """Newest *completed* step — checkpoints without a ``ckpt_*.done``
-    marker (a mid-save kill) are never resumed from."""
+    marker (a mid-save kill) are never resumed from, and quarantined
+    steps are never returned.
+
+    ``verified=True`` additionally runs :func:`verify_checkpoint` on each
+    candidate, newest first, quarantining any that fail, until one checks
+    out — the supervisor's restore anchor.
+    """
     steps = available_steps(directory)
-    return steps[-1] if steps else None
+    if not verified:
+        return steps[-1] if steps else None
+    for step in reversed(steps):
+        problems = verify_checkpoint(directory, step)
+        if not problems:
+            return step
+        quarantine(directory, step, problems)
+    return None
+
+
+def _step_paths(directory: str, step: int) -> List[str]:
+    """Every on-disk artifact belonging to ``step`` (payloads + markers)."""
+    stem = f"ckpt_{step:08d}"
+    return [os.path.join(directory, stem + suffix)
+            for suffix in ("", ".npz", ".json", ".done", ".quarantined")]
+
+
+def gc_steps(directory: str, keep: int) -> List[int]:
+    """Delete the oldest completed checkpoints, keeping the newest ``keep``
+    non-quarantined steps (at least 1 — the last good step is never
+    deleted). Quarantined steps are never touched: they are evidence, and
+    deleting them could orphan an incident log. Returns deleted steps."""
+    keep = max(1, int(keep))
+    steps = available_steps(directory)
+    doomed = steps[:-keep] if len(steps) > keep else []
+    for step in doomed:
+        for path in _step_paths(directory, step):
+            if os.path.isdir(path):
+                shutil.rmtree(path)
+            elif os.path.exists(path):
+                os.remove(path)
+    return doomed

@@ -43,6 +43,19 @@ class SyntheticTokens:
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
         return self
 
+    @property
+    def position(self) -> int:
+        """Number of batches produced so far."""
+        return self._step
+
+    def seek(self, step: int) -> "SyntheticTokens":
+        """Jump to batch index ``step``; the next ``next()`` yields batch
+        ``step``. Each batch is generated from its own per-step seed, so
+        seeking is O(1) — the supervisor's replay-to-the-failed-batch
+        primitive (docs/resilience.md)."""
+        self._step = int(step)
+        return self
+
     def __next__(self) -> Dict[str, np.ndarray]:
         cfg = self.cfg
         rng = np.random.default_rng(cfg.seed * 1_000_003 + self._step)

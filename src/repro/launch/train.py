@@ -12,9 +12,20 @@ dry-run analysis instead of executing (no TPU attached).
 Checkpointing uses the elastic sharded format (checkpoint/store.py):
 ``--ckpt-every N`` saves params + ZeRO-1 optimizer state every N steps
 (async, committed by a background thread, crash-safe tmp+rename+done
-marker); ``--resume`` restores the newest completed step — the restore
-reshands through the folded-mesh specs, so resuming under a different
-mapping or world size than the saving run is supported.
+marker); ``--resume`` restores the newest *verified* step (per-shard
+sha256 checked; corrupt or torn steps are quarantined and skipped) — the
+restore reshards through the folded-mesh specs, so resuming under a
+different mapping or world size than the saving run is supported.
+``--ckpt-keep N`` garbage-collects all but the newest N steps after each
+save (quarantined steps are never deleted: they are evidence).
+
+``--supervise`` runs the loop under the resilience stack
+(repro.resilience, docs/resilience.md): in-jit anomaly guard skipping
+non-finite steps, EMA z-score loss-spike rollback, a per-step watchdog
+(``--hang-timeout``), and an auto-restart supervisor (``--max-restarts``)
+that restores from the last verified checkpoint, replays the
+deterministic data stream to the exact failed batch, and appends a
+structured incident record per event to ``--incident-log`` (JSONL).
 """
 import argparse
 import time
@@ -31,14 +42,29 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50,
                     help="save every N steps when --ckpt-dir is set")
+    ap.add_argument("--ckpt-keep", type=int, default=0,
+                    help="keep only the newest N checkpoint steps "
+                         "(0 = keep all; quarantined steps never deleted)")
     ap.add_argument("--resume", action="store_true",
-                    help="resume from the newest completed checkpoint in "
+                    help="resume from the newest *verified* checkpoint in "
                          "--ckpt-dir (elastic: the saving run may have "
                          "used a different mapping/world size)")
     ap.add_argument("--master-weights", action="store_true",
                     help="ZeRO-1 fp32 master copy in the optimizer state "
                          "(params stored in compute dtype)")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run under the resilience supervisor: anomaly "
+                         "guard, spike rollback, watchdog, auto-restart "
+                         "from the last verified checkpoint")
+    ap.add_argument("--max-restarts", type=int, default=3,
+                    help="supervisor restart budget before giving up")
+    ap.add_argument("--hang-timeout", type=float, default=0.0,
+                    help="per-step watchdog deadline in seconds "
+                         "(0 = no watchdog; only with --supervise)")
+    ap.add_argument("--incident-log", default="",
+                    help="JSONL file for structured incident records "
+                         "(restarts, skipped steps, spikes)")
     args = ap.parse_args()
 
     if not args.reduced:
@@ -50,6 +76,8 @@ def main() -> None:
     import os
     os.environ.setdefault("XLA_FLAGS",
                           "--xla_force_host_platform_device_count=8")
+    import dataclasses
+
     import jax
     from repro.checkpoint import store
     from repro.configs import get_config, reduced
@@ -58,11 +86,9 @@ def main() -> None:
     from repro.data.pipeline import DataConfig, SyntheticTokens, materialize_batch
     from repro.optim import adamw
     from repro.train.loop import (batch_shardings, init_train_state,
-                                  make_train_step)
+                                  make_train_step, restore_train_state,
+                                  save_train_state)
 
-    from repro.train.loop import restore_train_state, save_train_state
-
-    import dataclasses
     cfg = reduced(get_config(args.arch))
     moe = PM(1, 8, 1) if cfg.moe is not None else PM(2, 2, 2)
     if cfg.moe is not None and cfg.moe.n_experts % 8:
@@ -73,9 +99,37 @@ def main() -> None:
     opt_cfg = adamw.AdamWConfig(lr=args.lr, warmup_steps=10,
                                 decay_steps=args.steps,
                                 master_weights=args.master_weights)
+
+    if args.supervise:
+        if not args.ckpt_dir:
+            ap.error("--supervise needs --ckpt-dir (the supervisor restarts "
+                     "from the last verified checkpoint)")
+        from repro.resilience import (IncidentLog, SupervisorConfig,
+                                      TrainRunConfig, run_training)
+        run = TrainRunConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                             ckpt_every=max(args.ckpt_every, 1),
+                             keep=args.ckpt_keep or None,
+                             hang_timeout=args.hang_timeout or None,
+                             seq_len=args.seq, global_batch=args.batch)
+        log = IncidentLog(args.incident_log or None)
+        t0 = time.time()
+        out = run_training(
+            cfg, fm, opt_cfg, run,
+            sup_cfg=SupervisorConfig(max_restarts=args.max_restarts), log=log)
+        dt = time.time() - t0
+        n = len(out["losses"])
+        last = out["losses"][max(out["losses"])] if out["losses"] else float("nan")
+        print(f"supervised run done: {n} steps, final loss={last:.4f}, "
+              f"{out['restarts']} restarts, {len(out['skipped'])} skipped, "
+              f"{len(out['incidents'])} incidents "
+              f"({dt / max(n, 1):.2f}s/step)")
+        if args.incident_log:
+            print(f"incident log: {args.incident_log}")
+        return
+
     start = 0
     if args.resume and args.ckpt_dir:
-        last = store.latest_step(args.ckpt_dir)
+        last = store.latest_step(args.ckpt_dir, verified=True)
         if last is not None:
             params, opt = restore_train_state(args.ckpt_dir, last, cfg, fm,
                                               opt_cfg)
@@ -88,9 +142,7 @@ def main() -> None:
     step = make_train_step(cfg, fm, opt_cfg)
     data = SyntheticTokens(DataConfig(seq_len=args.seq,
                                       global_batch=args.batch,
-                                      vocab_size=cfg.vocab_size))
-    for _ in range(start):   # replay the deterministic stream to `start`
-        next(data)
+                                      vocab_size=cfg.vocab_size)).seek(start)
     bs = batch_shardings(cfg, fm)
     pending = None
     t0 = time.time()
@@ -107,10 +159,16 @@ def main() -> None:
                 pending.wait()       # one save in flight at a time
             pending = save_train_state(args.ckpt_dir, i + 1, params, opt,
                                        block=False)
+            if args.ckpt_keep:
+                store.gc_steps(args.ckpt_dir, args.ckpt_keep)
     if pending is not None:
         pending.wait()
     if args.ckpt_dir and store.latest_step(args.ckpt_dir) != args.steps:
         save_train_state(args.ckpt_dir, args.steps, params, opt)
+    if args.ckpt_dir and args.ckpt_keep:
+        # once more after the last async save committed (mid-run GC only
+        # sees steps already committed, so the tail can leave an extra)
+        store.gc_steps(args.ckpt_dir, args.ckpt_keep)
 
 
 if __name__ == "__main__":

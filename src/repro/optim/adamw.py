@@ -97,7 +97,8 @@ def global_norm(tree) -> Array:
                         for g in jax.tree.leaves(tree)))
 
 
-def update(cfg: AdamWConfig, grads, state: AdamWState, params,
+def update(cfg: AdamWConfig, grads, state: AdamWState, params, *,
+           step_ok: Any = None,
            ) -> Tuple[Any, AdamWState, Dict[str, Array]]:
     """One AdamW step. Returns (new_params, new_state, metrics).
 
@@ -105,6 +106,15 @@ def update(cfg: AdamWConfig, grads, state: AdamWState, params,
     params are only read for their dtype, and the returned params are the
     stepped master cast back per leaf. Without it (seed behavior) the
     params themselves are treated as fp32 masters.
+
+    ``step_ok`` (a traced bool scalar, or None to disable) is the anomaly
+    guard: the effective flag is ``step_ok & isfinite(gnorm)``, and when it
+    is False the whole update is discarded by a per-leaf ``where`` select —
+    params, moments, master, and the step counter come back unchanged, so a
+    non-finite gradient skips the step instead of poisoning the state. The
+    select stays inside the jitted step (no host sync); on the happy path
+    ``where(True, new, old)`` is bitwise ``new``. The flag is returned in
+    ``metrics["step_ok"]`` for host-side observers (docs/resilience.md).
     """
     gnorm = global_norm(grads)
     scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) if cfg.grad_clip else 1.0
@@ -139,8 +149,19 @@ def update(cfg: AdamWConfig, grads, state: AdamWState, params,
     new_v = treedef.unflatten([o[2] for o in out])
     new_w = (treedef.unflatten([o[3] for o in out])
              if state.master is not None else None)
-    return new_p, AdamWState(step, new_m, new_v, new_w), {
-        "grad_norm": gnorm, "lr": lr}
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    if step_ok is not None:
+        ok = jnp.logical_and(jnp.asarray(step_ok, jnp.bool_),
+                             jnp.isfinite(gnorm))
+        sel = lambda n, o: jnp.where(ok, n, o)
+        new_p = jax.tree.map(sel, new_p, params)
+        new_m = jax.tree.map(sel, new_m, state.mu)
+        new_v = jax.tree.map(sel, new_v, state.nu)
+        if new_w is not None:
+            new_w = jax.tree.map(sel, new_w, state.master)
+        step = jnp.where(ok, step, state.step)
+        metrics["step_ok"] = ok
+    return new_p, AdamWState(step, new_m, new_v, new_w), metrics
 
 
 # ---------------------------------------------------------------------------

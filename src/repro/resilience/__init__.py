@@ -1,0 +1,37 @@
+"""Fault tolerance: chaos harness, anomaly guards, auto-recovery supervisor.
+
+The training-side stack (docs/resilience.md):
+
+* :mod:`repro.resilience.faults` — deterministic seeded fault plans and the
+  file/step-level injection primitives every recovery path is tested with;
+* :mod:`repro.resilience.guard` — host-side EMA z-score loss-spike
+  detection (the in-jit ``step_ok`` guard lives in ``optim/adamw.py`` /
+  ``train/loop.py``);
+* :mod:`repro.resilience.supervisor` — restart budget with exponential
+  backoff, per-step watchdog, structured JSONL incident log;
+* :mod:`repro.resilience.driver` — the restartable training loop gluing
+  the above to the train step, elastic checkpoints, and the deterministic
+  data stream.
+
+Serve-side degradation (deadlines, bounded admission, ``health()``) lives
+in ``repro.serve`` — same doc, different process.
+"""
+from repro.resilience.faults import (  # noqa: F401
+    DataStreamError,
+    Fault,
+    FaultInjector,
+    FaultPlan,
+    SimulatedCrash,
+    FAULT_KINDS,
+    flip_npz_byte,
+    truncate_file,
+)
+from repro.resilience.guard import GuardConfig, LossSpikeError, SpikeDetector  # noqa: F401
+from repro.resilience.supervisor import (  # noqa: F401
+    HungStepError,
+    IncidentLog,
+    Supervisor,
+    SupervisorConfig,
+    Watchdog,
+)
+from repro.resilience.driver import run_training, TrainRunConfig  # noqa: F401

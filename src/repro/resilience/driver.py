@@ -1,0 +1,169 @@
+"""Restartable training driver: guards + checkpoints + supervisor glue.
+
+``run_training`` is the supervised train loop ``launch/train.py
+--supervise`` runs and the chaos tests exercise. One *attempt* of the loop:
+
+1. anchor: restore from ``latest_step(ckpt_dir, verified=True)`` (corrupt
+   or torn steps get quarantined and skipped), or initialize fresh;
+2. replay: ``SyntheticTokens.seek`` jumps the deterministic data stream to
+   the exact batch the restored step count implies — the failed batch is
+   re-fetched, not skipped;
+3. step loop: each step consults the chaos injector (data error, hang,
+   loss-scale fault port), runs the guarded jitted step, and feeds the
+   loss to the EMA z-score spike detector. A ``step_ok=False`` step was
+   already discarded in-jit (state bitwise unchanged, batch consumed); a
+   spike raises :class:`LossSpikeError` so the supervisor rolls the run
+   back to the last verified checkpoint;
+4. cadence: every ``ckpt_every`` steps the state is saved (elastic sharded
+   format with per-shard sha256), post-save file faults are injected, and
+   the retention GC keeps the newest ``keep`` verified steps.
+
+Recovery parity: restore is bitwise, the data stream is deterministic, and
+the compiled step is a pure function — so a crash-and-replay run converges
+to the *bitwise identical* trajectory of the fault-free run, which is what
+``tests/test_resilience.py`` asserts per fault class.
+
+The jitted step is memoized on ``(cfg, id(fm), opt_cfg, guard)`` so the
+per-attempt rebuild after a restart reuses the compiled executable —
+restarts cost backoff + replay, not recompilation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.folding import FoldedMesh
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.optim import adamw
+from repro.resilience.faults import FaultInjector
+from repro.resilience.guard import GuardConfig, LossSpikeError, SpikeDetector
+from repro.resilience.supervisor import (IncidentLog, Supervisor,
+                                         SupervisorConfig, Watchdog)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainRunConfig:
+    steps: int
+    ckpt_dir: str
+    ckpt_every: int = 10
+    keep: Optional[int] = None        # --ckpt-keep: newest N verified steps
+    guard: bool = True                # in-jit step_ok anomaly guard
+    hang_timeout: Optional[float] = None   # watchdog deadline per step (s)
+    seed: int = 0
+    seq_len: int = 64
+    global_batch: int = 8
+    # Reference-run knob for the chaos parity tests: consume the batch at
+    # these steps but do not run the update — the ground truth a guarded
+    # NaN-skip run must match bitwise.
+    skip_steps: Tuple[int, ...] = ()
+
+
+_STEP_CACHE: Dict[Tuple, object] = {}
+
+
+def _train_step(cfg: ModelConfig, fm: FoldedMesh, opt_cfg: adamw.AdamWConfig,
+                guard: bool):
+    from repro.train import loop
+    key = (cfg, id(fm), opt_cfg, guard)
+    if key not in _STEP_CACHE:
+        _STEP_CACHE[key] = loop.make_train_step(
+            cfg, fm, opt_cfg, donate=False, guard=guard, with_loss_scale=True)
+    return _STEP_CACHE[key]
+
+
+def run_training(cfg: ModelConfig, fm: FoldedMesh,
+                 opt_cfg: Optional[adamw.AdamWConfig], run: TrainRunConfig, *,
+                 injector: Optional[FaultInjector] = None,
+                 guard_cfg: Optional[GuardConfig] = None,
+                 sup_cfg: Optional[SupervisorConfig] = None,
+                 log: Optional[IncidentLog] = None) -> Dict:
+    """Run ``run.steps`` training steps under the full resilience stack.
+
+    Returns ``{"losses": {step: loss}, "skipped": [steps], "restarts": n,
+    "final_step": n, "params": ..., "opt": ..., "incidents": [...]}``.
+    Faulted runs converge to the fault-free trajectory: crash-class faults
+    by bitwise rollback + replay, guarded skips by matching a reference
+    run with the same ``skip_steps``.
+    """
+    from repro.checkpoint import store
+    from repro.train import loop
+
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    injector = injector or FaultInjector()
+    log = log or IncidentLog()
+    detector_cfg = guard_cfg or GuardConfig()
+    data_cfg = DataConfig(seq_len=run.seq_len, global_batch=run.global_batch,
+                          vocab_size=cfg.vocab_size, seed=run.seed)
+    bshard = loop.batch_shardings(cfg, fm, with_loss_scale=True)
+    step_fn = _train_step(cfg, fm, opt_cfg, run.guard)
+    losses: Dict[int, float] = {}
+    skipped: list = []
+
+    def save(step, params, opt):
+        loop.save_train_state(run.ckpt_dir, step, params, opt,
+                              meta={"data_step": step}, block=True)
+        injector.maybe_corrupt_save(step, run.ckpt_dir)  # may raise
+        if run.keep:
+            store.gc_steps(run.ckpt_dir, run.keep)
+
+    def attempt(attempt_no: int):
+        detector = SpikeDetector(detector_cfg)
+        start = store.latest_step(run.ckpt_dir, verified=True)
+        if start is None:
+            start = 0
+            params, opt = loop.init_train_state(
+                jax.random.PRNGKey(run.seed), cfg, fm, opt_cfg)
+            save(0, params, opt)
+        else:
+            params, opt = loop.restore_train_state(
+                run.ckpt_dir, start, cfg, fm, opt_cfg)
+        log.record("attempt_start", attempt=attempt_no, resume_step=start)
+
+        stream = SyntheticTokens(data_cfg).seek(start)
+        for step in range(start, run.steps):
+            injector.maybe_data_error(step)           # fetch-time fault
+            np_batch = next(stream)
+            if step in run.skip_steps:                # reference-run skip
+                skipped.append(step)
+                continue
+            ls = injector.loss_scale(step)
+            np_batch["loss_scale"] = np.float32(ls)
+            batch = {k: jax.device_put(v, bshard[k])
+                     for k, v in np_batch.items() if k in bshard}
+            if run.hang_timeout:
+                with Watchdog(run.hang_timeout):
+                    injector.maybe_hang(step)
+                    params, opt, m = step_fn(params, opt, batch)
+                    step_loss = float(m["loss"])      # sync inside the watch
+            else:
+                injector.maybe_hang(step)
+                params, opt, m = step_fn(params, opt, batch)
+                step_loss = float(m["loss"])
+            if run.guard and not bool(m["step_ok"]):
+                # The update was discarded in-jit; the batch is consumed.
+                skipped.append(step)
+                log.record("step_skipped", step=step, loss=step_loss,
+                           grad_norm=float(m["grad_norm"]))
+                continue
+            if detector.observe(step_loss):
+                log.record("loss_spike", step=step, loss=step_loss,
+                           detector=detector.state())
+                raise LossSpikeError(
+                    f"loss {step_loss:.4g} at step {step} is a "
+                    f">{detector_cfg.z_threshold}σ spike — rolling back")
+            losses[step] = step_loss
+            if run.ckpt_every and (step + 1) % run.ckpt_every == 0:
+                save(step + 1, params, opt)
+        if run.ckpt_every and run.steps % run.ckpt_every != 0:
+            save(run.steps, params, opt)
+        return params, opt
+
+    sup = Supervisor(sup_cfg or SupervisorConfig(backoff_base=0.0), log=log)
+    params, opt = sup.run(attempt)
+    return {"losses": losses, "skipped": sorted(set(skipped)),
+            "restarts": sup.restarts, "final_step": run.steps,
+            "params": params, "opt": opt, "incidents": log.records}

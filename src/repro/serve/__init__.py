@@ -2,7 +2,10 @@
 
 Public API: ``Engine`` (submit/step/drain) configured by ``EngineConfig``,
 fed ``Request``s, returning ``GenerationResult``s with per-step
-``StepStats``. ``ServeSession``/``build_session`` are deprecated shims.
+``StepStats``. Degradation under load (docs/resilience.md): per-request
+``deadline_steps`` (evicted with ``status="timeout"``), a bounded waiting
+queue rejecting with ``QueueFull``, and ``Engine.health()`` counters.
+``ServeSession``/``build_session`` are deprecated shims.
 """
 from repro.serve.cache import (BlockAllocator, init_paged_state,
                                kv_bytes_dense, kv_bytes_paged, pages_for)
@@ -10,4 +13,4 @@ from repro.serve.engine import (Engine, EngineConfig, GenerationResult,
                                 ServeSession, build_session, cache_len_for,
                                 make_prefill_step, make_serve_step,
                                 reject_pipelined_mapping, state_shardings)
-from repro.serve.scheduler import Request, Scheduler, StepStats
+from repro.serve.scheduler import QueueFull, Request, Scheduler, StepStats

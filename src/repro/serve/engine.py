@@ -44,7 +44,8 @@ from repro.models.transformer import (BLOCKS, _CACHE_LEAVES, _freeze_inactive,
                                       init_decode_state, init_lm, model_cycle)
 from repro.serve.cache import (init_paged_state, kv_bytes_dense,
                                kv_bytes_paged)
-from repro.serve.scheduler import Request, Scheduler, StepStats, _Run
+from repro.serve.scheduler import (QueueFull, Request, Scheduler, StepStats,
+                                   _Run)
 
 Array = jax.Array
 
@@ -166,6 +167,9 @@ class EngineConfig:
     n_pages: Optional[int] = None  # pool size; default fits max_batch fully
     preempt: bool = True          # recompute-preempt on page-pool pressure
     compute_dtype: str = "bfloat16"
+    # Bounded admission queue: submit() raises scheduler.QueueFull past
+    # this many waiting requests (0 = unbounded, the pre-PR-10 behavior).
+    max_waiting: int = 0
 
 
 @dataclasses.dataclass
@@ -180,6 +184,9 @@ class GenerationResult:
     # fp32 logits after the last prompt token (first sample's input) — the
     # ring-CP/paged parity hook: invariant across cache layout and mapping.
     last_prefill_logits: Optional[np.ndarray] = None
+    # "ok" | "timeout". A timed-out request still reports the tokens it
+    # generated before eviction (finished=False, pages reclaimed).
+    status: str = "ok"
 
 
 def _paged_forward(params: Dict, state: Dict, tokens: Array, positions: Array,
@@ -410,7 +417,8 @@ class Engine:
             max_batch=ecfg.max_batch, cache_len=self.cache_len,
             prefill_chunk=ecfg.prefill_chunk, page_size=page_size,
             n_pages=n_pages if self.paged else 0,
-            window=cfg.sliding_window or 0, preempt=ecfg.preempt)
+            window=cfg.sliding_window or 0, preempt=ecfg.preempt,
+            max_waiting=ecfg.max_waiting)
 
         dt = jnp.bfloat16 if ecfg.compute_dtype == "bfloat16" else jnp.float32
         if self.paged:
@@ -426,20 +434,29 @@ class Engine:
         self._results: Dict[int, GenerationResult] = {}
         self._next_rid = 0
         self.stats: List[StepStats] = []
+        self._counters = {"submitted": 0, "rejected": 0, "finished": 0,
+                          "timed_out": 0, "preemptions": 0}
 
     @property
     def scheduler(self) -> Scheduler:
         return self._sched
 
     def submit(self, request: Request) -> int:
-        """Queue a request; returns its id (drain() keys results by it)."""
-        rid = self._next_rid
-        self._next_rid += 1
-        run = _Run(rid=rid, req=request,
+        """Queue a request; returns its id (drain() keys results by it).
+
+        Raises :class:`repro.serve.scheduler.QueueFull` when the bounded
+        waiting queue (``EngineConfig.max_waiting``) is at capacity."""
+        run = _Run(rid=self._next_rid, req=request,
                    tokens=[int(t) for t in request.prompt],
                    prompt_len=int(request.prompt.size))
-        self._sched.submit(run)
-        return rid
+        try:
+            self._sched.submit(run)
+        except QueueFull:
+            self._counters["rejected"] += 1
+            raise
+        self._next_rid += 1
+        self._counters["submitted"] += 1
+        return run.rid
 
     def _sample(self, run: _Run, logits_row: np.ndarray) -> int:
         if run.req.temperature <= 0:
@@ -455,6 +472,19 @@ class Engine:
         """One scheduler tick; returns the step's observability record."""
         s = self._sched
         s.step_count += 1
+        # Deadlines first: an expired run's slot and pages free up before
+        # admission, so the eviction immediately buys capacity back.
+        timed_out: List[int] = []
+        for r in s.expire():
+            timed_out.append(r.rid)
+            self._counters["timed_out"] += 1
+            self._results[r.rid] = GenerationResult(
+                request_id=r.rid,
+                tokens=np.asarray(r.tokens[r.prompt_len:], np.int32),
+                prompt_len=r.prompt_len, finished=False,
+                preemptions=r.preemptions,
+                last_prefill_logits=r.last_prefill_logits,
+                status="timeout")
         admitted = [r.rid for r in s.admit()]
         preempted: List[int] = []
         finished: List[int] = []
@@ -537,6 +567,7 @@ class Engine:
                     preemptions=r.preemptions,
                     last_prefill_logits=r.last_prefill_logits)
                 s.finish(r)
+                self._counters["finished"] += 1
 
         dtype_bytes = 2 if self.ecfg.compute_dtype == "bfloat16" else 4
         if self.paged:
@@ -547,6 +578,7 @@ class Engine:
             reserved = kv_bytes_dense(self.cfg, self.ecfg.max_batch,
                                       self.cache_len, dtype_bytes=dtype_bytes)
             pages_in_use = pages_total = 0
+        self._counters["preemptions"] += len(preempted)
         st = StepStats(
             step=s.step_count, admitted=admitted, finished=finished,
             preempted=preempted, n_running=s.n_running, n_waiting=s.n_waiting,
@@ -556,9 +588,27 @@ class Engine:
             kv_bytes_dense=kv_bytes_dense(self.cfg, self.ecfg.max_batch,
                                           self.cache_len,
                                           dtype_bytes=dtype_bytes),
-            expert_load=np.asarray(counts) if counts is not None else None)
+            expert_load=np.asarray(counts) if counts is not None else None,
+            timed_out=timed_out)
         self.stats.append(st)
         return st
+
+    def health(self) -> Dict[str, int]:
+        """Cumulative liveness/degradation stats for external monitoring.
+
+        Counters (monotonic): ``submitted``, ``rejected`` (QueueFull),
+        ``finished``, ``timed_out``, ``preemptions``. Gauges: ``steps``,
+        ``running``, ``waiting``, ``pages_in_use``, ``pages_free``,
+        ``results_pending`` (finished/timed-out results not yet drained).
+        """
+        s = self._sched
+        out = dict(self._counters)
+        out.update(steps=s.step_count, running=s.n_running,
+                   waiting=s.n_waiting,
+                   pages_in_use=s.alloc.in_use if s.alloc else 0,
+                   pages_free=s.alloc.n_free if s.alloc else 0,
+                   results_pending=len(self._results))
+        return out
 
     def drain(self, max_steps: int = 100_000) -> Dict[int, GenerationResult]:
         """Step until every submitted request finishes; results by id."""

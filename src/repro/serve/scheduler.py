@@ -38,6 +38,15 @@ import numpy as np
 from repro.serve.cache import BlockAllocator, pages_for
 
 
+class QueueFull(RuntimeError):
+    """Submission rejected: the bounded waiting queue is at capacity.
+
+    Explicit backpressure beats unbounded queueing under overload — the
+    client can retry elsewhere instead of waiting forever. Preemption
+    re-entry is exempt from the bound (an admitted request never loses its
+    place because the queue filled behind it)."""
+
+
 @dataclasses.dataclass(frozen=True)
 class Request:
     """One generation request (immutable; lifecycle state lives in _Run)."""
@@ -46,6 +55,11 @@ class Request:
     max_new_tokens: int
     temperature: float = 0.0      # 0 → greedy
     seed: int = 0                 # per-request sampling key (temperature > 0)
+    # Deadline in *engine steps* since submission (0 = none). Steps, not
+    # wall clock, so timeout behavior is deterministic and testable; a
+    # request still unfinished when the budget elapses is evicted with
+    # GenerationResult.status == "timeout" and its pages reclaimed.
+    deadline_steps: int = 0
 
     def __post_init__(self):
         object.__setattr__(self, "prompt",
@@ -54,6 +68,8 @@ class Request:
             raise ValueError("empty prompt")
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.deadline_steps < 0:
+            raise ValueError("deadline_steps must be >= 0 (0 = no deadline)")
 
 
 @dataclasses.dataclass
@@ -75,6 +91,8 @@ class StepStats:
     # (E,) routed-token assignments this step (prefill + decode), or None
     # for non-MoE archs / dense mode. The MoETuner placement signal.
     expert_load: Optional[np.ndarray] = None
+    # Requests evicted this step because their deadline_steps elapsed.
+    timed_out: List[int] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -88,6 +106,8 @@ class _Run:
     pos: int = 0                  # positions already written to the cache
     slot: int = -1                # engine batch slot (-1 = not admitted)
     admit_seq: int = -1           # admission order (preemption picks max)
+    submit_step: int = -1         # scheduler.step_count at submission
+                                  # (deadline_steps counts from here)
     preemptions: int = 0
     pages: Dict[int, int] = dataclasses.field(default_factory=dict)
     last_prefill_logits: Optional[np.ndarray] = None
@@ -120,7 +140,7 @@ class Scheduler:
 
     def __init__(self, *, max_batch: int, cache_len: int, prefill_chunk: int,
                  page_size: int = 0, n_pages: int = 0, window: int = 0,
-                 preempt: bool = True):
+                 preempt: bool = True, max_waiting: int = 0):
         if prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
         if page_size and cache_len % page_size:
@@ -133,6 +153,7 @@ class Scheduler:
         self.page_size = page_size
         self.window = window
         self.preempt_enabled = preempt
+        self.max_waiting = max_waiting      # 0 = unbounded
         self.alloc = BlockAllocator(n_pages) if page_size else None
         self.n_slot_pages = cache_len // page_size if page_size else 0
         if self.alloc and self.alloc.n_free < self.n_slot_pages:
@@ -152,6 +173,12 @@ class Scheduler:
             raise ValueError(
                 f"request {run.rid}: prompt {run.prompt_len} + max_new "
                 f"{run.req.max_new_tokens} exceeds cache_len {self.cache_len}")
+        if self.max_waiting and len(self.waiting) >= self.max_waiting:
+            raise QueueFull(
+                f"request {run.rid} rejected: waiting queue at capacity "
+                f"({self.max_waiting}) — retry later or raise "
+                "EngineConfig.max_waiting")
+        run.submit_step = self.step_count
         self.waiting.append(run)
 
     def _lifetime_pages(self, run: _Run) -> int:
@@ -221,6 +248,35 @@ class Scheduler:
         run.pages = {}
         self.slots[run.slot] = None
         run.slot = -1
+
+    def expire(self) -> List[_Run]:
+        """Evict every unfinished run whose ``deadline_steps`` has elapsed.
+
+        Deadlines count engine steps since submission (deterministic — no
+        wall clock). Running victims release their slot and pages exactly
+        like :meth:`finish`; waiting victims just leave the queue. Evicting
+        never touches a survivor's slot, pages, or cache rows, which is
+        what keeps surviving outputs bitwise identical to a run where the
+        timed-out requests were never submitted.
+        """
+        def overdue(run: _Run) -> bool:
+            d = run.req.deadline_steps
+            return bool(d) and run.submit_step >= 0 \
+                and self.step_count - run.submit_step > d
+
+        expired: List[_Run] = []
+        for run in list(self.slots):
+            if run is not None and overdue(run):
+                self.finish(run)
+                expired.append(run)
+        keep: Deque[_Run] = deque()
+        for run in self.waiting:
+            if overdue(run):
+                expired.append(run)
+            else:
+                keep.append(run)
+        self.waiting = keep
+        return expired
 
     # ---- per-step plans ------------------------------------------------
 

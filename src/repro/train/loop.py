@@ -30,8 +30,14 @@ from repro.optim import adamw
 Array = jax.Array
 
 
-def batch_shardings(cfg: ModelConfig, fm: FoldedMesh) -> Dict[str, NamedSharding]:
-    """Input shardings: batch over DP atoms, seq over CP×TP atoms."""
+def batch_shardings(cfg: ModelConfig, fm: FoldedMesh, *,
+                    with_loss_scale: bool = False
+                    ) -> Dict[str, NamedSharding]:
+    """Input shardings: batch over DP atoms, seq over CP×TP atoms.
+
+    ``with_loss_scale`` adds the replicated ``loss_scale`` scalar the
+    chaos harness uses to inject gradient faults (train steps built with
+    ``make_train_step(..., with_loss_scale=True)`` require it)."""
     tok = fm.sharding("attn", "dp", ("cp", "tp"))
     out = {"tokens": tok, "labels": tok}
     if cfg.rope_kind == "mrope":
@@ -40,6 +46,8 @@ def batch_shardings(cfg: ModelConfig, fm: FoldedMesh) -> Dict[str, NamedSharding
         out["vision_embeds"] = fm.sharding("attn", "dp", None, None)
     if cfg.is_encoder_decoder:
         out["audio_embeds"] = fm.sharding("attn", "dp", None, None)
+    if with_loss_scale:
+        out["loss_scale"] = NamedSharding(fm.mesh, jax.sharding.PartitionSpec())
     return out
 
 
@@ -94,12 +102,43 @@ def loss_fn(params, batch, cfg: ModelConfig, fm: FoldedMesh, *,
 
 def make_train_step(cfg: ModelConfig, fm: FoldedMesh,
                     opt_cfg: Optional[adamw.AdamWConfig] = None,
-                    *, donate: bool = True):
-    """Build the jit'd train step (not yet compiled — lower() works too)."""
+                    *, donate: bool = True, guard: bool = False,
+                    with_loss_scale: bool = False):
+    """Build the jit'd train step (not yet compiled — lower() works too).
+
+    ``guard=True`` turns on the in-jit anomaly guard: ``step_ok =
+    isfinite(loss) & isfinite(grad_norm)`` is computed inside the step and
+    a False flag discards the whole optimizer update by per-leaf ``where``
+    select — no host sync on the happy path, and the skipped step leaves
+    (params, opt_state) bitwise equal to not having run it. The flag comes
+    back in ``metrics["step_ok"]``.
+
+    ``with_loss_scale=True`` adds a required replicated fp32 scalar
+    ``batch["loss_scale"]`` multiplied into the gradients and the loss
+    metric after the backward — the chaos harness's fault port (NaN → a
+    guarded skip, a large finite value → a loss spike for the rollback
+    detector). A scale of 1.0 is a bitwise no-op, so production batches
+    just carry the constant.
+    """
     opt_cfg = opt_cfg or adamw.AdamWConfig()
     pcfg = fm.pcfg
     nmicro = pcfg.microbatch
     remat = pcfg.remat != "none"
+
+    def apply_loss_scale(ls, grads, metrics):
+        # ls == 1.0 is bitwise identity (IEEE-754 x*1.0 == x), so the
+        # production path pays nothing for carrying the fault port.
+        grads = jax.tree.map(lambda g: g * ls.astype(g.dtype), grads)
+        metrics = dict(metrics)
+        metrics["loss"] = metrics["loss"] * ls
+        return grads, metrics
+
+    def guarded_update(grads, opt_state, params, metrics):
+        step_ok = jnp.isfinite(metrics["loss"]) if guard else None
+        new_params, new_opt, opt_m = adamw.update(
+            opt_cfg, grads, opt_state, params, step_ok=step_ok)
+        metrics.update(opt_m)
+        return new_params, new_opt, metrics
 
     from repro import flags
     hoist = not flags.NO_HOIST_CAST
@@ -119,19 +158,22 @@ def make_train_step(cfg: ModelConfig, fm: FoldedMesh,
             # the schedule (flags.NO_HOIST_CAST does not apply here: the
             # chunk vjps differentiate the compute copies directly, and
             # the cast's unit derivative makes the grads identical).
+            batch = dict(batch)
+            ls = batch.pop("loss_scale", None)
             cparams = cast_params(params, cfg)
             g_sum, m_sum = pgrads(cparams, batch)
             grads = jax.tree.map(lambda g: g / n_micro, g_sum)
             metrics = jax.tree.map(lambda m: m / n_micro, m_sum)
-            new_params, new_opt, opt_m = adamw.update(
-                opt_cfg, grads, opt_state, params)
-            metrics.update(opt_m)
-            return new_params, new_opt, metrics
+            if ls is not None:
+                grads, metrics = apply_loss_scale(ls, grads, metrics)
+            return guarded_update(grads, opt_state, params, metrics)
 
         pshard, oshard = train_state_shardings(cfg, fm, opt_cfg)
         return jax.jit(
             pp_step,
-            in_shardings=(pshard, oshard, batch_shardings(cfg, fm)),
+            in_shardings=(pshard, oshard,
+                          batch_shardings(cfg, fm,
+                                          with_loss_scale=with_loss_scale)),
             out_shardings=(pshard, oshard, None),
             donate_argnums=(0, 1) if donate else (),
         )
@@ -147,6 +189,8 @@ def make_train_step(cfg: ModelConfig, fm: FoldedMesh,
             has_aux=True)(cparams)
 
     def step(params, opt_state, batch):
+        batch = dict(batch)
+        ls = batch.pop("loss_scale", None)
         cparams = cast_params(params, cfg) if hoist else params
         if nmicro and nmicro > 1:
             B = batch["tokens"].shape[0]
@@ -176,12 +220,12 @@ def make_train_step(cfg: ModelConfig, fm: FoldedMesh,
             (_, metrics), grads = grads_of(cparams, batch)
             grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
 
-        new_params, new_opt, opt_m = adamw.update(opt_cfg, grads, opt_state, params)
-        metrics.update(opt_m)
-        return new_params, new_opt, metrics
+        if ls is not None:
+            grads, metrics = apply_loss_scale(ls, grads, metrics)
+        return guarded_update(grads, opt_state, params, metrics)
 
     pshard, oshard = train_state_shardings(cfg, fm, opt_cfg)
-    bshard = batch_shardings(cfg, fm)
+    bshard = batch_shardings(cfg, fm, with_loss_scale=with_loss_scale)
     mshard = None  # metrics replicated
 
     return jax.jit(

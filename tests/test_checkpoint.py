@@ -380,3 +380,84 @@ def test_zero1_state_bytes(fm222):
     assert acct["per_device"] < acct["global"] // 2
     no_master = adamw.zero1_state_bytes(shapes, fm222, master_weights=False)
     assert no_master["global"] == n_params * 4 * 2
+
+
+# ---------------------------------------------------------------------------
+# Integrity: verify / quarantine / fallback / retention GC
+# (chaos primitives from repro.resilience.faults flip real payload bytes —
+# see tests/test_resilience.py for the e2e recovery gates)
+# ---------------------------------------------------------------------------
+
+from repro.resilience.faults import flip_npz_byte, truncate_file  # noqa: E402
+
+
+def test_verify_clean_checkpoint_is_empty_list(tmp_path):
+    fm = _fm((2, 2, 2), (2, 2, 2))
+    store.save_sharded(str(tmp_path), 1, _sharded_tree(fm))
+    assert store.verify_checkpoint(str(tmp_path), 1) == []
+
+
+def test_bit_flip_detected_quarantined_and_fallen_past(tmp_path):
+    fm = _fm((2, 2, 2), (2, 2, 2))
+    tree = _sharded_tree(fm)
+    store.save_sharded(str(tmp_path), 1, tree)
+    store.save_sharded(str(tmp_path), 2, tree)
+    flip_npz_byte(os.path.join(str(tmp_path), "ckpt_00000002",
+                               "shards_00000.npz"))
+
+    assert store.verify_checkpoint(str(tmp_path), 2)   # sha256 mismatch
+    assert store.latest_step(str(tmp_path)) == 2       # unverified view
+    # verified walk quarantines step 2 and anchors on step 1
+    assert store.latest_step(str(tmp_path), verified=True) == 1
+    assert store.is_quarantined(str(tmp_path), 2)
+    assert store.latest_step(str(tmp_path)) == 1       # now skipped everywhere
+
+    shardings = jax.tree.map(lambda a: a.sharding, tree)
+    with pytest.raises(ValueError, match="suggested fallback: step 1"):
+        store.restore_sharded(str(tmp_path), 2, tree, shardings, verify=True)
+    restored = store.restore_sharded(str(tmp_path), 1, tree, shardings,
+                                     verify=True)
+    _assert_trees_equal(restored, tree)
+
+
+def test_truncated_shard_error_names_file_step_and_fallback(tmp_path):
+    fm = _fm((2, 2, 2), (2, 2, 2))
+    tree = _sharded_tree(fm)
+    store.save_sharded(str(tmp_path), 1, tree)
+    store.save_sharded(str(tmp_path), 3, tree)
+    truncate_file(os.path.join(str(tmp_path), "ckpt_00000003",
+                               "shards_00000.npz"), frac=0.3)
+    shardings = jax.tree.map(lambda a: a.sharding, tree)
+    with pytest.raises(ValueError) as ei:   # not an opaque BadZipFile
+        store.restore_sharded(str(tmp_path), 3, tree, shardings)
+    msg = str(ei.value)
+    assert "corrupt or truncated" in msg and "step 3" in msg
+    assert "suggested fallback: step 1" in msg
+
+
+def test_legacy_corrupt_npz_raises_valueerror_naming_step(tmp_path):
+    store.save(str(tmp_path), 1, {"a": jnp.ones(4)})
+    store.save(str(tmp_path), 2, {"a": jnp.ones(4)})
+    truncate_file(str(tmp_path / "ckpt_00000002.npz"), frac=0.3)
+    with pytest.raises(ValueError) as ei:
+        store.restore(str(tmp_path), 2, {"a": jnp.zeros(4)})
+    msg = str(ei.value)
+    assert "corrupt or truncated" in msg and "step 2" in msg
+    assert "suggested fallback: step 1" in msg
+
+
+def test_gc_keeps_newest_and_never_deletes_quarantined(tmp_path):
+    fm = _fm((2, 2, 2), (2, 2, 2))
+    tree = _sharded_tree(fm)
+    for s in (1, 2, 3, 4):
+        store.save_sharded(str(tmp_path), s, tree)
+    store.quarantine(str(tmp_path), 2, "synthetic evidence")
+
+    assert store.gc_steps(str(tmp_path), keep=2) == [1]
+    assert store.available_steps(str(tmp_path)) == [3, 4]
+    assert store.available_steps(str(tmp_path),
+                                 include_quarantined=True) == [2, 3, 4]
+    assert store.is_quarantined(str(tmp_path), 2)      # marker intact
+    # keep is floored at 1: the last good step is never deleted
+    assert store.gc_steps(str(tmp_path), keep=0) == [3]
+    assert store.available_steps(str(tmp_path)) == [4]

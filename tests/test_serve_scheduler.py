@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.serve.cache import BlockAllocator, pages_for
-from repro.serve.scheduler import Request, Scheduler, _Run
+from repro.serve.scheduler import QueueFull, Request, Scheduler, _Run
 
 
 def mk_run(rid, n=4, max_new=4):
@@ -189,3 +189,47 @@ def test_scheduler_init_validation():
         sched(n_pages=2)
     with pytest.raises(ValueError, match="prefill_chunk"):
         sched(prefill_chunk=0)
+
+
+# ---- degradation: deadlines + bounded queue ------------------------------
+
+def mk_deadline_run(rid, deadline, n=4):
+    return _Run(rid=rid,
+                req=Request(prompt=np.arange(1, n + 1), max_new_tokens=4,
+                            deadline_steps=deadline),
+                tokens=list(range(1, n + 1)), prompt_len=n)
+
+
+def test_expire_evicts_overdue_running_and_waiting():
+    s = sched(max_batch=1)
+    a, b = mk_deadline_run(1, 2), mk_deadline_run(2, 2)
+    c = mk_deadline_run(3, 0)                # 0 = no deadline
+    for r in (a, b, c):
+        s.submit(r)
+    s.admit()                                # a takes the slot; b, c wait
+    s.step_count = 2
+    assert s.expire() == []                  # exactly at the deadline: kept
+    s.step_count = 3
+    expired = s.expire()
+    assert {r.rid for r in expired} == {1, 2}
+    assert s.slots == [None]                 # a's slot released like finish()
+    assert a.slot == -1 and a.pages == {}
+    assert [r.rid for r in s.waiting] == [3]
+
+
+def test_submit_bounded_queue_raises_queuefull():
+    s = sched(max_waiting=1)
+    s.submit(mk_run(1))
+    with pytest.raises(QueueFull, match="waiting queue at capacity"):
+        s.submit(mk_run(2))
+    assert s.n_waiting == 1                  # the rejected run left no trace
+
+
+def test_preempt_reentry_exempt_from_queue_bound():
+    s = sched(max_batch=2, max_waiting=1)
+    a, b = mk_run(1), mk_run(2)
+    s.submit(a)
+    s.admit()
+    s.submit(b)                              # fills the bounded queue
+    s.preempt(a)                             # re-entry bypasses the bound
+    assert [r.rid for r in s.waiting] == [1, 2]
